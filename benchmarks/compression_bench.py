@@ -1,0 +1,43 @@
+"""Gradient compression (survey §4.3): wire bytes + quality per method."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, header, time_fn
+from repro.core.compression import (
+    PowerSGD, QSGD, SignEF, TopK, init_state, sync, wire_bytes_dense,
+)
+
+
+def main() -> None:
+    header("Gradient compression (survey s4.3)")
+    rng = np.random.RandomState(0)
+    grads = {
+        "w1": jnp.asarray(rng.randn(1024, 1024), jnp.float32),
+        "w2": jnp.asarray(rng.randn(4096, 256), jnp.float32),
+        "b": jnp.asarray(rng.randn(64), jnp.float32),
+    }
+    dense = wire_bytes_dense(grads)
+    emit("compress/dense_allreduce", 0.0, f"wire={dense:.3g}B ratio=1.0")
+    for m in [TopK(0.01), TopK(0.1), QSGD(8), QSGD(4), SignEF(), PowerSGD(4),
+              PowerSGD(16)]:
+        st = init_state(m, grads)
+        ghat, _, nbytes = sync(m, grads, st, axis_name=None)
+        errs = []
+        for k in ("w1", "w2"):
+            a, b = np.asarray(ghat[k]), np.asarray(grads[k])
+            errs.append(np.linalg.norm(a - b) / np.linalg.norm(b))
+        us = time_fn(lambda g: sync(m, g, st, axis_name=None)[0], grads, iters=3)
+        label = f"{m.name}" + (
+            f"@{getattr(m, 'ratio', getattr(m, 'bits', getattr(m, 'rank', '')))}"
+        )
+        emit(
+            f"compress/{label}", us,
+            f"wire={float(nbytes):.3g}B ratio={float(nbytes)/dense:.4f} "
+            f"relerr={np.mean(errs):.3f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

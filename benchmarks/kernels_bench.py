@@ -1,0 +1,42 @@
+"""Pallas kernels vs pure-jnp references (interpret-mode correctness timing
+is NOT a TPU perf claim — see EXPERIMENTS.md; derived fields carry the
+roofline-relevant arithmetic intensities instead)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, header, time_fn
+from repro.kernels.blockwise_quant import quantize
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def main() -> None:
+    header("Kernels (refs timed on CPU; kernels validated in interpret mode)")
+    rng = np.random.RandomState(0)
+
+    B, S, Kv, G, hd = 1, 1024, 4, 2, 64
+    q = jnp.asarray(rng.randn(B, S, Kv, G, hd), jnp.float32) * hd**-0.5
+    k = jnp.asarray(rng.randn(B, S, Kv, hd), jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, Kv, hd), jnp.float32)
+    fa = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True))
+    us = time_fn(fa, q, k, v, iters=3)
+    flops = 4 * B * S * S * Kv * G * hd / 2  # causal half
+    emit("kernel/attention_ref_1k", us, f"arith_intensity~{flops/(q.size*4*3):.0f}")
+
+    x = jnp.asarray(rng.randn(4096, 2048), jnp.float32)
+    s = jnp.ones(2048)
+    rn = jax.jit(lambda x, s: rmsnorm_ref(x, s))
+    emit("kernel/rmsnorm_ref_4kx2k", time_fn(rn, x, s, iters=3),
+         "memory-bound: AI~0.5 flop/byte")
+
+    g = jnp.asarray(rng.randn(256 * 256), jnp.float32)
+    qz = jax.jit(lambda g: quantize(g, backend="ref")[0])
+    emit("kernel/blockwise_quant_ref_64k", time_fn(qz, g, iters=3),
+         "VPU-bound: 256-way codebook compare")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Low-precision optimizers (survey §4.2): state bytes + update fidelity."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, header, time_fn
+from repro.optim import adam8bit, adamw, apply_updates
+from repro.optim.lowbit import state_bytes
+
+
+def main() -> None:
+    header("Low-precision optimizers (survey s4.2)")
+    rng = np.random.RandomState(0)
+    params = {
+        "w1": jnp.asarray(rng.randn(2048, 2048) * 0.02, jnp.float32),
+        "w2": jnp.asarray(rng.randn(8192, 512) * 0.02, jnp.float32),
+    }
+    grads = jax.tree.map(lambda p: jnp.asarray(rng.randn(*p.shape), jnp.float32) * 0.01, params)
+
+    o32, o8 = adamw(1e-3), adam8bit(1e-3)
+    s32, s8 = o32.init(params), o8.init(params)
+    b32 = state_bytes({"m": s32["m"], "v": s32["v"]})
+    b8 = state_bytes(s8["slots"])
+    emit("lowbit/state_bytes_f32", 0.0, f"{b32:.4g}B")
+    emit("lowbit/state_bytes_8bit", 0.0, f"{b8:.4g}B ratio={b8/b32:.3f}")
+
+    @jax.jit
+    def step32(p, s, g):
+        u, s = o32.update(g, s, p)
+        return apply_updates(p, u), s
+
+    @jax.jit
+    def step8(p, s, g):
+        u, s = o8.update(g, s, p)
+        return apply_updates(p, u), s
+
+    p32, p8 = params, params
+    for i in range(10):
+        p32, s32 = step32(p32, s32, grads)
+        p8, s8 = step8(p8, s8, grads)
+    drift = np.mean(
+        [
+            np.linalg.norm(np.asarray(a - b)) / np.linalg.norm(np.asarray(b))
+            for a, b in zip(jax.tree.leaves(p8), jax.tree.leaves(p32))
+        ]
+    )
+    us32 = time_fn(step32, params, o32.init(params), grads, iters=3)
+    us8 = time_fn(step8, params, o8.init(params), grads, iters=3)
+    emit("lowbit/adamw_f32_step", us32, "")
+    emit("lowbit/adam8bit_step", us8, f"param_drift_vs_f32@10steps={drift:.4f}")
+
+
+if __name__ == "__main__":
+    main()

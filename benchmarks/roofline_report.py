@@ -1,0 +1,40 @@
+"""Roofline report: aggregates experiments/dryrun/*.json into the §Roofline
+table (one row per arch x shape x mesh) — run after the dry-run matrix."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, header
+
+
+def main() -> None:
+    header("Roofline (from dry-run artifacts; see EXPERIMENTS.md)")
+    files = sorted(glob.glob("experiments/dryrun/*.json"))
+    if not files:
+        emit("roofline/no_dryrun_artifacts", 0.0,
+             "run: python -m repro.launch.dryrun --all")
+        return
+    from repro.roofline.analysis import derive_terms
+
+    for f in files:
+        with open(f) as fh:
+            r = json.load(fh)
+        tag = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("tag"):
+            tag += f"/{r['tag']}"
+        d = derive_terms(r)
+        emit(
+            f"roofline/{tag}", d["bound_step_time"] * 1e6,
+            f"t_c={d['t_compute']*1e3:.2f}ms "
+            f"t_m=[{d['t_memory_lb']*1e3:.2f},{d['t_memory_ub']*1e3:.2f}]ms "
+            f"t_x={d['t_collective']*1e3:.2f}ms dom={d['dominant_lb']} "
+            f"roofline_frac={d['roofline_fraction']:.2f} "
+            f"useful={r['useful_ratio']:.2f} "
+            f"temp={r['memory_analysis'].get('temp_size_in_bytes', 0)/2**30:.1f}GiB",
+        )
+
+
+if __name__ == "__main__":
+    main()

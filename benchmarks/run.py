@@ -1,0 +1,45 @@
+"""Benchmark driver: one module per survey table + framework benches.
+
+``python -m benchmarks.run [--only table1,table4,...]``
+Each module prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import traceback
+
+MODULES = [
+    "benchmarks.table1_methods",
+    "benchmarks.table2_remat",
+    "benchmarks.table3_offload",
+    "benchmarks.table4_pipeline",
+    "benchmarks.zero_stages",
+    "benchmarks.compression_bench",
+    "benchmarks.lowbit_bench",
+    "benchmarks.kernels_bench",
+    "benchmarks.roofline_report",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    wanted = [w.strip() for w in args.only.split(",") if w.strip()]
+    failures = []
+    for mod_name in MODULES:
+        short = mod_name.split(".")[-1]
+        if wanted and not any(w in short for w in wanted):
+            continue
+        try:
+            importlib.import_module(mod_name).main()
+        except Exception as e:  # noqa: BLE001
+            failures.append((short, repr(e)))
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

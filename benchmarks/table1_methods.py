@@ -1,0 +1,83 @@
+"""Survey Table 1 — cross-method comparison, measured.
+
+For each method row of Table 1 we train one step of the demo transformer on
+CPU and record, from the compiled HLO of that exact step:
+  * peak temp memory (memory_analysis)    -> the "batch size increase?" col
+  * HLO FLOPs (cost_analysis)             -> the "# FLOP per iteration" col
+  * data-parallel wire bytes (loopback-measured payload for compression;
+    analytic dense payload otherwise)     -> the communication cols
+
+The derived field prints the Table-1 arrow this row reproduces.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, header, time_fn
+from repro.configs import SURVEY_DEMO, reduced
+from repro.core.compression import QSGD, SignEF, TopK, wire_bytes_dense
+from repro.data import DataPipeline
+from repro.optim import get as get_opt
+from repro.train import TrainConfig, make_state, make_train_step
+
+CFG = reduced(
+    SURVEY_DEMO, n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+    d_ff=1024, vocab_size=2048,
+)
+BATCH, SEQ = 8, 256
+
+
+def step_stats(tc: TrainConfig):
+    opt = get_opt(tc.optimizer, 1e-3)
+    state = make_state(CFG, opt, tc)
+    data = DataPipeline(CFG, BATCH, SEQ, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+    data.close()
+    step = make_train_step(CFG, opt, tc)
+    lowered = jax.jit(step).lower(state, batch) if not hasattr(step, "lower") else step.lower(state, batch)
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    us = time_fn(step, state, batch)
+    _, metrics = step(state, batch)
+    return {
+        "temp_gb": float(mem.temp_size_in_bytes) / 2**30,
+        "flops": float(cost.get("flops", 0)),
+        "wire": float(metrics["wire_bytes"]),
+        "us": us,
+    }
+
+
+def main() -> None:
+    header("Table 1: methods to train large neural networks (measured)")
+    base = step_stats(TrainConfig(remat="none"))
+    dense_wire = None
+
+    def row(name, tc, note):
+        s = step_stats(tc)
+        emit(
+            f"table1/{name}", s["us"],
+            f"temp={s['temp_gb']:.3f}GiB({s['temp_gb']/max(base['temp_gb'],1e-9):.2f}x) "
+            f"flops={s['flops']:.3g}({s['flops']/max(base['flops'],1):.2f}x) "
+            f"wire={s['wire']:.3g}B {note}",
+        )
+        return s
+
+    emit(
+        "table1/baseline", base["us"],
+        f"temp={base['temp_gb']:.3f}GiB flops={base['flops']:.3g} "
+        f"wire={wire_bytes_dense(make_state(CFG, get_opt('adamw', 1e-3), TrainConfig())['params']):.3g}B(dense-DP)",
+    )
+    row("remat_full", TrainConfig(remat="full"), "Table1: remat memory v, FLOP ^")
+    row("remat_dots", TrainConfig(remat="dots"), "Table1: selective remat")
+    row("compress_topk", TrainConfig(compression=TopK(0.01)),
+        "Table1: grad compression wire v")
+    row("compress_qsgd", TrainConfig(compression=QSGD(8)), "Table1: 8-bit grads")
+    row("compress_sign", TrainConfig(compression=SignEF()), "Table1: 1-bit grads")
+    row("adam8bit", TrainConfig(optimizer="adam8bit"),
+        "Table1/s4.2: optim state 4x v")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Survey Table 3 — offloading strategies under the TPU host-link model.
+
+Simulated makespan + peak device memory for each planner on a 36-segment
+granite-8b-like activation profile, at several memory budgets. The "what to
+offload" column of Table 3 becomes measurable policy differences.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, header
+from repro.core.offload import (
+    LinkModel,
+    dynprog_joint,
+    greedy_planner,
+    lifetime_planner,
+    simulate_schedule,
+)
+
+# granite-8b-ish: 36 blocks, ~0.8 GB activations each at the dry-run batch,
+# forward ~6 ms per block on v5e; host link 50 GB/s.
+N = 36
+T_FWD = [6e-3] * N
+A_BYTES = [0.8e9] * N
+LINK = LinkModel(bandwidth=50e9, latency=5e-6)
+
+
+def main() -> None:
+    header("Table 3: offloading strategies")
+    base_t, base_peak = simulate_schedule(T_FWD, A_BYTES, ["keep"] * N, LINK)
+    emit("table3/keep_all", base_t * 1e6, f"peak={base_peak/2**30:.1f}GiB")
+    for frac in (0.5, 0.25):
+        budget = base_peak * frac
+        for name, planner in [
+            ("lifetime_tflms", lifetime_planner),
+            ("greedy_beaumont20", greedy_planner),
+            ("dynprog_joint_beaumont21", dynprog_joint),
+        ]:
+            plan = planner(T_FWD, A_BYTES, budget, LINK)
+            n_off = sum(1 for x in plan.actions if x == "offload")
+            n_rec = sum(1 for x in plan.actions if x == "recompute")
+            emit(
+                f"table3/{name}@{frac}",
+                plan.est_time * 1e6,
+                f"peak={plan.peak_memory/2**30:.2f}GiB(budget {budget/2**30:.2f}) "
+                f"offloaded={n_off} recomputed={n_rec} "
+                f"slowdown={plan.est_time/base_t:.3f}x",
+            )
+
+
+if __name__ == "__main__":
+    main()

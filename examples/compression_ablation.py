@@ -1,0 +1,57 @@
+"""Gradient-compression convergence ablation (survey §4.3, Fig-style).
+
+Trains the same tiny LM with dense vs compressed gradient sync (loopback
+compression — the approximation error is what matters for convergence) and
+prints a loss-vs-bytes table: the survey's communication/quality trade-off,
+measured.
+
+    PYTHONPATH=src python examples/compression_ablation.py --steps 120
+"""
+import argparse
+
+from repro.configs import SURVEY_DEMO, reduced
+from repro.core.compression import PowerSGD, QSGD, SignEF, TopK
+from repro.data import DataPipeline
+from repro.optim import get as get_opt
+from repro.train import TrainConfig, fit
+
+CFG = reduced(SURVEY_DEMO, n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+              d_ff=512, vocab_size=2048)
+
+METHODS = {
+    "dense": None,
+    "topk@1%": TopK(0.01),
+    "topk@10%": TopK(0.1),
+    "qsgd-8bit": QSGD(8),
+    "qsgd-4bit": QSGD(4),
+    "sign+EF": SignEF(),
+    "powersgd-r4": PowerSGD(4),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    args = ap.parse_args()
+
+    results = {}
+    for name, method in METHODS.items():
+        tc = TrainConfig(lr=1e-3, compression=method, log_every=args.steps // 6)
+        data = DataPipeline(CFG, 16, 128, seed=0)
+        try:
+            _, hist = fit(CFG, tc, data, args.steps, get_opt("adamw", 1e-3),
+                          log=lambda s: None)
+        finally:
+            data.close()
+        results[name] = hist
+
+    dense_final = results["dense"][-1]["loss"]
+    print(f"\n{'method':<14s} {'final loss':>10s} {'vs dense':>9s} {'wire bytes/step':>16s}")
+    for name, hist in results.items():
+        wire = hist[-1]["wire_bytes"]
+        print(f"{name:<14s} {hist[-1]['loss']:>10.4f} "
+              f"{hist[-1]['loss'] - dense_final:>+9.4f} {wire:>16.3g}")
+
+
+if __name__ == "__main__":
+    main()

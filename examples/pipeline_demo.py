@@ -1,0 +1,72 @@
+"""Pipeline-parallelism demo (survey §3): planner -> simulator -> execution.
+
+1. Partition granite-8b's 36 layers into 4 stages (dyn-prog vs heuristic).
+2. Simulate every Table-4 schedule on that partition.
+3. Execute a real GPipe pipeline on 4 simulated devices (subprocess) and
+   check it against the sequential model.
+
+    PYTHONPATH=src python examples/pipeline_demo.py
+"""
+import subprocess
+import sys
+import textwrap
+
+from repro.configs import get_config
+from repro.core.partitioner import (
+    dp_pp_search, dynprog_partition, heuristic_partition, layer_costs_from_config,
+)
+from repro.core.pipeline import SCHEDULES, simulate
+
+
+def main() -> None:
+    cfg = get_config("granite-8b")
+    costs = layer_costs_from_config(cfg)
+    P, M = 4, 16
+    dp = dynprog_partition(costs, P)
+    he = heuristic_partition(costs, P)
+    print(f"partitioning {cfg.name} ({cfg.n_layers} layers) into {P} stages:")
+    print(f"  dynprog  : bounds={dp.boundaries} bottleneck={dp.bottleneck:.3g}")
+    print(f"  heuristic: bounds={he.boundaries} bottleneck={he.bottleneck:.3g}")
+
+    choice = dp_pp_search(costs, n_devices=16, microbatches=M)
+    print(f"  best (dp, pp) on 16 devices @ M={M}: ({choice.dp}, {choice.pp})")
+
+    print(f"\nschedules @ P={P}, M={M} (t_bwd = 2 t_fwd):")
+    for name in SCHEDULES:
+        r = simulate(name, P, M)
+        sync = "sync " if r.synchronous else f"async(stale<={r.max_staleness})"
+        print(f"  {name:14s} bubble={r.bubble_fraction:.3f} "
+              f"peak_act={r.peak_activations:3d} wcopies={r.weight_versions} {sync}")
+
+    print("\nexecutable GPipe on 4 simulated devices:")
+    r = subprocess.run(
+        [sys.executable, "-c", _RUNNER], text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+    )
+    assert r.returncode == 0
+    print("pipeline_demo OK")
+
+
+_RUNNER = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.pipeline import pipeline_apply
+    P, M, D, B = 4, 8, 64, 4
+    mesh = jax.make_mesh((P,), ("pipe",))
+    rng = np.random.RandomState(0)
+    sp = {"w": jnp.asarray(rng.randn(P, D, D) * 0.2, jnp.float32)}
+    mbs = jnp.asarray(rng.randn(M, B, D), jnp.float32)
+    fn = lambda p, x: jnp.tanh(x @ p["w"])
+    out = pipeline_apply(fn, sp, mbs, mesh=mesh)
+    ref = mbs
+    for s in range(P):
+        ref = jax.vmap(lambda x: fn({"w": sp["w"][s]}, x))(ref)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+    print("  pipelined output == sequential reference (8 microbatches, 4 stages)")
+    """
+)
+
+if __name__ == "__main__":
+    main()

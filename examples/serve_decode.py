@@ -1,0 +1,64 @@
+"""Serving example: batched prefill + decode across architecture families.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch gemma3-1b
+    PYTHONPATH=src python examples/serve_decode.py --arch falcon-mamba-7b
+
+Uses the REDUCED variant of the chosen architecture (CPU container), which
+still exercises that family's real decode path: ring-buffer kv caches with
+sliding windows (gemma3), recurrent states (mamba/recurrentgemma), cross-
+attention caches (seamless), image-prefix decode (phi-3-vision).
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ASSIGNED, get_reduced
+from repro.models import Runtime, init_params
+from repro.train import generate
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b", choices=ASSIGNED)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rt = Runtime(dtype=jnp.float32, chunk_q=32)
+
+    rng = np.random.RandomState(0)
+    batch = {
+        "tokens": jnp.asarray(
+            rng.randint(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
+        )
+    }
+    if cfg.frontend is not None:
+        batch["frontend_embeds"] = jnp.asarray(
+            rng.randn(args.batch, cfg.frontend_tokens, cfg.d_model), jnp.float32
+        )
+
+    t0 = time.perf_counter()
+    tokens, state = generate(
+        cfg, params, batch, rt, max_new_tokens=args.new_tokens,
+        temperature=args.temperature,
+    )
+    dt = time.perf_counter() - t0
+    toks = int(tokens.size)
+    print(f"arch={cfg.name} family={cfg.family}")
+    print(f"generated {toks} tokens in {dt:.1f}s "
+          f"({toks/dt:.1f} tok/s incl. compile)")
+    for b in range(min(2, args.batch)):
+        print(f"  seq[{b}]: {tokens[b, :16].tolist()}...")
+    assert bool(jnp.all(tokens >= 0)) and bool(jnp.all(tokens < cfg.vocab_padded))
+    print("serve_decode OK")
+
+
+if __name__ == "__main__":
+    main()

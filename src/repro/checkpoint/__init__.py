@@ -1,0 +1,2 @@
+from repro.checkpoint import ckpt  # noqa: F401
+from repro.checkpoint.ckpt import latest_step, restore, save  # noqa: F401

@@ -1,0 +1,11 @@
+"""The survey's taxonomy as composable training features (see DESIGN.md)."""
+from repro.core import (  # noqa: F401
+    compression,
+    partitioner,
+    offload,
+    pipeline,
+    precision,
+    remat,
+    remat_solver,
+    zero,
+)

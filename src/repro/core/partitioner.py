@@ -1,0 +1,152 @@
+"""Pipeline-stage partitioners (survey Table 4, "Partition Optimization").
+
+Given per-layer costs, split L layers into P contiguous stages:
+
+* ``dynprog_partition`` — minimize the bottleneck stage time (the PipeDream /
+  DAPPLE planner objective): classic minimax DP, optimal, O(L^2 P).
+* ``heuristic_partition`` — Megatron-style equal-count split (the survey's
+  "Heuristic" rows).
+* ``dp_pp_search``     — joint (data, pipeline) degree search for a device
+  budget (PipeDream's outer loop / Varuna's brute force): for each (dp, pp)
+  with dp*pp == N, partition with the DP and score throughput under the
+  1F1B bubble model from repro.core.pipeline; returns the argmax.
+
+Costs can come from anywhere; ``layer_costs_from_config`` derives analytic
+per-layer FLOP weights from an ArchConfig (MoE/dense/mixer aware), which is
+what the benchmark uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    boundaries: Tuple[int, ...]   # stage s = layers [boundaries[s], boundaries[s+1])
+    stage_costs: Tuple[float, ...]
+    bottleneck: float
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stage_costs)
+
+
+def _stage_costs(costs: Sequence[float], bounds: Sequence[int]) -> List[float]:
+    return [sum(costs[bounds[i] : bounds[i + 1]]) for i in range(len(bounds) - 1)]
+
+
+def heuristic_partition(costs: Sequence[float], P: int) -> Partition:
+    """Equal layer-count split (Megatron heuristic)."""
+    L = len(costs)
+    base, rem = divmod(L, P)
+    bounds = [0]
+    for s in range(P):
+        bounds.append(bounds[-1] + base + (1 if s < rem else 0))
+    sc = _stage_costs(costs, bounds)
+    return Partition(tuple(bounds), tuple(sc), max(sc))
+
+
+def dynprog_partition(costs: Sequence[float], P: int) -> Partition:
+    """Minimax contiguous partition via DP (optimal bottleneck)."""
+    L = len(costs)
+    P = min(P, L)
+    prefix = [0.0]
+    for c in costs:
+        prefix.append(prefix[-1] + c)
+
+    def span(i: int, j: int) -> float:
+        return prefix[j] - prefix[i]
+
+    INF = float("inf")
+    # dp[p][j] = min bottleneck for first j layers in p stages
+    dp = [[INF] * (L + 1) for _ in range(P + 1)]
+    cut = [[0] * (L + 1) for _ in range(P + 1)]
+    dp[0][0] = 0.0
+    for p in range(1, P + 1):
+        for j in range(p, L + 1):
+            for i in range(p - 1, j):
+                cand = max(dp[p - 1][i], span(i, j))
+                if cand < dp[p][j]:
+                    dp[p][j] = cand
+                    cut[p][j] = i
+    bounds = [L]
+    p, j = P, L
+    while p > 0:
+        i = cut[p][j]
+        bounds.append(i)
+        p, j = p - 1, i
+    bounds.reverse()
+    sc = _stage_costs(costs, bounds)
+    return Partition(tuple(bounds), tuple(sc), max(sc))
+
+
+def brute_force_partition(costs: Sequence[float], P: int) -> Partition:
+    """Exponential reference for tests (L <= ~14)."""
+    import itertools
+
+    L = len(costs)
+    best: Optional[Partition] = None
+    for combo in itertools.combinations(range(1, L), P - 1):
+        bounds = (0,) + combo + (L,)
+        sc = _stage_costs(costs, bounds)
+        cand = Partition(bounds, tuple(sc), max(sc))
+        if best is None or cand.bottleneck < best.bottleneck:
+            best = cand
+    assert best is not None
+    return best
+
+
+def layer_costs_from_config(cfg: ArchConfig) -> List[float]:
+    """Analytic per-layer FLOP weights (relative; embedding/head excluded)."""
+    d, dff, hd = cfg.d_model, cfg.d_ff, cfg.head_dim
+    out: List[float] = []
+    for kind in cfg.mixer_kinds():
+        if kind in ("attn", "local"):
+            mix = 2 * d * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd + \
+                2 * cfg.n_heads * hd * d
+        elif kind == "mamba":
+            di = cfg.d_inner
+            mix = 2 * d * 2 * di + 2 * di * d + 2 * di * (di // 16 + 2 * cfg.ssm_state)
+        else:  # rglru
+            w = cfg.rglru_width or d
+            mix = 2 * d * 2 * w + 2 * w * d
+        if cfg.ffn_kind == "dense":
+            ffn = (3 if cfg.mlp_gated else 2) * 2 * d * dff
+        elif cfg.ffn_kind == "moe":
+            ffn = cfg.experts_top_k * (3 if cfg.mlp_gated else 2) * 2 * d * dff
+            ffn += cfg.n_shared_experts * 3 * 2 * d * dff
+            if cfg.dense_residual:
+                ffn += 3 * 2 * d * cfg.residual_d_ff
+        else:
+            ffn = 0
+        out.append(float(mix + ffn))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class DPPPChoice:
+    dp: int
+    pp: int
+    partition: Partition
+    est_step_time: float   # bottleneck * (M + P - 1) / dp  (1F1B fill model)
+
+
+def dp_pp_search(
+    costs: Sequence[float], n_devices: int, microbatches: int
+) -> DPPPChoice:
+    """Joint (dp, pp) degree search (PipeDream / Varuna outer loop)."""
+    best: Optional[DPPPChoice] = None
+    for pp in range(1, min(n_devices, len(costs)) + 1):
+        if n_devices % pp:
+            continue
+        dp = n_devices // pp
+        part = dynprog_partition(costs, pp)
+        t = part.bottleneck * (microbatches + pp - 1) / (microbatches * dp)
+        cand = DPPPChoice(dp, pp, part, t)
+        if best is None or t < best.est_step_time:
+            best = cand
+    assert best is not None
+    return best

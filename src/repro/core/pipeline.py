@@ -1,0 +1,392 @@
+"""Pipeline parallelism: Table-4 schedules + executable shard_map runner.
+
+Two halves:
+
+1. **Schedule generators + event-driven simulator** (pure Python) covering
+   the survey's Table 4 rows: GPipe, 1F1B (DAPPLE/Megatron), interleaved
+   (Megatron-LM), PipeDream (async), PipeDream-2BW, Chimera (bidirectional),
+   GEMS. The simulator respects fwd/bwd dependencies and device
+   serialization and reports bubble fraction, peak in-flight activations per
+   device, and weight versions — the quantities Table 4 compares. Async
+   schedules also report weight staleness. Interleaved/Chimera use a greedy
+   ready-op scheduler over virtual stages (documented approximation).
+
+2. **Executable GPipe** on a ``pipe`` mesh axis: microbatch stream scanned
+   over ticks, stage-to-stage transfer via ``ppermute``, stage params
+   sharded P('pipe', ...). The backward pipeline comes from AD through the
+   ppermutes (synchronous GPipe semantics). Correctness is tested against
+   the equivalent sequential model (tests/test_pipeline.py).
+
+TPU adaptation (DESIGN.md §3): asynchronous weight versioning (PipeDream)
+does not exist in SPMD-synchronous JAX; async rows are simulator +
+convergence-model only, and the executable path is the synchronous family
+(GPipe now, 1F1B being a scheduling/memory variant of the same math).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# =====================================================================
+# Part 1: schedules + simulator
+# =====================================================================
+
+F, B = "F", "B"
+
+
+@dataclasses.dataclass(frozen=True)
+class Op:
+    stage: int           # virtual stage index in [0, P*v)
+    mb: int
+    kind: str            # F | B
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    name: str
+    makespan: float
+    bubble_fraction: float
+    peak_activations: int        # per device, in microbatch-activation units
+    weight_versions: int
+    synchronous: bool
+    max_staleness: int           # in optimizer steps (async only)
+
+
+def _device_of(vstage: int, P: int, placement: str, v: int) -> int:
+    if placement == "interleaved":
+        return vstage % P
+    if placement == "bidirectional":      # chimera/gems: chunk0 = s, chunk1 = P-1-s
+        chunk, s = divmod(vstage, P)
+        return s if chunk == 0 else P - 1 - s
+    return vstage  # plain: one stage per device
+
+
+def _op_order(name: str, P: int, M: int, v: int) -> Tuple[List[List[Op]], str, int]:
+    """Per-DEVICE preferred op order. Returns (orders, placement, n_vstages)."""
+    if name == "gpipe":
+        orders = [
+            [Op(s, m, F) for m in range(M)] + [Op(s, m, B) for m in range(M)]
+            for s in range(P)
+        ]
+        return orders, "plain", P
+    if name in ("1f1b", "dapple", "pipedream", "pipedream_2bw", "varuna"):
+        orders = []
+        for s in range(P):
+            warm = min(P - s, M)
+            ops: List[Op] = [Op(s, m, F) for m in range(warm)]
+            nf, nb = warm, 0
+            while nb < M:
+                ops.append(Op(s, nb, B))
+                nb += 1
+                if nf < M:
+                    ops.append(Op(s, nf, F))
+                    nf += 1
+            orders.append(ops)
+        return orders, "plain", P
+    if name == "interleaved":
+        # derive per-device orders from a virtual 1F1B execution on P*v
+        # virtual devices (one per model chunk), then merge each real
+        # device's chunk streams by virtual start time
+        V = P * v
+        times = _virtual_1f1b_times(V, M)
+        orders = [[] for _ in range(P)]
+        for d in range(P):
+            ops = [
+                (times[(vs, m, k)], Op(vs, m, k))
+                for vs in range(d, V, P)
+                for m in range(M)
+                for k in (F, B)
+            ]
+            ops.sort(key=lambda x: (x[0], x[1].kind == F, x[1].stage))
+            orders[d] = [o for _, o in ops]
+        return orders, "interleaved", V
+    if name in ("chimera", "gems"):
+        # bidirectional: 2 virtual pipelines; each device hosts vstage s and
+        # vstage P + (P-1-s). Chimera splits microbatches between directions.
+        V = 2 * P
+        half = M // 2 if name == "chimera" else M
+        orders = [[] for _ in range(P)]
+        for dev in range(P):
+            up, down = dev, 2 * P - 1 - dev  # wait: see _device_of mapping
+            down = P + (P - 1 - dev)
+            ops: List[Op] = []
+            mbs_up = range(0, half)
+            mbs_down = range(half, M) if name == "chimera" else range(0)
+            for m_u, m_d in zip(list(mbs_up) + [None] * M, list(mbs_down) + [None] * M):
+                if m_u is not None:
+                    ops.append(Op(up, m_u, F))
+                if m_d is not None:
+                    ops.append(Op(down, m_d, F))
+            for m_u, m_d in zip(list(mbs_up) + [None] * M, list(mbs_down) + [None] * M):
+                if m_u is not None:
+                    ops.append(Op(up, m_u, B))
+                if m_d is not None:
+                    ops.append(Op(down, m_d, B))
+            orders[dev] = [o for o in ops if o.mb is not None]
+        return orders, "bidirectional", 2 * P
+    raise ValueError(f"unknown schedule {name!r}")
+
+
+def _virtual_1f1b_times(V: int, M: int, tf: float = 1.0, tb: float = 2.0):
+    """Start time of every (vstage, mb, kind) under 1F1B with V devices."""
+    orders, _, _ = _op_order("1f1b", V, M, 1)
+    ready_f = np.full((V, M), np.inf)
+    ready_b = np.full((V, M), np.inf)
+    ready_f[0, :] = 0.0
+    done_f = np.full((V, M), np.inf)
+    dev_time = np.zeros(V)
+    queues = [list(o) for o in orders]
+    times: Dict[Tuple[int, int, str], float] = {}
+    remaining = sum(len(q) for q in queues)
+    while remaining:
+        for d in range(V):
+            if not queues[d]:
+                continue
+            for qi, op in enumerate(queues[d]):
+                if op.kind == F:
+                    t_in, dur = ready_f[op.stage, op.mb], tf
+                else:
+                    t_in = (
+                        done_f[op.stage, op.mb]
+                        if op.stage == V - 1
+                        else max(done_f[op.stage, op.mb], ready_b[op.stage, op.mb])
+                    )
+                    dur = tb
+                if not np.isfinite(t_in):
+                    continue
+                start = max(dev_time[d], t_in)
+                end = start + dur
+                dev_time[d] = end
+                times[(op.stage, op.mb, op.kind)] = start
+                if op.kind == F:
+                    done_f[op.stage, op.mb] = end
+                    if op.stage + 1 < V:
+                        ready_f[op.stage + 1, op.mb] = end
+                    else:
+                        ready_b[op.stage, op.mb] = end
+                else:
+                    if op.stage > 0:
+                        ready_b[op.stage - 1, op.mb] = end
+                queues[d].pop(qi)
+                remaining -= 1
+                break
+    return times
+
+
+def simulate(
+    name: str,
+    P: int,
+    M: int,
+    *,
+    v: int = 2,
+    t_fwd: float = 1.0,
+    t_bwd: float = 2.0,
+    t_comm: float = 0.0,
+) -> SimResult:
+    """Event-driven simulation of a pipeline schedule."""
+    asynchronous = name in ("pipedream", "pipedream_2bw", "varuna")
+    orders, placement, V = _op_order(name, P, M, v)
+    chunks = V // P if placement != "plain" else 1
+    if placement == "interleaved":
+        # v chunks per device, each 1/v of the model: per-op time scales down
+        t_fwd, t_bwd = t_fwd / chunks, t_bwd / chunks
+    if placement == "bidirectional":
+        # two half-depth pipelines: each vstage is half the per-device model
+        t_fwd, t_bwd = t_fwd / 2, t_bwd / 2
+
+    ready_f = np.full((V, M), np.inf)  # time input available
+    ready_b = np.full((V, M), np.inf)
+    for m in range(M):
+        ready_f[0, m] = 0.0
+        if placement == "bidirectional":
+            ready_f[P, m] = 0.0        # reverse pipeline entry
+    done_f = np.full((V, M), np.inf)
+    done_b = np.full((V, M), np.inf)
+
+    dev_time = np.zeros(P)
+    queues = [list(o) for o in orders]
+    executed = [[] for _ in range(P)]  # (start, end, op)
+
+    total_ops = sum(len(q) for q in queues)
+    n_exec = 0
+    stall_guard = 0
+    while n_exec < total_ops:
+        progressed = False
+        for d in range(P):
+            if not queues[d]:
+                continue
+            # execute the first READY op in the device's preferred order
+            # (greedy relaxation — exact for gpipe/1f1b whose orders are
+            # dependency-consistent; documented approximation otherwise)
+            pick = None
+            for qi, op in enumerate(queues[d]):
+                if op.kind == F:
+                    t_in = ready_f[op.stage, op.mb]
+                    dur = t_fwd
+                else:
+                    t_in = (
+                        done_f[op.stage, op.mb]
+                        if _is_last(op.stage, V, placement, P)
+                        else max(done_f[op.stage, op.mb], ready_b[op.stage, op.mb])
+                    )
+                    dur = t_bwd
+                if np.isfinite(t_in):
+                    pick = (qi, op, t_in, dur)
+                    break
+            if pick is None:
+                continue
+            qi, op, t_in, dur = pick
+            start = max(dev_time[d], t_in)
+            end = start + dur
+            dev_time[d] = end
+            executed[d].append((start, end, op))
+            if op.kind == F:
+                done_f[op.stage, op.mb] = end
+                nxt = _next_stage(op.stage, V, placement, P)
+                if nxt is not None:
+                    ready_f[nxt, op.mb] = end + t_comm
+                else:
+                    ready_b[op.stage, op.mb] = end  # loss -> own bwd
+            else:
+                done_b[op.stage, op.mb] = end
+                prv = _prev_stage(op.stage, V, placement, P)
+                if prv is not None:
+                    ready_b[prv, op.mb] = end + t_comm
+            queues[d].pop(qi)
+            n_exec += 1
+            progressed = True
+        if not progressed:
+            stall_guard += 1
+            if stall_guard > total_ops * 4:
+                raise RuntimeError(f"schedule {name} deadlocked")
+        else:
+            stall_guard = 0
+
+    makespan = float(dev_time.max())
+    work = M * (t_fwd + t_bwd) * chunks
+    if placement == "bidirectional" and name == "chimera":
+        work = M * (t_fwd + t_bwd)  # each direction carries M/2 microbatches
+    bubble = 1.0 - work / makespan if makespan > 0 else 0.0
+
+    # peak in-flight activations per device: fwd done, bwd not yet done
+    peak = 0
+    for d in range(P):
+        events = []
+        for (s0, e0, op) in executed[d]:
+            if op.kind == F:
+                events.append((e0, +1))
+            else:
+                events.append((e0, -1))
+        cur = 0
+        for _, delta in sorted(events):
+            cur += delta
+            peak = max(peak, cur)
+
+    versions = {"pipedream": P, "pipedream_2bw": 2}.get(name, 1)
+    staleness = {"pipedream": P - 1, "pipedream_2bw": 1}.get(name, 0)
+    return SimResult(
+        name=name,
+        makespan=makespan,
+        bubble_fraction=max(bubble, 0.0),
+        peak_activations=peak,
+        weight_versions=versions,
+        synchronous=not asynchronous,
+        max_staleness=staleness,
+    )
+
+
+def _is_last(vs: int, V: int, placement: str, P: int) -> bool:
+    if placement == "bidirectional":
+        return vs == P - 1 or vs == 2 * P - 1
+    return vs == V - 1
+
+
+def _next_stage(vs: int, V: int, placement: str, P: int) -> Optional[int]:
+    if placement == "bidirectional":
+        if vs == P - 1 or vs == 2 * P - 1:
+            return None
+        return vs + 1
+    return vs + 1 if vs + 1 < V else None
+
+
+def _prev_stage(vs: int, V: int, placement: str, P: int) -> Optional[int]:
+    if placement == "bidirectional":
+        if vs == 0 or vs == P:
+            return None
+        return vs - 1
+    return vs - 1 if vs > 0 else None
+
+
+SCHEDULES = (
+    "gpipe", "1f1b", "interleaved", "pipedream", "pipedream_2bw",
+    "chimera", "gems",
+)
+
+
+# =====================================================================
+# Part 2: executable GPipe on a mesh axis
+# =====================================================================
+def pipeline_apply(
+    stage_fn: Callable,
+    stage_params: Any,
+    microbatches: Any,
+    *,
+    mesh,
+    axis: str = "pipe",
+):
+    """Run ``stage_fn`` as a GPipe pipeline over mesh axis ``axis``.
+
+    stage_params: pytree with leading dim P (sharded over ``axis``).
+    microbatches: pytree with leading dim M (replicated).
+    stage_fn(params_for_stage, x) -> y, with y.shape == x.shape.
+
+    Returns outputs with leading dim M (replicated over ``axis``). Backward
+    through this function is the AD-reversed pipeline (GPipe semantics).
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as Pspec
+
+    P_count = mesh.shape[axis]
+    x0 = jax.tree.map(lambda m: m[0], microbatches)
+    M = jax.tree.leaves(microbatches)[0].shape[0]
+    T = M + P_count - 1
+
+    def inner(params, mbs):
+        params = jax.tree.map(lambda p: p[0], params)  # local stage params
+        stage = jax.lax.axis_index(axis)
+        perm = [(i, (i + 1) % P_count) for i in range(P_count)]
+
+        def tick(carry, t):
+            state = carry
+            inject = jax.tree.map(
+                lambda m: m[jnp.minimum(t, M - 1)], mbs
+            )
+            xin = jax.tree.map(
+                lambda s, i: jnp.where(stage == 0, i, s), state, inject
+            )
+            out = stage_fn(params, xin)
+            contrib = jax.tree.map(
+                lambda o: jnp.where(stage == P_count - 1, o, 0.0), out
+            )
+            emitted = jax.tree.map(lambda c: jax.lax.psum(c, axis), contrib)
+            nxt = jax.tree.map(
+                lambda o: jax.lax.ppermute(o, axis, perm), out
+            )
+            return nxt, emitted
+
+        zeros = jax.tree.map(jnp.zeros_like, x0)
+        _, ys = jax.lax.scan(tick, zeros, jnp.arange(T))
+        # output for microbatch m emerges at tick m + P - 1
+        return jax.tree.map(lambda y: y[P_count - 1 :], ys)
+
+    pspec = jax.tree.map(lambda _: Pspec(axis), stage_params)
+    mspec = jax.tree.map(lambda _: Pspec(), microbatches)
+    ospec = jax.tree.map(lambda _: Pspec(), microbatches)
+    fn = jax.shard_map(
+        inner, mesh=mesh, in_specs=(pspec, mspec), out_specs=ospec,
+        check_vma=False,
+    )
+    return fn(stage_params, microbatches)

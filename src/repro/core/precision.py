@@ -1,0 +1,74 @@
+"""Mixed-precision policy + dynamic loss scaling (survey §4.2 context).
+
+Master params stay f32; compute runs in a lower dtype; optionally gradients
+are accumulated in f32. bf16 (TPU-native) needs no loss scaling; the fp16
+path implements the standard dynamic scale (double every ``growth_interval``
+clean steps, halve on non-finite grads and skip the update) so the framework
+is also correct on fp16-only hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    compute_dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    use_loss_scaling: bool = False
+    init_scale: float = 2.0**15
+    growth_interval: int = 2000
+
+    @staticmethod
+    def bf16() -> "PrecisionPolicy":
+        return PrecisionPolicy()
+
+    @staticmethod
+    def f32() -> "PrecisionPolicy":
+        return PrecisionPolicy(compute_dtype=jnp.float32)
+
+    @staticmethod
+    def fp16() -> "PrecisionPolicy":
+        return PrecisionPolicy(compute_dtype=jnp.float16, use_loss_scaling=True)
+
+
+def init_scale_state(policy: PrecisionPolicy) -> Dict[str, jax.Array]:
+    return {
+        "scale": jnp.array(policy.init_scale if policy.use_loss_scaling else 1.0,
+                           jnp.float32),
+        "good_steps": jnp.array(0, jnp.int32),
+    }
+
+
+def scale_loss(loss: jax.Array, state: Dict[str, jax.Array]) -> jax.Array:
+    return loss * state["scale"]
+
+
+def unscale_and_check(
+    grads: Any, state: Dict[str, jax.Array], policy: PrecisionPolicy
+) -> Tuple[Any, Dict[str, jax.Array], jax.Array]:
+    """Unscale grads; detect non-finite; update the dynamic scale.
+
+    Returns (grads, new_state, grads_finite). Callers skip the optimizer
+    update when grads_finite is False (jnp.where on the update).
+    """
+    inv = 1.0 / state["scale"]
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * inv, grads)
+    finite = jnp.array(True)
+    for g in jax.tree.leaves(grads):
+        finite = jnp.logical_and(finite, jnp.all(jnp.isfinite(g)))
+    if not policy.use_loss_scaling:
+        return grads, state, finite
+
+    good = jnp.where(finite, state["good_steps"] + 1, 0)
+    grow = good >= policy.growth_interval
+    new_scale = jnp.where(
+        finite,
+        jnp.where(grow, state["scale"] * 2.0, state["scale"]),
+        jnp.maximum(state["scale"] * 0.5, 1.0),
+    )
+    return grads, {"scale": new_scale, "good_steps": jnp.where(grow, 0, good)}, finite

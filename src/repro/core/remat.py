@@ -1,0 +1,70 @@
+"""Executable rematerialization policies (survey §2.1).
+
+The planning side lives in ``repro.core.remat_solver``; this module maps a
+plan / named policy onto the executable JAX mechanisms:
+
+* ``"none"``    — store everything (baseline row of Table 1).
+* ``"full"``    — jax.checkpoint(nothing_saveable) on every scan unit:
+                  activations of a unit are recomputed during backward.
+* ``"dots"``    — checkpoint_dots: keep matmul outputs, recompute the rest
+                  (the "selective" policy used by Megatron-style frameworks).
+* ``"offload"`` — save activations to host memory instead of recomputing
+                  (survey §2.2 executed through the remat machinery:
+                  offload_dot_with_no_batch_dims device->pinned_host).
+* ``plan:k``    — periodic plan from the solver: checkpoint every k-th unit,
+                  recompute the rest (Chen'16 executed exactly).
+
+``policy_for`` returns a transform applied to the scan-unit body inside
+``repro.models.stack.stack_forward`` (which honours Runtime.remat for the
+simple names); ``wrap_units`` is used by the trainer for plan-based remat
+where different units get different treatment.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+from repro.core.remat_solver import RematPlan
+
+BodyFn = Callable
+
+
+def policy_for(name: str) -> Optional[Callable]:
+    if name in ("none", ""):
+        return None
+    if name == "full":
+        return lambda f: jax.checkpoint(f, prevent_cse=False)
+    if name == "dots":
+        return lambda f: jax.checkpoint(
+            f, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+    if name == "offload":
+        return lambda f: jax.checkpoint(
+            f, prevent_cse=False,
+            policy=jax.checkpoint_policies.offload_dot_with_no_batch_dims(
+                "device", "pinned_host"
+            ),
+        )
+    raise ValueError(f"unknown remat policy {name!r}")
+
+
+def wrap_units(body: BodyFn, plan: RematPlan, unit_index: int) -> BodyFn:
+    """Plan-based remat: units at checkpoint boundaries store activations,
+    others recompute (jax.checkpoint)."""
+    if unit_index in plan.checkpoints:
+        return body
+    return jax.checkpoint(body, prevent_cse=False)
+
+
+def period_from_plan(plan: RematPlan) -> int:
+    """Executable granularity for a periodic-style plan: with checkpoints
+    every k units, set Runtime.remat_period = k and remat="full" — the scan
+    then stores one carry per k layers and recomputes within the group,
+    exactly the plan's memory/recompute profile."""
+    cps = sorted(plan.checkpoints)
+    if len(cps) < 2:
+        return plan.n_segments
+    gaps = [b - a for a, b in zip(cps, cps[1:])]
+    return max(1, min(gaps))

@@ -1,0 +1,246 @@
+"""Rematerialization schedule solvers (survey §2.1, Table 2).
+
+Implements the planning side of the survey's remat taxonomy for sequential
+chains of L segments under a memory budget of M stored checkpoints:
+
+* ``periodic``       — sqrt(L) heuristic of [Chen et al., 2016].
+* ``binomial``       — optimal checkpoint placement for homogeneous chains
+                       ([Grimm et al., 1996]; REVOLVE [Griewank & Walther,
+                       2000]) via the binomial recurrence on recompute cost.
+* ``dynprog_het``    — dynamic program for heterogeneous chains (per-segment
+                       time and memory costs), the [Beaumont et al., 2019] /
+                       Rotor setting restricted to "store-input" checkpoints.
+* ``dtr_scores``     — the DTR [Kirisame et al., 2020] eviction *policy*
+                       (cost / (size * staleness)) as an ahead-of-time
+                       planner: XLA's static graphs replace DTR's runtime
+                       eviction, so we pre-pick which segments stay resident
+                       (documented hardware adaptation, DESIGN.md §3).
+
+All solvers return which segment boundaries to checkpoint; the executable
+side (jax.checkpoint over scan units) consumes them via
+``repro.core.remat.apply_plan``. ``brute_force`` provides the exponential
+reference used by tests to certify optimality on small chains.
+
+Cost model: forward(i) costs t[i] and produces an activation of size a[i];
+storing a checkpoint at boundary i consumes a[i] memory; the backward sweep
+needs the activation of every segment, recomputing from the nearest stored
+checkpoint. This is the classic AD "chain reversal" model (REVOLVE), where
+total recompute = sum over segments of (#times segment re-executed).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class RematPlan:
+    """checkpoints: sorted segment indices whose *inputs* are kept resident."""
+
+    n_segments: int
+    checkpoints: Tuple[int, ...]
+    extra_forwards: int            # recomputed segment executions
+    peak_memory: float             # activation units resident at the worst time
+
+    @property
+    def recompute_overhead(self) -> float:
+        return self.extra_forwards / max(self.n_segments, 1)
+
+
+# ---------------------------------------------------------------- simulation
+def simulate(
+    n: int,
+    checkpoints: Sequence[int],
+    t: Optional[Sequence[float]] = None,
+    a: Optional[Sequence[float]] = None,
+) -> Tuple[float, float]:
+    """(extra forward time, peak memory) of a checkpoint set, by simulation.
+
+    Strategy simulated: forward stores activations only at ``checkpoints``
+    (0 is implicitly stored: the input). Backward walks segments in reverse;
+    to get activation of segment i it recomputes forward from the nearest
+    stored checkpoint <= i, storing every intermediate activation of that
+    span (the standard segment-wise "checkpoint + replay" execution used by
+    jax.checkpoint / torch.utils.checkpoint).
+    """
+    t = list(t) if t is not None else [1.0] * n
+    a = list(a) if a is not None else [1.0] * n
+    cps = sorted(set(list(checkpoints) + [0]))
+    assert all(0 <= c < n for c in cps)
+
+    extra = 0.0
+    # memory during forward: stored checkpoint activations
+    stored = sum(a[c] for c in cps)
+    peak = stored
+    # backward: process spans [cp_k, cp_{k+1}) from last to first
+    spans = [(cps[i], cps[i + 1] if i + 1 < len(cps) else n) for i in range(len(cps))]
+    for lo, hi in reversed(spans):
+        # replay forward lo..hi-1 storing all activations of the span
+        # (the span's own checkpoint a[lo] is already counted in `stored`)
+        extra += sum(t[lo:hi])
+        span_mem = sum(a[lo + 1 : hi])
+        peak = max(peak, stored + span_mem)
+        stored -= a[lo]  # checkpoint consumed after its span's backward
+    return extra, peak
+
+
+# ----------------------------------------------------------------- periodic
+def periodic(n: int, budget: int) -> RematPlan:
+    """[Chen et al., 2016]: checkpoint every ~n/budget segments."""
+    budget = max(1, budget)
+    k = max(1, -(-n // budget))  # ceil
+    cps = tuple(range(0, n, k))
+    extra, peak = simulate(n, cps)
+    return RematPlan(n, cps, int(extra), peak)
+
+
+# ----------------------------------------------------------------- binomial
+@functools.lru_cache(maxsize=None)
+def _opt_cost(l: int, m: int) -> int:
+    """REVOLVE recurrence: min extra forwards to reverse a length-l chain
+    with m checkpoint slots (uniform costs). opt(l, 1) = l*(l-1)/2."""
+    if l <= 1:
+        return 0
+    if m <= 0:
+        raise ValueError("need at least one checkpoint slot")
+    if m == 1:
+        return l * (l - 1) // 2
+    best = None
+    for j in range(1, l):
+        c = j + _opt_cost(l - j, m - 1) + _opt_cost(j, m)
+        best = c if best is None or c < best else best
+    return best
+
+
+def binomial(n: int, budget: int) -> RematPlan:
+    """Optimal homogeneous-chain plan; checkpoint positions via the argmin
+    split of the REVOLVE recurrence (flattened to the segment-replay model
+    simulated by :func:`simulate` for reporting)."""
+    budget = max(1, budget)
+    cps: List[int] = []
+
+    def place(lo: int, l: int, m: int):
+        if l <= 1 or m <= 1:
+            return
+        best_j, best_c = 1, None
+        for j in range(1, l):
+            c = j + _opt_cost(l - j, m - 1) + _opt_cost(j, m)
+            if best_c is None or c < best_c:
+                best_j, best_c = j, c
+        cps.append(lo + best_j)
+        place(lo + best_j, l - best_j, m - 1)
+        place(lo, best_j, m)
+
+    place(0, n, budget)
+    cps_t = tuple(sorted(set([0] + cps)))
+    extra, peak = simulate(n, cps_t)
+    return RematPlan(n, cps_t, int(extra), peak)
+
+
+# ------------------------------------------------------------- heterogeneous
+def dynprog_het(
+    t: Sequence[float], a: Sequence[float], mem_budget: float
+) -> RematPlan:
+    """Heterogeneous chain (Beaumont'19-style, store-input checkpoints).
+
+    Exact for the :func:`simulate` cost model. Key observation: when the
+    backward sweep replays span [i, j), the checkpoints later than i have
+    already been consumed, so the peak during that span is
+
+        sum(a[c] for checkpoints c <= i)  +  sum(a[i+1:j])
+
+    i.e. the constraint is a function of (i, cumulative checkpoint mass) —
+    Markovian. DP state = (checkpoint position i, mass w); we keep a Pareto
+    frontier of (mass, cost, checkpoint set) per position since lower mass
+    and lower cost are both desirable.
+    """
+    n = len(t)
+    assert len(a) == n
+    # frontier[i]: list of (mass incl. a[i], cost, cps tuple)
+    frontier: List[List[Tuple[float, float, Tuple[int, ...]]]] = [
+        [] for _ in range(n)
+    ]
+    if a[0] <= mem_budget:
+        frontier[0] = [(a[0], 0.0, (0,))]
+
+    def pareto(items):
+        items.sort()
+        out: List[Tuple[float, float, Tuple[int, ...]]] = []
+        best_cost = float("inf")
+        for w, c, cps in items:
+            if c < best_cost - 1e-12:
+                out.append((w, c, cps))
+                best_cost = c
+        return out
+
+    best_final: Optional[Tuple[float, Tuple[int, ...]]] = None
+    for i in range(n):
+        frontier[i] = pareto(frontier[i])
+        for w, cost, cps in frontier[i]:
+            # finish: last span is [i, n)
+            span = sum(a[i + 1 : n])
+            if w + span <= mem_budget + 1e-12:
+                c_fin = cost + sum(t[i:n])
+                if best_final is None or c_fin < best_final[0]:
+                    best_final = (c_fin, cps)
+            # place next checkpoint at j
+            span = 0.0
+            for j in range(i + 1, n):
+                # span replay memory for [i, j)
+                span += a[j - 1] if j - 1 > i else 0.0
+                if w + span > mem_budget + 1e-12:
+                    break  # monotone in j: no later j feasible either
+                if w + a[j] <= mem_budget + 1e-12:
+                    frontier[j].append(
+                        (w + a[j], cost + sum(t[i:j]), cps + (j,))
+                    )
+    if best_final is None:
+        cps = tuple(range(n))
+        extra, peak = simulate(n, cps, t, a)
+        return RematPlan(n, cps, int(extra), peak)
+    cps = best_final[1]
+    extra, peak = simulate(n, cps, t, a)
+    return RematPlan(n, cps, int(extra), peak)
+
+
+# --------------------------------------------------------------- DTR policy
+def dtr_scores(
+    t: Sequence[float], a: Sequence[float], keep: int
+) -> RematPlan:
+    """DTR-inspired static plan: keep the ``keep`` segments with the highest
+    retention priority score t[i] / a[i] (cheap-to-store, expensive-to-
+    recompute stay resident); staleness has no static analogue and is
+    dropped — see DESIGN.md §3 on adapting runtime eviction to XLA."""
+    n = len(t)
+    order = sorted(range(n), key=lambda i: (t[i] / max(a[i], 1e-9)), reverse=True)
+    cps = tuple(sorted(set([0] + order[: max(0, keep - 1)])))
+    extra, peak = simulate(n, cps, t, a)
+    return RematPlan(n, cps, int(extra), peak)
+
+
+# -------------------------------------------------------------- brute force
+def brute_force(
+    n: int,
+    budget_mem: float,
+    t: Optional[Sequence[float]] = None,
+    a: Optional[Sequence[float]] = None,
+) -> RematPlan:
+    """Exponential exact search (tests only; n <= ~12)."""
+    import itertools
+
+    t = list(t) if t is not None else [1.0] * n
+    a = list(a) if a is not None else [1.0] * n
+    best: Optional[RematPlan] = None
+    for r in range(n):
+        for combo in itertools.combinations(range(1, n), r):
+            cps = (0,) + combo
+            extra, peak = simulate(n, cps, t, a)
+            if peak <= budget_mem:
+                if best is None or extra < best.extra_forwards:
+                    best = RematPlan(n, cps, int(extra), peak)
+    if best is None:
+        cps = tuple(range(n))
+        extra, peak = simulate(n, cps, t, a)
+        best = RematPlan(n, cps, int(extra), peak)
+    return best

@@ -1,0 +1,101 @@
+"""ZeRO stages 1-3 as partition-spec overlays (survey §4.1).
+
+In SPMD JAX, ZeRO's "partition X across data-parallel ranks" translates to:
+take X's tensor-parallel PartitionSpec and additionally shard one eligible
+dimension over the data axis. XLA then inserts exactly the collectives the
+ZeRO paper describes:
+
+  stage 1  opt state sharded over data  -> all-gather of updates (or
+           reduce-scatter(grad) + local update + all-gather(param delta))
+  stage 2  + gradients sharded          -> psum becomes reduce-scatter
+  stage 3  + parameters sharded (FSDP)  -> per-layer all-gather on use
+
+``overlay`` is pure spec algebra: it never touches arrays, so the same
+function drives the trainer, the dry-run, and the Table-1/ZeRO benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _axis_size(mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return size
+
+
+def add_axis_to_spec(
+    spec: P, shape: Tuple[int, ...], mesh, axis="data"
+) -> P:
+    """Shard the first eligible dim of ``shape`` over ``axis`` (ZeRO overlay).
+
+    Eligible: not already sharded in ``spec`` and divisible by the axis size.
+    Returns ``spec`` unchanged if nothing is eligible (e.g. tiny scalars —
+    they stay replicated, which matches ZeRO implementations that keep small
+    tensors unpartitioned).
+    """
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    size = _axis_size(mesh, axis)
+    best = -1
+    for i, (dim, cur) in enumerate(zip(shape, entries)):
+        if cur is None and dim % size == 0 and dim >= size:
+            # prefer the largest dim: fewer padding pathologies, better balance
+            if best < 0 or shape[i] > shape[best]:
+                best = i
+    if best < 0:
+        return spec
+    entries[best] = axis
+    return P(*entries)
+
+
+def overlay(
+    stage: int,
+    param_specs: Any,
+    param_shapes: Any,
+    mesh,
+    data_axis="data",
+) -> Tuple[Any, Any, Any]:
+    """Returns (param_specs, grad_specs, opt_state_specs_fn) for a ZeRO stage.
+
+    ``opt_state_specs_fn(param_spec_tree)`` maps a per-param spec tree to the
+    spec for each optimizer-state slot shaped like the param (Adam m/v).
+    """
+    assert stage in (0, 1, 2, 3), stage
+
+    def add(spec, shape):
+        return add_axis_to_spec(spec, shape.shape if hasattr(shape, "shape") else shape,
+                                mesh, data_axis)
+
+    shapes = jax.tree.map(lambda s: s.shape if hasattr(s, "shape") else s, param_shapes)
+
+    sharded = jax.tree.map(add, param_specs, shapes,
+                           is_leaf=lambda x: isinstance(x, P))
+
+    p_specs = sharded if stage >= 3 else param_specs
+    g_specs = sharded if stage >= 2 else param_specs
+    o_specs = sharded if stage >= 1 else param_specs
+    return p_specs, g_specs, o_specs
+
+
+def memory_per_device(
+    n_params: int, mesh, stage: int, tp_shard: int = 1,
+    bytes_param: int = 4, bytes_grad: int = 4, bytes_opt: int = 8,
+    data_axis="data",
+) -> dict:
+    """Analytic per-device bytes for the ZeRO benchmark (Table 1 / §4.1).
+
+    ``tp_shard``: tensor-parallel factor already dividing everything.
+    """
+    dp = _axis_size(mesh, data_axis)
+    base = n_params / tp_shard
+    return {
+        "params": base * bytes_param / (dp if stage >= 3 else 1),
+        "grads": base * bytes_grad / (dp if stage >= 2 else 1),
+        "opt": base * bytes_opt / (dp if stage >= 1 else 1),
+    }

@@ -1,0 +1,5 @@
+from repro.kernels.blockwise_quant.ops import (  # noqa: F401
+    BLOCK,
+    dequantize,
+    quantize,
+)

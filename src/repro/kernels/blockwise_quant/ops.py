@@ -1,0 +1,62 @@
+"""Public blockwise-quant ops: pad-to-block, kernel/ref routing.
+
+On this CPU container the Pallas kernel runs in interpret mode; on TPU set
+``interpret=False`` (the kernel is written against BlockSpec/VMEM tiling).
+``backend="ref"`` uses the pure-jnp oracle (fastest under jit on CPU — the
+interpret-mode kernel is for validation, not speed).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.blockwise_quant import ref as _ref
+from repro.kernels.blockwise_quant.kernel import (
+    TILE_ROWS,
+    dequantize_pallas,
+    quantize_pallas,
+)
+
+BLOCK = _ref.BLOCK
+
+
+def _pad(n: int, block: int) -> int:
+    unit = block * TILE_ROWS
+    return (n + unit - 1) // unit * unit
+
+
+def quantize(
+    x: jax.Array, block: int = BLOCK, backend: str = "ref", interpret: bool = True
+) -> Tuple[jax.Array, jax.Array, int]:
+    """Flattens, zero-pads to a tile multiple, quantizes.
+
+    Returns (codes uint8, scales f32, original_size).
+    """
+    n = x.size
+    flat = x.reshape(-1).astype(jnp.float32)
+    padded = _pad(n, block)
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    if backend == "pallas":
+        codes, scales = quantize_pallas(flat, block=block, interpret=interpret)
+    else:
+        codes, scales = _ref.quantize_ref(flat, block=block)
+    return codes, scales, n
+
+
+def dequantize(
+    codes: jax.Array,
+    scales: jax.Array,
+    n: int,
+    shape,
+    block: int = BLOCK,
+    backend: str = "ref",
+    interpret: bool = True,
+) -> jax.Array:
+    if backend == "pallas":
+        flat = dequantize_pallas(codes, scales, block=block, interpret=interpret)
+    else:
+        flat = _ref.dequantize_ref(codes, scales, block=block)
+    return flat[:n].reshape(shape)

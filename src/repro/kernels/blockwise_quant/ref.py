@@ -1,0 +1,69 @@
+"""Pure-jnp oracle for blockwise dynamic quantization (Dettmers et al. 2021).
+
+The dynamic 8-bit data type: 1 sign bit, a variable-length exponent prefix
+(leading zero bits), and the rest linear mantissa — giving high relative
+precision for small magnitudes and coverage up to 1.0. We reproduce the
+bitsandbytes construction: for each number of exponent bits e in [0, 6],
+fractions with (7 - e) mantissa bits scaled by 10^-e ... implemented below in
+its standard "create_dynamic_map" form.
+
+Quantization is blockwise: per block of ``block`` values, scale = absmax,
+then nearest code in the map. State = (codes uint8, scales f32).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 256
+
+
+@functools.lru_cache(maxsize=None)
+def dynamic_map(signed: bool = True, total_bits: int = 8) -> np.ndarray:
+    """The 2^total_bits sorted code values in [-1, 1].
+
+    Dynamic-exponent construction (Dettmers'21): 7 exponent levels, level i
+    holding 2^i linear fractions of the decade 10^(i-6) — dense relative
+    precision near zero, coverage to 1.0. Exactly 127 positive codes
+    (+ mirrored negatives + {0, 1}) = 256.
+    """
+    assert signed and total_bits == 8, "only the signed 8-bit map is used"
+    pos = []
+    for i in range(7):
+        boundaries = np.linspace(0.1, 1.0, 2**i + 1)
+        means = (boundaries[:-1] + boundaries[1:]) / 2.0
+        pos += (10.0 ** (i - 6) * means).tolist()
+    assert len(pos) == 127
+    data = pos + [-v for v in pos] + [0.0, 1.0]
+    data.sort()
+    out = np.asarray(data, dtype=np.float32)
+    assert out.shape == (256,), out.shape
+    return out
+
+
+def _codes() -> jnp.ndarray:
+    return jnp.asarray(dynamic_map())
+
+
+def quantize_ref(x: jax.Array, block: int = BLOCK) -> Tuple[jax.Array, jax.Array]:
+    """x: flat f32 (n,), n % block == 0 -> (codes uint8 (n,), scales f32 (n/block,))."""
+    codes = _codes()
+    xb = x.reshape(-1, block).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    normed = xb / safe
+    mid = (codes[1:] + codes[:-1]) / 2.0
+    idx = jnp.searchsorted(mid, normed, side="right").astype(jnp.uint8)
+    return idx.reshape(-1), scale[:, 0]
+
+
+def dequantize_ref(
+    idx: jax.Array, scale: jax.Array, block: int = BLOCK
+) -> jax.Array:
+    codes = _codes()
+    vals = jnp.take(codes, idx.astype(jnp.int32)).reshape(-1, block)
+    return (vals * scale[:, None]).reshape(-1)

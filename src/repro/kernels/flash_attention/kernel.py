@@ -1,0 +1,131 @@
+"""Pallas TPU flash attention (fwd), GQA + causal + sliding window.
+
+TPU-native tiling (canonical 3D sequential grid, as in the upstream pallas
+TPU flash kernel): grid = (batch*heads, n_q_blocks, n_k_blocks) with the
+innermost k-block axis executed sequentially per core, carrying the online-
+softmax state (row max m, row sum l, accumulator acc) in VMEM scratch.
+
+  q tile  (block_q, hd)  VMEM      k/v tiles (block_k, hd)  VMEM
+  scores = q @ k^T on the MXU in f32; masking via explicit mask multiply
+  (never exp(-inf + inf) NaNs on fully-masked tiles — sliding windows make
+  those reachable).
+
+GQA: the grid's head axis enumerates query heads; the k/v index_map divides
+by the group size so each kv head's tiles are shared by its G query heads.
+
+Backward: handled at the caller level (repro.models.attention) by a
+custom_vjp that recomputes with the chunked pure-JAX reference — the
+standard "flash forward + recompute backward" memory profile without a
+second kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, causal: bool, window: int, block_q: int, block_k: int, n_k: int,
+):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)              # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)              # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                              # (bq, bk)
+
+    qpos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask = qpos >= kpos
+    if window > 0:
+        mask = jnp.logical_and(mask, qpos - kpos < window)
+
+    scores = jnp.where(mask, scores, NEG_INF)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1))
+    # explicit mask multiply: exp() of fully-masked tiles contributes 0
+    p = jnp.where(mask, jnp.exp(scores - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_new = acc_scr[...] * alpha[:, None] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(j == n_k - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret", "group"),
+)
+def flash_attention_flat(
+    q: jax.Array,   # (BH, S, hd) query heads, pre-scaled
+    k: jax.Array,   # (BKv, S, hd)
+    v: jax.Array,
+    *,
+    group: int,     # BH // BKv
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    BH, S, hd = q.shape
+    Sk = k.shape[1]
+    block_q = min(block_q, S)
+    block_k = min(block_k, Sk)
+    assert S % block_q == 0 and Sk % block_k == 0, (S, Sk, block_q, block_k)
+    n_q, n_k = S // block_q, Sk // block_k
+
+    kernel = functools.partial(
+        _fa_kernel, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_k=n_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q,), jnp.float32),
+            _vmem((block_q,), jnp.float32),
+            _vmem((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape: Tuple[int, ...], dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

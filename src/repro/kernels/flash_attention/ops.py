@@ -1,0 +1,54 @@
+"""Public flash-attention op in the model's (B, S, Kv, G, hd) layout.
+
+Forward runs the Pallas kernel; backward (custom_vjp) recomputes with the
+pure-JAX reference — flash memory profile, oracle-exact gradients.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_flat
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: (B, S, Kv, G, hd) pre-scaled; k/v: (B, Sk, Kv, hd) -> (B, S, Kv, G, hd)."""
+    B, S, Kv, G, hd = q.shape
+    Sk = k.shape[1]
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(B * Kv * G, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Kv, Sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Kv, Sk, hd)
+    of = flash_attention_flat(
+        qf, kf, vf, group=G, causal=causal, window=window, interpret=interpret
+    )
+    return of.reshape(B, Kv, G, S, hd).transpose(0, 3, 1, 2, 4)
+
+
+def _fwd(q, k, v, causal, window, interpret):
+    return flash_attention(q, k, v, causal, window, interpret), (q, k, v)
+
+
+def _bwd(causal, window, interpret, res, dout):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: flash_attention_ref(
+            q_, k_, v_, causal=causal, window=window
+        ),
+        q, k, v,
+    )
+    return vjp(dout)
+
+
+flash_attention.defvjp(_fwd, _bwd)

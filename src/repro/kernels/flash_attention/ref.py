@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+q: (B, S, Kv, G, hd) pre-scaled by hd^-0.5 (matches repro.models.attention)
+k/v: (B, S, Kv, hd). Supports causal masking and sliding windows.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    B, S, Kv, G, hd = q.shape
+    scores = jnp.einsum(
+        "bskgh,btkh->bkgst", q, k, preferred_element_type=jnp.float32
+    )
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((S, k.shape[1]), bool)
+    if causal:
+        mask = qpos >= kpos
+    if window > 0:
+        mask = mask & (qpos - kpos < window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w.astype(v.dtype), v)
+    return out

@@ -1,0 +1,209 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+The two lines above MUST precede any other import (jax locks the device
+count on first init): this process sees 512 placeholder CPU devices so the
+production meshes (16x16 single-pod / 2x16x16 two-pod) can be built.
+
+Per combination this driver:
+  1. builds the jitted step via repro.launch.train (train / prefill /
+     serve_step per the shape's kind),
+  2. .lower()s it with sharded ShapeDtypeStructs (no allocation),
+  3. .compile()s — SPMD partitioning must succeed (sharding bugs die here),
+  4. records memory_analysis() (proves the per-device footprint),
+     cost_analysis() (FLOPs/bytes for the roofline), and the parsed
+     collective bytes into experiments/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh single
+  python -m repro.launch.dryrun --all --mesh multi      # 512-chip 2-pod pass
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs import ASSIGNED, INPUT_SHAPES, get_config, get_shape
+from repro.launch.mesh import make_production_mesh
+from repro.launch.train import build_decode, build_prefill, build_train
+from repro.roofline.analysis import analyze
+from repro.train import TrainConfig
+
+OUT_DIR = "experiments/dryrun"
+
+
+_KEEP = ("while(", " dot(", "all-reduce", "all-gather", "reduce-scatter",
+         "all-to-all", "collective-permute", "constant(", "fusion(", "calls=",
+         "to_apply=", "condition=")
+
+
+def _filter_hlo(hlo: str) -> str:
+    """Keep only the lines the roofline parser reads (headers, closers,
+    whiles, dots, collectives, constants, call edges) — ~100x smaller."""
+    out = []
+    for line in hlo.splitlines():
+        s = line.strip()
+        if (
+            s == "}"
+            or (s.endswith("{") and "->" in s)
+            or any(k in s for k in _KEEP)
+        ):
+            out.append(s)
+    return "\n".join(out)
+
+
+def should_skip(arch: str, shape_name: str) -> Optional[str]:
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and cfg.long_context == "sw_variant":
+        # runs via the sliding-window variant — never skipped, but flagged
+        return None
+    return None
+
+
+def run_one(
+    arch: str,
+    shape_name: str,
+    mesh_kind: str,
+    *,
+    tc: Optional[TrainConfig] = None,
+    tag: str = "",
+    out_dir: str = OUT_DIR,
+    moe_mode: str = "auto",
+) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.size
+    t0 = time.time()
+
+    base_tc = tc or TrainConfig(precision="bf16", remat="full", zero_stage=1)
+    if moe_mode != "auto":
+        import dataclasses
+
+        base_tc = dataclasses.replace(base_tc, moe_mode=moe_mode)
+
+    zero3_w = base_tc.zero_stage >= 3  # serve paths: 2D-shard the weights
+    if shape.kind == "train":
+        jitted, (s_struct, b_struct) = build_train(arch, mesh, base_tc, shape)
+        args = (s_struct, b_struct)
+    elif shape.kind == "prefill":
+        jitted, (p_struct, b_struct) = build_prefill(
+            arch, mesh, shape, base_tc, zero3_params=zero3_w
+        )
+        args = (p_struct, b_struct)
+    else:
+        jitted, (p_struct, c_struct, t_struct) = build_decode(
+            arch, mesh, shape, base_tc, zero3_params=zero3_w
+        )
+        args = (p_struct, c_struct, t_struct)
+
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_d = {
+        k: float(getattr(mem, k, 0) or 0)
+        for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        )
+    }
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+
+    trip_hint = cfg.n_layers
+    n_tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    n_active = cfg.active_param_count()
+    mult = 6.0 if shape.kind == "train" else 2.0
+    model_flops = mult * n_active * n_tokens
+
+    roof = analyze(
+        arch=arch, shape=shape_name, mesh_name=mesh_kind, n_devices=n_dev,
+        cost={k: cost.get(k, 0.0) for k in ("flops", "bytes accessed")},
+        hlo=hlo, trip_hint=trip_hint, model_flops=model_flops,
+        memory_analysis=mem_d,
+    )
+    rec = roof.as_dict()
+    rec.update(
+        n_devices=n_dev, kind=shape.kind,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        sw_variant=(shape_name == "long_500k" and cfg.long_context == "sw_variant"),
+        zero_stage=base_tc.zero_stage, remat=base_tc.remat, tag=tag,
+        seq_shard=base_tc.seq_shard, moe_mode=base_tc.moe_mode,
+        scan_mode=base_tc.scan_mode, hlo_bytes_text=len(hlo),
+    )
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    stem = f"{arch}__{shape_name}__{mesh_kind}{suffix}"
+    path = os.path.join(out_dir, f"{stem}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    # filtered HLO digest: re-analyzable without recompiling (see roofline/)
+    import gzip
+
+    with gzip.open(os.path.join(out_dir, f"{stem}.hlo.gz"), "wt") as f:
+        f.write(_filter_hlo(hlo))
+    print(
+        f"OK  {arch:22s} {shape_name:12s} {mesh_kind:6s} "
+        f"temp={mem_d['temp_size_in_bytes']/2**30:7.2f}GiB "
+        f"args={mem_d['argument_size_in_bytes']/2**30:7.2f}GiB "
+        f"t_c={rec['t_compute']*1e3:8.2f}ms t_m={rec['t_memory']*1e3:8.2f}ms "
+        f"t_x={rec['t_collective']*1e3:8.2f}ms dom={rec['dominant']:10s} "
+        f"(compile {t_compile:.0f}s)"
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--zero", type=int, default=1)
+    ap.add_argument("--moe-mode", default="auto", choices=["auto", "ep"])
+    ap.add_argument("--seq-shard", nargs="?", const="seq", default="",
+                    choices=["", "seq", "hidden"])
+    ap.add_argument("--scan-mode", default="assoc", choices=["assoc", "chunked"])
+    ap.add_argument("--ssm-seqpar", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out-dir", default=OUT_DIR)
+    args = ap.parse_args()
+
+    tc = TrainConfig(precision="bf16", remat=args.remat, zero_stage=args.zero,
+                     seq_shard=args.seq_shard, scan_mode=args.scan_mode,
+                     ssm_seqpar=args.ssm_seqpar)
+    combos = []
+    if args.all:
+        for a in ASSIGNED:
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape
+        combos = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in combos:
+        try:
+            run_one(arch, shape, args.mesh, tc=tc, tag=args.tag,
+                    out_dir=args.out_dir, moe_mode=args.moe_mode)
+        except Exception as e:  # noqa: BLE001
+            failures.append((arch, shape, repr(e)))
+            print(f"FAIL {arch} {shape}: {e}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} combination(s) failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production meshes (TPU v5e pods).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state — jax locks the device count on first backend initialization, and the
+dry-run must set XLA_FLAGS before that happens.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e per-chip constants (used by repro.roofline)
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # bytes/s
+ICI_BW = 50e9                  # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2):
+    """Small mesh for subprocess tests (device count forced by XLA_FLAGS)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,291 @@
+"""Distributed trainer/server builder: pjit + TP specs + ZeRO overlays.
+
+``build_train`` / ``build_prefill`` / ``build_decode`` return
+(step_fn_jitted, input ShapeDtypeStructs with shardings attached) — used by
+the multi-pod dry-run (lower+compile only) and by the real trainer entry
+point (``main``) on whatever devices exist.
+
+Sharding recipe (DESIGN.md §4):
+  batch        over ("pod", "data")        [whichever axes divide it]
+  params       TP over "model" (sharding/specs.py) + ZeRO-3 adds "data"
+  grads        ZeRO-2+ adds "data"
+  opt state    ZeRO-1+ adds "data"
+  kv caches    kv-heads over "model", else sequence-parallel over "model"
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchConfig, ShapeSpec, get_config, get_shape
+from repro.core import zero as zero_mod
+from repro.models import Runtime, decode_step, init_decode_state, prefill
+from repro.models.runtime import Runtime as RuntimeT
+from repro.optim import get as get_opt
+from repro.sharding import specs as S
+from repro.train import TrainConfig, make_state, make_train_step
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _struct_with(shardings, structs):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        structs, shardings,
+    )
+
+
+def make_runtime(cfg: ArchConfig, mesh, shape: ShapeSpec, tc: TrainConfig) -> Runtime:
+    from repro.core.precision import PrecisionPolicy
+
+    policy = getattr(PrecisionPolicy, tc.precision)()
+    return Runtime(
+        dtype=policy.compute_dtype,
+        remat=tc.remat,
+        moe_mode=tc.moe_mode,
+        mesh=mesh,
+        batch_axes=S.batch_axes(mesh, shape.global_batch),
+        long_variant=(shape.name == "long_500k"),
+        seq_shard=tc.seq_shard,
+        scan_mode=tc.scan_mode,
+        ssm_seqpar=tc.ssm_seqpar,
+        remat_period=tc.remat_period,
+    )
+
+
+def _batch_struct(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, L = shape.global_batch, shape.seq_len
+    text_len = L - (cfg.frontend_tokens if cfg.frontend == "vision" else 0)
+    out = {
+        "tokens": jax.ShapeDtypeStruct((B, text_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, text_len), jnp.int32),
+    }
+    if cfg.frontend is not None:
+        out["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_tokens, cfg.d_model), jnp.float32
+        )
+    return out
+
+
+def state_specs(cfg: ArchConfig, state_struct: Any, mesh, zero_stage: int) -> Any:
+    """Sharding specs for the full train state (params/opt/scale/comp/step)."""
+    pspecs = S.param_specs(cfg, state_struct["params"], mesh)
+    p_shapes = state_struct["params"]
+    p_over, g_over, o_over = zero_mod.overlay(zero_stage, pspecs, p_shapes, mesh)
+
+    def opt_specs(opt_struct):
+        # m/v/mu mirror the params tree; scalars replicate
+        out = {}
+        for k, v in opt_struct.items():
+            if k in ("m", "v", "mu"):
+                out[k] = o_over
+            elif k == "slots":
+                out[k] = jax.tree.map(lambda _: P(), v)
+            else:
+                out[k] = jax.tree.map(lambda _: P(), v) if isinstance(v, dict) else P()
+        return out
+
+    return {
+        "params": p_over,
+        "opt": opt_specs(state_struct["opt"]),
+        "scale": jax.tree.map(lambda _: P(), state_struct["scale"]),
+        "comp": jax.tree.map(lambda _: P(), state_struct["comp"]),
+        "step": P(),
+    }
+
+
+METRIC_SPECS = {
+    "loss": P(), "xent": P(), "aux": P(), "z_loss": P(),
+    "grad_norm": P(), "wire_bytes": P(), "loss_scale": P(),
+}
+
+
+def build_train(
+    arch: str, mesh, tc: Optional[TrainConfig] = None,
+    shape: Optional[ShapeSpec] = None,
+) -> Tuple[Callable, Tuple[Any, Any]]:
+    """Returns (jitted step, (state_struct, batch_struct)) for train_4k-style
+    shapes. Structs carry shardings — pass them to .lower() for the dry-run
+    or build real arrays with those shardings for execution."""
+    cfg = get_config(arch)
+    tc = tc or TrainConfig(precision="bf16", remat="full")
+    shape = shape or get_shape("train_4k")
+    opt = get_opt(tc.optimizer, tc.lr)
+    rt = make_runtime(cfg, mesh, shape, tc)
+
+    state_struct = jax.eval_shape(lambda: make_state(cfg, opt, tc))
+    batch_struct = _batch_struct(cfg, shape)
+
+    sspecs = state_specs(cfg, state_struct, mesh, tc.zero_stage)
+    bspecs = S.batch_specs(batch_struct, mesh, shape.global_batch)
+
+    s_shard, b_shard = _ns(mesh, sspecs), _ns(mesh, bspecs)
+    step = make_train_step(cfg, opt, tc, mode="core", rt=rt)
+    jitted = jax.jit(
+        step,
+        in_shardings=(s_shard, b_shard),
+        out_shardings=(s_shard, _ns(mesh, METRIC_SPECS)),
+        donate_argnums=(0,),
+    )
+    return jitted, (
+        _struct_with(s_shard, state_struct),
+        _struct_with(b_shard, batch_struct),
+    )
+
+
+def _params_struct_and_shard(cfg: ArchConfig, mesh, zero3: bool = False):
+    from repro.models import init_params
+
+    p_struct = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = S.param_specs(cfg, p_struct, mesh)
+    if zero3:
+        pspecs, _, _ = zero_mod.overlay(3, pspecs, p_struct, mesh)
+    return p_struct, _ns(mesh, pspecs)
+
+
+def build_prefill(
+    arch: str, mesh, shape: Optional[ShapeSpec] = None,
+    tc: Optional[TrainConfig] = None, zero3_params: bool = False,
+) -> Tuple[Callable, Tuple[Any, Any]]:
+    cfg = get_config(arch)
+    tc = tc or TrainConfig(precision="bf16", remat="none")
+    shape = shape or get_shape("prefill_32k")
+    rt = make_runtime(cfg, mesh, shape, tc)
+
+    p_struct, p_shard = _params_struct_and_shard(cfg, mesh, zero3_params)
+    batch_struct = _batch_struct(cfg, shape)
+    batch_struct.pop("labels")
+    b_shard = _ns(mesh, S.batch_specs(batch_struct, mesh, shape.global_batch))
+
+    def fn(params, batch):
+        logits, state = prefill(cfg, params, batch, rt)
+        return logits
+
+    jitted = jax.jit(fn, in_shardings=(p_shard, b_shard))
+    return jitted, (
+        _struct_with(p_shard, p_struct),
+        _struct_with(b_shard, batch_struct),
+    )
+
+
+def main() -> None:
+    """Real trainer entry point on whatever devices exist.
+
+        PYTHONPATH=src python -m repro.launch.train --arch granite-8b \
+            --reduced --steps 20 --batch 16 --seq 128 --zero 2
+
+    Builds the pjit step via build_train on a (data x model) mesh spanning
+    the local devices (multi-host wiring: set jax.distributed + per-host
+    DataPipeline shard, see repro.data). ``--reduced`` instantiates the
+    smoke-size family variant so the driver runs on CPU containers.
+    """
+    import argparse
+
+    import numpy as np
+
+    from repro.configs import ASSIGNED, get_reduced
+    import repro.configs.registry as registry
+    from repro.data import DataPipeline
+    from repro.optim import get as get_opt
+    from repro.train import make_state
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b", choices=ASSIGNED)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--zero", type=int, default=1)
+    ap.add_argument("--precision", default="f32")
+    ap.add_argument("--remat", default="none")
+    args = ap.parse_args()
+
+    n = len(jax.devices())
+    model_ax = 1
+    for cand in (4, 2, 1):
+        if n % cand == 0 and cand <= n:
+            model_ax = cand
+            break
+    mesh = jax.make_mesh((n // model_ax, model_ax), ("data", "model"))
+    print(f"devices={n} mesh=({n//model_ax} data x {model_ax} model)")
+
+    cfg = get_reduced(args.arch) if args.reduced else None
+    assert cfg is not None, "--full training requires a TPU fleet"
+    registry.ARCHITECTURES[cfg.name] = cfg
+    tc = TrainConfig(precision=args.precision, remat=args.remat,
+                     zero_stage=args.zero)
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+    jitted, (s_struct, b_struct) = build_train(cfg.name, mesh, tc, shape)
+
+    state = make_state(cfg, get_opt(tc.optimizer, tc.lr), tc)
+    state = jax.tree.map(
+        lambda x, st: jax.device_put(x, st.sharding), state, s_struct
+    )
+    data = DataPipeline(cfg, args.batch, args.seq, seed=0)
+    try:
+        import time
+
+        t0 = time.time()
+        for i in range(args.steps):
+            raw = next(data)
+            batch = jax.tree.map(
+                lambda v, st: jax.device_put(jnp.asarray(v), st.sharding),
+                dict(raw), b_struct,
+            )
+            state, metrics = jitted(state, batch)
+            if (i + 1) % 5 == 0 or i == 0:
+                print(f"step {i+1:4d} loss={float(metrics['loss']):.4f} "
+                      f"({(time.time()-t0)/(i+1):.2f}s/it)")
+    finally:
+        data.close()
+    print("train main OK")
+
+
+def build_decode(
+    arch: str, mesh, shape: Optional[ShapeSpec] = None,
+    tc: Optional[TrainConfig] = None, zero3_params: bool = False,
+) -> Tuple[Callable, Tuple[Any, Any, Any]]:
+    """serve_step: ONE new token against a seq_len-deep cache."""
+    cfg = get_config(arch)
+    tc = tc or TrainConfig(precision="bf16", remat="none")
+    shape = shape or get_shape("decode_32k")
+    rt = make_runtime(cfg, mesh, shape, tc)
+    B = shape.global_batch
+
+    p_struct, p_shard = _params_struct_and_shard(cfg, mesh, zero3_params)
+    cache_struct = jax.eval_shape(
+        lambda p: init_decode_state(cfg, p, B, shape.seq_len, rt), p_struct
+    )
+    c_shard = _ns(
+        mesh, S.cache_specs(cfg, cache_struct, mesh, shape.global_batch)
+    )
+    tok_struct = jax.ShapeDtypeStruct((B,), jnp.int32)
+    ba = S.batch_axes(mesh, B)
+    t_shard = NamedSharding(mesh, P(tuple(ba) if ba else None))
+
+    def fn(params, state, token):
+        logits, new_state = decode_step(cfg, params, state, token, rt, shape.seq_len)
+        return logits, new_state
+
+    jitted = jax.jit(
+        fn,
+        in_shardings=(p_shard, c_shard, t_shard),
+        donate_argnums=(1,),
+    )
+    return jitted, (
+        _struct_with(p_shard, p_struct),
+        _struct_with(c_shard, cache_struct),
+        jax.ShapeDtypeStruct(tok_struct.shape, tok_struct.dtype, sharding=t_shard),
+    )
+if __name__ == "__main__":
+    main()

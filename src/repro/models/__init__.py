@@ -1,0 +1,9 @@
+from repro.models.lm import (  # noqa: F401
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    loss_fn,
+    prefill,
+)
+from repro.models.runtime import Runtime  # noqa: F401

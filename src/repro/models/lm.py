@@ -1,0 +1,201 @@
+"""Top-level model: embeddings -> (encoder) -> decoder stack -> logits.
+
+Batch convention (all arrays optional except tokens):
+  tokens          (B, S_text) int32         decoder input ids
+  labels          (B, S_text) int32         next-token targets, -1 = masked
+  frontend_embeds (B, P, d) compute-dtype   stub modality embeddings:
+                                            * audio/enc-dec: encoder input
+                                            * vlm: patch embeds prepended to text
+
+The VLM forward concatenates [image_embeds; embed(tokens)] so the sequence
+length seen by the stack is P + S_text; loss is only taken on text positions.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import stack as stack_mod
+from repro.models.layers import (
+    Params,
+    embed_apply,
+    init_embed,
+    init_norm,
+    logits_apply,
+    norm_apply,
+    dense_init,
+    subkey,
+)
+from repro.models.runtime import Runtime
+from repro.models.stack import LayerSpec, layer_specs
+
+
+# ----------------------------------------------------------------------- init
+def init_params(cfg: ArchConfig, key: jax.Array) -> Params:
+    p: Params = {
+        "embed": init_embed(subkey(key, "embed"), cfg.vocab_padded, cfg.d_model),
+        "stack": stack_mod.init_stack(cfg, subkey(key, "stack"), cross=cfg.is_encdec),
+        "final_norm": init_norm(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = {
+            "w": dense_init(subkey(key, "head"), cfg.d_model, cfg.vocab_padded)
+        }
+    if cfg.is_encdec:
+        enc_cfg = _encoder_cfg(cfg)
+        p["enc_stack"] = stack_mod.init_stack(enc_cfg, subkey(key, "enc"))
+        p["enc_norm"] = init_norm(cfg.norm, cfg.d_model)
+    return p
+
+
+def _encoder_cfg(cfg: ArchConfig) -> ArchConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-enc",
+        n_layers=cfg.enc_layers,
+        enc_layers=0,
+        pattern=("attn",),
+        ffn_kind="dense",
+        frontend=None,
+    )
+
+
+# ------------------------------------------------------------------- encoder
+def encode(cfg: ArchConfig, params: Params, embeds: jax.Array, rt: Runtime) -> jax.Array:
+    """Bidirectional encoder over precomputed frontend embeddings."""
+    enc_cfg = _encoder_cfg(cfg)
+    specs = layer_specs(enc_cfg, seq_len=embeds.shape[1])
+    x, _, _ = stack_mod.stack_forward(
+        enc_cfg, params["enc_stack"], embeds.astype(rt.dtype), rt, specs,
+        causal=False,
+    )
+    return norm_apply(params["enc_norm"], x, cfg.norm)
+
+
+# ------------------------------------------------------------------- forward
+def _decoder_input(
+    cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array], rt: Runtime
+) -> Tuple[jax.Array, Optional[jax.Array], int]:
+    """Returns (x (B,S,d), memory, n_prefix) — n_prefix = non-text positions."""
+    tok = embed_apply(params["embed"], batch["tokens"], rt.dtype)
+    memory = None
+    n_prefix = 0
+    if cfg.frontend == "vision":
+        img = batch["frontend_embeds"].astype(rt.dtype)
+        tok = jnp.concatenate([img, tok], axis=1)
+        n_prefix = img.shape[1]
+    elif cfg.is_encdec:
+        memory = encode(cfg, params, batch["frontend_embeds"], rt)
+    return tok, memory, n_prefix
+
+
+def forward(
+    cfg: ArchConfig,
+    params: Params,
+    batch: Dict[str, jax.Array],
+    rt: Runtime,
+) -> Tuple[jax.Array, jax.Array]:
+    """Training forward: logits over the full sequence. Returns (logits, aux)."""
+    x, memory, _ = _decoder_input(cfg, params, batch, rt)
+    specs = layer_specs(cfg, seq_len=x.shape[1], long_variant=rt.long_variant)
+    x, aux, _ = stack_mod.stack_forward(
+        cfg, params["stack"], x, rt, specs, memory=memory
+    )
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = logits_apply(params.get("head"), params["embed"], x, cfg.tie_embeddings)
+    return logits, aux
+
+
+def loss_fn(
+    cfg: ArchConfig,
+    params: Params,
+    batch: Dict[str, jax.Array],
+    rt: Runtime,
+    z_loss: float = 1e-4,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross entropy (+ router aux + z-loss). labels -1 are masked."""
+    logits, aux = forward(cfg, params, batch, rt)
+    labels = batch["labels"]
+    if cfg.frontend == "vision":  # image prefix positions carry no loss
+        n_prefix = batch["frontend_embeds"].shape[1]
+        logits = logits[:, n_prefix:]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0] - logz
+    denom = jnp.maximum(mask.sum(), 1.0)
+    xent = -(ll * mask).sum() / denom
+    zl = z_loss * ((logz**2) * mask).sum() / denom
+    total = xent + zl + cfg.router_aux_coef * aux
+    metrics = {"loss": total, "xent": xent, "aux": aux, "z_loss": zl}
+    return total, metrics
+
+
+# ------------------------------------------------------------------- serving
+def prefill(
+    cfg: ArchConfig,
+    params: Params,
+    batch: Dict[str, jax.Array],
+    rt: Runtime,
+    max_len: Optional[int] = None,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Forward over the prompt, returning last-position logits + decode cache.
+
+    ``max_len`` sizes the kv caches for the decode horizon (default: prompt
+    length — i.e. ring-buffer reuse from the first generated token).
+    """
+    x, memory, _ = _decoder_input(cfg, params, batch, rt)
+    S = x.shape[1]
+    specs = layer_specs(cfg, seq_len=S, long_variant=rt.long_variant)
+    cache_specs = layer_specs(
+        cfg, seq_len=max_len or S, long_variant=rt.long_variant
+    )
+    x, _, caches = stack_mod.stack_forward(
+        cfg, params["stack"], x, rt, specs, memory=memory, collect_cache=True,
+        cache_specs=cache_specs,
+    )
+    x = norm_apply(params["final_norm"], x[:, -1:], cfg.norm)
+    logits = logits_apply(params.get("head"), params["embed"], x, cfg.tie_embeddings)
+    state = {"caches": caches, "t": jnp.array(S, jnp.int32)}
+    if memory is not None:
+        state["memory"] = memory
+    return logits[:, 0], state
+
+
+def init_decode_state(
+    cfg: ArchConfig, params: Params, B: int, seq_len: int, rt: Runtime
+) -> Dict[str, Any]:
+    """Zero cache sized for a ``seq_len`` context (dry-run / bench entry)."""
+    specs = layer_specs(cfg, seq_len=seq_len, long_variant=rt.long_variant)
+    enc_len = cfg.frontend_tokens if cfg.is_encdec else 0
+    caches = stack_mod.init_stack_cache(cfg, params["stack"], B, rt, specs, enc_len)
+    state: Dict[str, Any] = {"caches": caches, "t": jnp.array(seq_len - 1, jnp.int32)}
+    if cfg.is_encdec:
+        state["memory"] = jnp.zeros((B, enc_len, cfg.d_model), rt.dtype)
+    return state
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: Params,
+    state: Dict[str, Any],
+    token: jax.Array,
+    rt: Runtime,
+    seq_len: int,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One decode step. token: (B,) int32. Returns (logits (B, V), new state)."""
+    specs = layer_specs(cfg, seq_len=seq_len, long_variant=rt.long_variant)
+    x = embed_apply(params["embed"], token[:, None], rt.dtype)
+    t = state["t"]
+    x, caches = stack_mod.stack_decode(
+        cfg, params["stack"], x, state["caches"], t, rt, specs
+    )
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = logits_apply(params.get("head"), params["embed"], x, cfg.tie_embeddings)
+    new_state = dict(state, caches=caches, t=t + 1)
+    return logits[:, 0], new_state

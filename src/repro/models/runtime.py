@@ -1,0 +1,47 @@
+"""Runtime knobs threaded through model application (not part of ArchConfig).
+
+ArchConfig is *what* the network is; Runtime is *how* to execute it on the
+current step: compute dtype, attention chunking, kernel routing, MoE execution
+mode, remat policy, and the mesh axes the batch is sharded over (needed by
+shard_map-based sub-modules).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    dtype: Any = jnp.bfloat16
+    chunk_q: int = 512               # query-chunk for flash-structured attention
+    use_flash_kernel: bool = False   # route attention through the Pallas kernel
+    scan_mode: str = "assoc"         # mamba scan: assoc | chunked
+    ssm_chunk: int = 256
+    moe_mode: str = "auto"           # auto (pjit decides) | ep (shard_map expert-parallel)
+    mesh: Optional[Any] = None       # jax Mesh, required for moe_mode="ep"
+    batch_axes: Tuple[str, ...] = () # mesh axes the batch dim is sharded over
+    remat: str = "none"              # none | full | dots | offload
+    # checkpoint granularity: group this many scan units per checkpoint —
+    # the executable form of the §2.1 periodic/binomial plans (a plan with
+    # L/k checkpoints == remat="full" at remat_period=k); see
+    # repro.core.remat.period_from_plan
+    remat_period: int = 1
+    long_variant: bool = False       # run the sliding-window long-context variant
+    moe_aux: bool = True             # include router load-balance aux loss
+    # Activation-sharding mode at layer boundaries (EXPERIMENTS.md §Perf):
+    #   "seq"    — Megatron-SP analog: shard the SEQUENCE dim over 'model';
+    #              stored activations shrink by the TP factor, XLA inserts
+    #              AG before attention / RS after.
+    #   "hidden" — shard the HIDDEN dim over 'model': same memory win, but
+    #              keeps channel-sharded layers (Mamba d_inner) in one layout
+    #              end-to-end (no per-layer S<->channel resharding).
+    seq_shard: str = ""              # "" | "seq" | "hidden"
+    # distributed selective scan: shard the SSM sequence over 'model' with
+    # chunk-summary handoff (repro.models.ssm.mamba_apply_seqpar)
+    ssm_seqpar: bool = False
+
+    def replace(self, **kw) -> "Runtime":
+        return dataclasses.replace(self, **kw)

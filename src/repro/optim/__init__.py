@@ -1,0 +1,11 @@
+from repro.optim.base import (  # noqa: F401
+    Optimizer,
+    Schedule,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+)
+from repro.optim.lowbit import adam8bit, state_bytes  # noqa: F401
+from repro.optim.optimizers import adamw, get, lamb, lars, sgd  # noqa: F401
+from repro.optim.lowbit4 import adam4bit  # noqa: F401
+from repro.optim.onebit import onebit_adam  # noqa: F401

@@ -1,0 +1,73 @@
+"""Composable optimizer API (optax-like, self-contained).
+
+An Optimizer is (init, update):
+    state          = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params         = apply_updates(params, updates)
+
+All states are pytrees -> they shard with ZeRO overlays (repro.core.zero)
+and checkpoint with repro.checkpoint for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Tuple[Any, Any]]   # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+# ------------------------------------------------------------------ schedules
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Warmup + {constant, cosine, linear} decay, with the linear-scaling rule
+    [Goyal et al. 2017]: lr = base_lr * (global_batch / base_batch)."""
+
+    base_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    kind: str = "cosine"             # cosine | linear | constant
+    base_batch: int = 0              # 0 = linear-scaling rule off
+    global_batch: int = 0
+    min_ratio: float = 0.1
+
+    def __call__(self, step: jax.Array) -> jax.Array:
+        lr = self.base_lr
+        if self.base_batch and self.global_batch:
+            lr = lr * self.global_batch / self.base_batch
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1) / max(self.warmup_steps, 1))
+        frac = jnp.clip(
+            (step - self.warmup_steps)
+            / max(self.total_steps - self.warmup_steps, 1),
+            0.0, 1.0,
+        )
+        if self.kind == "cosine":
+            decay = self.min_ratio + (1 - self.min_ratio) * 0.5 * (
+                1 + jnp.cos(jnp.pi * frac)
+            )
+        elif self.kind == "linear":
+            decay = 1.0 - (1 - self.min_ratio) * frac
+        else:
+            decay = 1.0
+        return lr * warm * decay

@@ -1,0 +1,151 @@
+"""4-bit optimizer states with adaptive Gradient Scaling (survey §4.2,
+[Sun et al. 2020] "Ultra-Low Precision 4-bit Training").
+
+The 4-bit regime's failure mode is range/resolution: a 16-entry code map
+cannot cover both the large and small quantiles of Adam moments. Two
+mitigations from the paper's toolbox, adapted:
+
+* **blockwise scales** (as in the 8-bit path) shrink the dynamic range each
+  code map must cover;
+* **GradScale**: gradients are pre-scaled per tensor so their RMS sits in
+  the code map's sweet spot before the moment update, and the update is
+  un-scaled afterwards — mitigating "insufficient range and resolution".
+
+The 4-bit map is the signed dynamic construction with 3 exponent levels
+(7 positive codes + mirror + {0, 1.0} = 16). First moment only — the second
+moment's square range is kept in 8-bit (mixed 4/8, the paper's stable
+recipe); tests assert parity-within-tolerance vs f32 Adam.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.blockwise_quant import dequantize, quantize
+from repro.optim.base import Optimizer
+from repro.optim.optimizers import LR, _lr_at
+
+MIN_SIZE = 4096
+BLOCK = 256
+
+
+@functools.lru_cache(maxsize=None)
+def dynamic_map_4bit() -> np.ndarray:
+    """16 signed codes: 3 exponent decades x linear fractions + {0, 1}."""
+    pos = []
+    for i in range(3):
+        boundaries = np.linspace(0.1, 1.0, 2**i + 1)
+        means = (boundaries[:-1] + boundaries[1:]) / 2.0
+        pos += (10.0 ** (i - 2) * means).tolist()
+    assert len(pos) == 7
+    data = pos + [-v for v in pos] + [0.0, 1.0]
+    data.sort()
+    out = np.asarray(data, dtype=np.float32)
+    assert out.shape == (16,)
+    return out
+
+
+def quantize4(x: jax.Array, block: int = BLOCK):
+    """(codes uint8 [0..15], scales) — reuses the blockwise scaffold."""
+    codes = jnp.asarray(dynamic_map_4bit())
+    xb = x.reshape(-1, block).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    normed = xb / safe
+    mid = (codes[1:] + codes[:-1]) / 2.0
+    idx = jnp.searchsorted(mid, normed, side="right").astype(jnp.uint8)
+    return idx.reshape(-1), scale[:, 0]
+
+
+def dequantize4(idx: jax.Array, scale: jax.Array, block: int = BLOCK):
+    codes = jnp.asarray(dynamic_map_4bit())
+    vals = jnp.take(codes, idx.astype(jnp.int32)).reshape(-1, block)
+    return (vals * scale[:, None]).reshape(-1)
+
+
+def grad_scale(g: jax.Array, target_rms: float = 0.3) -> jax.Array:
+    """Adaptive Gradient Scaling: per-tensor scale putting the RMS of the
+    normalized gradient near the map's high-resolution region."""
+    rms = jnp.sqrt(jnp.mean(jnp.square(g))) + 1e-12
+    return target_rms / rms
+
+
+def _pad_to_block(x: jax.Array) -> jax.Array:
+    n = x.size
+    pad = (-n) % BLOCK
+    return jnp.pad(x.reshape(-1), (0, pad)) if pad else x.reshape(-1)
+
+
+def adam4bit(
+    lr: LR = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+) -> Optimizer:
+    """Adam with 4-bit first moment (+GradScale) and 8-bit second moment."""
+
+    def big(p) -> bool:
+        return p.size >= MIN_SIZE
+
+    def init(params):
+        def leaf(p):
+            if big(p):
+                z = _pad_to_block(jnp.zeros(p.size, jnp.float32))
+                c4, s4 = quantize4(z)
+                c8, s8, _ = quantize(z)
+                return {"m4": {"codes": c4, "scales": s4},
+                        "v8": {"codes": c8, "scales": s8},
+                        "gs": jnp.ones((), jnp.float32)}
+            return {"m": jnp.zeros(p.shape, jnp.float32),
+                    "v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"slots": jax.tree.map(leaf, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = _lr_at(lr, state["step"])
+
+        def leaf(slot, g, p):
+            gf = g.astype(jnp.float32)
+            if big(p):
+                padded = _pad_to_block(jnp.zeros(p.size, jnp.float32)).size
+                scale_prev = slot["gs"]
+                m = dequantize4(slot["m4"]["codes"], slot["m4"]["scales"])[
+                    : p.size
+                ].reshape(p.shape) / scale_prev
+                v = dequantize(slot["v8"]["codes"], slot["v8"]["scales"],
+                               padded, (padded,))[: p.size].reshape(p.shape)
+            else:
+                m, v = slot["m"], slot["v"]
+            m = b1 * m + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * jnp.square(gf)
+            u = -lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if big(p):
+                gs = grad_scale(m)               # scale the MOMENT stream
+                c4, s4 = quantize4(_pad_to_block(m * gs))
+                c8, s8, _ = quantize(_pad_to_block(v))
+                new_slot = {"m4": {"codes": c4, "scales": s4},
+                            "v8": {"codes": c8, "scales": s8}, "gs": gs}
+            else:
+                new_slot = {"m": m, "v": v}
+            return new_slot, u
+
+        flat_p, td = jax.tree_util.tree_flatten(params)
+        flat_s = jax.tree_util.tree_flatten(
+            state["slots"],
+            is_leaf=lambda x: isinstance(x, dict) and ("m" in x or "m4" in x),
+        )[0]
+        flat_g = jax.tree.leaves(grads)
+        pairs = [leaf(s, g, p) for s, g, p in zip(flat_s, flat_g, flat_p)]
+        slots = jax.tree_util.tree_unflatten(td, [a for a, _ in pairs])
+        updates = jax.tree_util.tree_unflatten(td, [b for _, b in pairs])
+        return updates, {"slots": slots, "step": step}
+
+    return Optimizer(init, update)

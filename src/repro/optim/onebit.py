@@ -1,0 +1,85 @@
+"""1-bit Adam (survey §4.3, [Tang et al. 2021]).
+
+Two-phase distributed Adam: a full-precision WARMUP (variance v is still
+moving), then a COMPRESSION phase where v is frozen and only the momentum is
+synchronized — sign-compressed with error feedback (the paper's key insight:
+Adam's nonlinearity lives in v; once v is stable, the update is linear in m
+and tolerates biased 1-bit compression + EF).
+
+``axis_name`` is the data-parallel shard_map axis for real multi-device
+sync; None = loopback (the compression error still applies — used by tests
+to check convergence parity and by the benchmark for bytes accounting).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+from repro.optim.optimizers import LR, _lr_at
+
+MIN_SIZE = 1024
+
+
+def onebit_adam(
+    lr: LR = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    warmup_steps: int = 20,
+    axis_name: Optional[str] = None,
+) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(z, params),
+            "v": jax.tree.map(z, params),
+            "ef": jax.tree.map(z, params),     # error feedback (compress phase)
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        in_warmup = step <= warmup_steps
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = _lr_at(lr, state["step"])
+
+        def mean_dp(x):
+            return jax.lax.pmean(x, axis_name) if axis_name else x
+
+        def leaf(m, v, ef, g):
+            gf = mean_dp(g.astype(jnp.float32)) if True else g
+            # NOTE: warmup syncs raw grads (full precision)
+            m_new = b1 * m + (1 - b1) * gf
+            v_new = jnp.where(in_warmup, b2 * v + (1 - b2) * jnp.square(gf), v)
+
+            if g.size >= MIN_SIZE:
+                # compression phase: 1-bit momentum sync with error feedback
+                t = m_new + ef
+                scale = jnp.mean(jnp.abs(t))
+                comp = jnp.sign(t) * scale
+                comp = mean_dp(comp)
+                ef_new = t - comp
+                m_comm = jnp.where(in_warmup, m_new, comp)
+                ef_out = jnp.where(in_warmup, ef, ef_new)
+            else:
+                m_comm, ef_out = m_new, ef
+
+            u = -lr_t * (m_comm / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+            return (m_comm, v_new, ef_out, u)
+
+        flat_g, td = jax.tree_util.tree_flatten(grads)
+        outs = [
+            leaf(m, v, ef, g)
+            for m, v, ef, g in zip(
+                jax.tree.leaves(state["m"]), jax.tree.leaves(state["v"]),
+                jax.tree.leaves(state["ef"]), flat_g,
+            )
+        ]
+        unf = lambda i: jax.tree_util.tree_unflatten(td, [o[i] for o in outs])
+        return unf(3), {"m": unf(0), "v": unf(1), "ef": unf(2), "step": step}
+
+    return Optimizer(init, update)

@@ -1,0 +1,178 @@
+"""SGD / Adam(W) / LARS / LAMB (survey §4.3 large-batch training).
+
+LARS [You et al. 2017] and LAMB [You et al. 2019] apply a per-layer trust
+ratio ||w|| / ||update|| on top of SGD-momentum / AdamW respectively — the
+survey's answer to large-batch generalization loss beyond the linear scaling
+rule (which lives in ``repro.optim.base.Schedule``).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+LR = Union[float, Callable]
+
+
+def _lr_at(lr: LR, step: jax.Array) -> jax.Array:
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def _norm(x: jax.Array) -> jax.Array:
+    return jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))))
+
+
+def _trust_ratio(p: jax.Array, u: jax.Array, eps: float = 1e-9) -> jax.Array:
+    """phi(||p||) / ||u|| with the standard guard: 1.0 when either norm is 0."""
+    pn, un = _norm(p), _norm(u)
+    ratio = jnp.where((pn > 0) & (un > 0), pn / (un + eps), 1.0)
+    return ratio
+
+
+def sgd(lr: LR = 1e-2, momentum: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {
+            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params=None):
+        step = state["step"]
+        mu = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state["mu"], grads
+        )
+        if nesterov:
+            upd = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), mu, grads
+            )
+        else:
+            upd = mu
+        lr_t = _lr_at(lr, step)
+        updates = jax.tree.map(lambda u: -lr_t * u, upd)
+        return updates, {"mu": mu, "step": step + 1}
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr: LR = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(z, params),
+            "v": jax.tree.map(z, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        m = jax.tree.map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads,
+        )
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads,
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = _lr_at(lr, state["step"])
+
+        def upd(m_, v_, p):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay and params is not None:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return -lr_t * u
+
+        updates = jax.tree.map(upd, m, v, params if params is not None else m)
+        return updates, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def lars(
+    lr: LR = 1e-2,
+    momentum: float = 0.9,
+    weight_decay: float = 1e-4,
+    trust_coef: float = 1e-3,
+) -> Optimizer:
+    """Layer-wise Adaptive Rate Scaling over SGD-momentum."""
+    def init(params):
+        return {
+            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"]
+        lr_t = _lr_at(lr, step)
+
+        def leaf(m, g, p):
+            g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            local = trust_coef * _trust_ratio(p, g)
+            m_new = momentum * m + local * g
+            return m_new, -lr_t * m_new
+
+        flat_p, td = jax.tree_util.tree_flatten(params)
+        flat_m = jax.tree.leaves(state["mu"])
+        flat_g = jax.tree.leaves(grads)
+        pairs = [leaf(m, g, p) for m, g, p in zip(flat_m, flat_g, flat_p)]
+        mu = jax.tree_util.tree_unflatten(td, [a for a, _ in pairs])
+        updates = jax.tree_util.tree_unflatten(td, [b for _, b in pairs])
+        return updates, {"mu": mu, "step": step + 1}
+
+    return Optimizer(init, update)
+
+
+def lamb(
+    lr: LR = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-6,
+    weight_decay: float = 0.01,
+) -> Optimizer:
+    """LAMB: AdamW direction rescaled by the per-layer trust ratio."""
+    inner = adamw(1.0, b1, b2, eps, 0.0)  # unit-lr Adam direction
+
+    def init(params):
+        return inner.init(params)
+
+    def update(grads, state, params):
+        dirs, new_state = inner.update(grads, state, params)
+        lr_t = _lr_at(lr, state["step"])
+
+        def leaf(u, p):
+            r = -u  # inner returned -1.0 * direction
+            if weight_decay:
+                r = r + weight_decay * p.astype(jnp.float32)
+            return -lr_t * _trust_ratio(p, r) * r
+
+        updates = jax.tree.map(leaf, dirs, params)
+        return updates, new_state
+
+    return Optimizer(init, update)
+
+
+def get(name: str, lr: LR, **kw) -> Optimizer:
+    table = {"sgd": sgd, "adamw": adamw, "adam": adamw, "lars": lars, "lamb": lamb}
+    if name == "adam8bit":
+        from repro.optim.lowbit import adam8bit
+
+        return adam8bit(lr, **kw)
+    if name == "adam4bit":
+        from repro.optim.lowbit4 import adam4bit
+
+        return adam4bit(lr, **kw)
+    if name == "onebit_adam":
+        from repro.optim.onebit import onebit_adam
+
+        return onebit_adam(lr, **kw)
+    return table[name](lr, **kw)

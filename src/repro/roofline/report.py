@@ -1,0 +1,129 @@
+"""Markdown report generators for EXPERIMENTS.md §Dry-run / §Roofline.
+
+    PYTHONPATH=src python -m repro.roofline.report [--dir experiments/dryrun]
+prints the tables; the EXPERIMENTS.md author pastes/refreshes them.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.roofline.analysis import derive_terms
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dir_: str) -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_bytes(b: float) -> str:
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(recs: List[Dict], mesh: str) -> str:
+    rows = [
+        "| arch | shape | compiles | temp GiB/dev | args GiB/dev | "
+        "wire GiB/step/dev | compile s |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(
+        [r for r in recs if r["mesh"] == mesh and not r.get("tag")],
+        key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])),
+    ):
+        m = r["memory_analysis"]
+        note = " (SW-variant)" if r.get("sw_variant") else ""
+        rows.append(
+            f"| {r['arch']} | {r['shape']}{note} | yes | "
+            f"{fmt_bytes(m.get('temp_size_in_bytes', 0))} | "
+            f"{fmt_bytes(m.get('argument_size_in_bytes', 0))} | "
+            f"{fmt_bytes(r['wire_bytes'])} | {r.get('compile_s', 0):.0f} |"
+        )
+    return "\n".join(rows)
+
+
+def roofline_table(recs: List[Dict], mesh: str = "single") -> str:
+    rows = [
+        "| arch | shape | t_compute | t_mem [lb, ub] | t_coll | dominant | "
+        "roofline frac | MODEL/HLO flops | bottleneck note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(
+        [r for r in recs if r["mesh"] == mesh and not r.get("tag")],
+        key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])),
+    ):
+        d = derive_terms(r)
+        note = _note(r, d)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {d['t_compute']*1e3:.1f}ms | "
+            f"[{d['t_memory_lb']*1e3:.1f}, {d['t_memory_ub']*1e3:.0f}]ms | "
+            f"{d['t_collective']*1e3:.1f}ms | {d['dominant_lb']} | "
+            f"{d['roofline_fraction']:.2f} | {r['useful_ratio']:.2f} | {note} |"
+        )
+    return "\n".join(rows)
+
+
+def _note(r: Dict, d: Dict) -> str:
+    if d["dominant_lb"] == "memory":
+        m = r["memory_analysis"]
+        if m.get("temp_size_in_bytes", 0) > m.get("argument_size_in_bytes", 0):
+            return "activations dominate: raise remat/seq-shard"
+        return "weights/cache dominate: ZeRO-3 / cache layout"
+    if d["dominant_lb"] == "collective":
+        kinds = {k: v for k, v in r["collectives"].items() if v}
+        top = max(kinds, key=kinds.get) if kinds else "?"
+        return f"{top} dominates: reshard or overlap"
+    return "compute-bound: good (raise MFU via kernels/fusion)"
+
+
+def perf_compare(recs: List[Dict], arch: str, shape: str, mesh: str) -> str:
+    """Baseline-vs-tagged comparison rows for §Perf."""
+    subset = [
+        r for r in recs if r["arch"] == arch and r["shape"] == shape
+        and r["mesh"] == mesh
+    ]
+    rows = [
+        "| variant | t_compute | t_mem_lb | t_coll | temp GiB | args GiB | wire GiB |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(subset, key=lambda r: r.get("tag") or ""):
+        d = derive_terms(r)
+        m = r["memory_analysis"]
+        rows.append(
+            f"| {r.get('tag') or 'baseline'} | {d['t_compute']*1e3:.1f}ms | "
+            f"{d['t_memory_lb']*1e3:.1f}ms | {d['t_collective']*1e3:.1f}ms | "
+            f"{fmt_bytes(m.get('temp_size_in_bytes', 0))} | "
+            f"{fmt_bytes(m.get('argument_size_in_bytes', 0))} | "
+            f"{fmt_bytes(r['wire_bytes'])} |"
+        )
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--perf", default="", help="arch:shape:mesh for §Perf rows")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if args.perf:
+        arch, shape, mesh = args.perf.split(":")
+        print(perf_compare(recs, arch, shape, mesh))
+        return
+    for mesh in ("single", "multi"):
+        if any(r["mesh"] == mesh for r in recs):
+            print(f"\n## Dry-run ({mesh})\n")
+            print(dryrun_table(recs, mesh))
+    if any(r["mesh"] == "single" for r in recs):
+        print("\n## Roofline (single pod)\n")
+        print(roofline_table(recs, "single"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.train.loop import TrainConfig, fit, make_state, make_train_step  # noqa: F401
+from repro.train.serve import generate, sample_token  # noqa: F401

@@ -1,0 +1,62 @@
+"""Batched serving: prefill + autoregressive decode with sampling.
+
+``generate`` drives the KV-cache decode path for any architecture family
+(attention ring buffers, SSM/RG-LRU recurrent states, enc-dec cross caches).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import Runtime, decode_step, prefill
+from repro.models.layers import Params
+
+
+def sample_token(
+    logits: jax.Array, key: jax.Array, temperature: float = 0.0, vocab: int = 0
+) -> jax.Array:
+    """logits: (B, Vp). temperature 0 = greedy. Padding ids masked out."""
+    if vocab:
+        mask = jnp.arange(logits.shape[-1]) < vocab
+        logits = jnp.where(mask[None, :], logits, -1e30)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(
+        jnp.int32
+    )
+
+
+def generate(
+    cfg: ArchConfig,
+    params: Params,
+    batch: Dict[str, jax.Array],
+    rt: Runtime,
+    max_new_tokens: int,
+    temperature: float = 0.0,
+    seed: int = 0,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Returns (tokens (B, max_new_tokens), final decode state)."""
+    prompt_len = batch["tokens"].shape[1]
+    total = prompt_len + max_new_tokens
+    if cfg.frontend == "vision":
+        total += cfg.frontend_tokens
+
+    logits, state = jax.jit(
+        lambda p, b: prefill(cfg, p, b, rt, max_len=total)
+    )(params, batch)
+
+    step = jax.jit(
+        lambda p, s, t: decode_step(cfg, p, s, t, rt, seq_len=total)
+    )
+    key = jax.random.PRNGKey(seed)
+    tok = sample_token(logits, key, temperature, cfg.vocab_size)
+    out = [tok]
+    for i in range(max_new_tokens - 1):
+        key = jax.random.fold_in(key, i)
+        logits, state = step(params, state, tok)
+        tok = sample_token(logits, key, temperature, cfg.vocab_size)
+        out.append(tok)
+    return jnp.stack(out, axis=1), state

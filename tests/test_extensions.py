@@ -1,0 +1,140 @@
+"""Tests for the beyond-baseline extensions: pipeline partitioners,
+4-bit optimizer + GradScale, 1-bit Adam."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.partitioner import (
+    brute_force_partition,
+    dp_pp_search,
+    dynprog_partition,
+    heuristic_partition,
+    layer_costs_from_config,
+)
+from repro.optim import adamw, apply_updates
+from repro.optim.lowbit4 import adam4bit, dynamic_map_4bit, dequantize4, quantize4
+from repro.optim.onebit import onebit_adam
+
+
+# ------------------------------------------------------------- partitioner
+@pytest.mark.parametrize("seed,P", [(0, 2), (1, 3), (2, 4)])
+def test_dynprog_partition_optimal(seed, P):
+    rng = np.random.RandomState(seed)
+    costs = (0.5 + rng.rand(12)).tolist()
+    dp = dynprog_partition(costs, P)
+    bf = brute_force_partition(costs, P)
+    assert dp.bottleneck == pytest.approx(bf.bottleneck)
+    assert dp.n_stages == P
+
+
+def test_dynprog_beats_heuristic_on_heterogeneous():
+    costs = [1.0] * 8 + [5.0] * 2 + [1.0] * 6   # hot tail segment
+    dp = dynprog_partition(costs, 4)
+    he = heuristic_partition(costs, 4)
+    assert dp.bottleneck <= he.bottleneck
+
+
+def test_partition_covers_all_layers():
+    cfg = get_config("recurrentgemma-2b")
+    costs = layer_costs_from_config(cfg)
+    assert len(costs) == cfg.n_layers
+    part = dynprog_partition(costs, 8)
+    assert part.boundaries[0] == 0 and part.boundaries[-1] == cfg.n_layers
+    assert sum(part.stage_costs) == pytest.approx(sum(costs))
+
+
+def test_dp_pp_search_prefers_dp_for_uniform_small():
+    # with generous microbatches, deep pipelines pay fill bubble: dp should win
+    costs = [1.0] * 8
+    choice = dp_pp_search(costs, n_devices=8, microbatches=4)
+    assert choice.dp >= choice.pp
+
+
+@hypothesis.given(st.integers(0, 30), st.integers(2, 5))
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_property_partition_bottleneck_bounds(seed, P):
+    rng = np.random.RandomState(seed)
+    costs = (0.1 + rng.rand(14)).tolist()
+    part = dynprog_partition(costs, P)
+    assert part.bottleneck >= sum(costs) / P - 1e-9     # averaging lower bound
+    assert part.bottleneck >= max(costs) - 1e-9         # single-layer bound
+    assert part.bottleneck <= sum(costs)                # single-stage bound
+
+
+# ------------------------------------------------------------ 4-bit optim
+def test_4bit_map_properties():
+    m = dynamic_map_4bit()
+    assert m.shape == (16,) and np.all(np.diff(m) >= 0)
+    assert m.max() == 1.0 and 0.0 in m
+
+
+def test_4bit_roundtrip_bounded():
+    x = jnp.asarray(np.random.RandomState(0).randn(256 * 8), jnp.float32)
+    c, s = quantize4(x)
+    xr = dequantize4(c, s)
+    assert int(c.max()) <= 15
+    rel = float(jnp.sqrt(jnp.mean((x - xr) ** 2)) / jnp.sqrt(jnp.mean(x**2)))
+    assert rel < 0.20, rel   # 4-bit dynamic map on gaussians: ~15% rms
+
+
+def test_adam4bit_tracks_adamw():
+    rng = np.random.RandomState(1)
+    W = jnp.asarray(rng.randn(128, 64).astype(np.float32))
+    p4 = {"w": jnp.zeros((128, 64))}
+    p32 = {"w": jnp.zeros((128, 64))}
+
+    def loss(p, x, y):
+        return jnp.mean((x @ p["w"].T - y) ** 2)
+
+    o4, o32 = adam4bit(1e-2), adamw(1e-2)
+    s4, s32 = o4.init(p4), o32.init(p32)
+
+    @jax.jit
+    def step(p, s, x, y, which):
+        g = jax.grad(loss)(p, x, y)
+        upd, s = (o4 if which else o32).update(g, s, p)
+        return apply_updates(p, upd), s
+
+    step4 = jax.jit(lambda p, s, x, y: _apply(o4, loss, p, s, x, y))
+    step32 = jax.jit(lambda p, s, x, y: _apply(o32, loss, p, s, x, y))
+    for i in range(50):
+        x = jnp.asarray(rng.randn(32, 64).astype(np.float32))
+        y = x @ W.T
+        p4, s4 = step4(p4, s4, x, y)
+        p32, s32 = step32(p32, s32, x, y)
+    l4, l32 = float(loss(p4, x, y)), float(loss(p32, x, y))
+    assert l4 < 3.0 * l32 + 1e-2, (l4, l32)
+
+
+def _apply(opt, loss, p, s, x, y):
+    g = jax.grad(loss)(p, x, y)
+    upd, s = opt.update(g, s, p)
+    return apply_updates(p, upd), s
+
+
+# ------------------------------------------------------------ 1-bit adam
+def test_onebit_adam_loopback_converges():
+    rng = np.random.RandomState(2)
+    W = jnp.asarray(rng.randn(96, 48).astype(np.float32))
+    p1 = {"w": jnp.zeros((96, 48))}
+
+    def loss(p, x, y):
+        return jnp.mean((x @ p["w"].T - y) ** 2)
+
+    opt = onebit_adam(2e-2, warmup_steps=20)
+    s = opt.init(p1)
+    step = jax.jit(lambda p, s, x, y: _apply(opt, loss, p, s, x, y))
+    losses = []
+    for i in range(120):
+        x = jnp.asarray(rng.randn(32, 48).astype(np.float32))
+        y = x @ W.T
+        p1, s = step(p1, s, x, y)
+        losses.append(float(loss(p1, x, y)))
+    assert losses[-1] < 0.25 * losses[0], (losses[0], losses[-1])
+    # compression phase actually engaged
+    assert int(s["step"]) > 20
+    assert float(jnp.abs(jax.tree.leaves(s["ef"])[0]).sum()) > 0

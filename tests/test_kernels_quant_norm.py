@@ -1,0 +1,105 @@
+"""Blockwise-quant + rmsnorm kernels: sweeps vs oracles (+ hypothesis)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.blockwise_quant import dequantize, quantize
+from repro.kernels.blockwise_quant.ref import dequantize_ref, dynamic_map, quantize_ref
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+# ------------------------------------------------------------ blockwise quant
+def test_dynamic_map_properties():
+    m = dynamic_map()
+    assert m.shape == (256,)
+    assert np.all(np.diff(m) >= 0)
+    assert m.max() == 1.0 and 0.0 in m
+    assert abs(m.min()) > 0.99
+
+
+@pytest.mark.parametrize("n", [256 * 64, 256 * 64 * 4])
+@pytest.mark.parametrize("scale", [1e-4, 1.0, 1e4])
+def test_quant_kernel_matches_ref_sweep(n, scale):
+    x = jnp.asarray(np.random.RandomState(0).randn(n), jnp.float32) * scale
+    cp, sp, _ = quantize(x, backend="pallas")
+    cr, sr, _ = quantize(x, backend="ref")
+    np.testing.assert_array_equal(np.asarray(cp), np.asarray(cr))
+    np.testing.assert_allclose(np.asarray(sp), np.asarray(sr))
+
+
+def test_quant_roundtrip_error_bound():
+    x = jnp.asarray(np.random.RandomState(1).randn(256 * 64), jnp.float32)
+    c, s, n = quantize(x)
+    xr = dequantize(c, s, n, x.shape)
+    rel = float(jnp.sqrt(jnp.mean((x - xr) ** 2)) / jnp.sqrt(jnp.mean(x**2)))
+    assert rel < 0.02, rel  # dynamic 8-bit: ~1% rms
+
+
+def test_quant_handles_zeros_and_padding():
+    x = jnp.zeros(100)  # needs padding to tile multiple; all-zero block
+    c, s, n = quantize(x)
+    xr = dequantize(c, s, n, x.shape)
+    np.testing.assert_array_equal(np.asarray(xr), np.zeros(100))
+
+
+@hypothesis.given(
+    seed=st.integers(0, 50),
+    logscale=st.floats(-6, 6),
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_property_quant_scale_equivariant(seed, logscale):
+    """quantize(a*x) has codes == quantize(x) (per-block absmax normalizes)."""
+    a = float(10.0**logscale)
+    x = jnp.asarray(np.random.RandomState(seed).randn(256 * 64), jnp.float32)
+    c1, s1, _ = quantize(x)
+    c2, s2, _ = quantize(x * a)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s1) * a, rtol=1e-5)
+
+
+@hypothesis.given(seed=st.integers(0, 50))
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_property_dequant_bounded_by_scale(seed):
+    x = jnp.asarray(np.random.RandomState(seed).randn(256 * 64), jnp.float32)
+    c, s, n = quantize(x)
+    xr = np.asarray(dequantize(c, s, n, x.shape)).reshape(-1, 256)
+    assert (np.abs(xr) <= np.asarray(s)[:, None] + 1e-6).all()
+
+
+# ----------------------------------------------------------------- rmsnorm
+@pytest.mark.parametrize("shape", [(4, 128), (2, 7, 256), (1, 300, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_ref(shape, dtype):
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(*shape), dtype)
+    s = jnp.asarray(rng.rand(shape[-1]) + 0.5, jnp.float32)
+    out = rmsnorm(x, s)
+    ref = rmsnorm_ref(x, s)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=1e-5 if dtype == jnp.float32 else 1e-2, rtol=1e-5 if dtype == jnp.float32 else 1e-2,
+    )
+
+
+def test_rmsnorm_grads_match_ref():
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.randn(8, 128), jnp.float32)
+    s = jnp.asarray(rng.rand(128) + 0.5, jnp.float32)
+    gk = jax.grad(lambda x_, s_: jnp.sum(rmsnorm(x_, s_) ** 2), argnums=(0, 1))(x, s)
+    gr = jax.grad(lambda x_, s_: jnp.sum(rmsnorm_ref(x_, s_) ** 2), argnums=(0, 1))(x, s)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-4)
+
+
+@hypothesis.given(seed=st.integers(0, 30), rows=st.integers(1, 17))
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_property_rmsnorm_row_norm(seed, rows):
+    """With unit scale, every row of the output has RMS ~ 1."""
+    x = jnp.asarray(np.random.RandomState(seed).randn(rows, 64) * 3, jnp.float32)
+    out = np.asarray(rmsnorm(x, jnp.ones(64)))
+    rms = np.sqrt((out**2).mean(-1))
+    np.testing.assert_allclose(rms, np.ones(rows), atol=1e-3)

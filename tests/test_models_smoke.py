@@ -1,0 +1,125 @@
+"""Per-architecture smoke tests on REDUCED variants (CPU, 1 device).
+
+For every assigned architecture: instantiate a reduced config of the same
+family (<=2-ish layers, d_model<=256, <=4 experts), run one forward and one
+train step (grad + SGD update), and assert output shapes + finiteness.
+Decode smoke: prefill a short prompt then decode a few tokens.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_reduced
+from repro.models import Runtime, decode_step, forward, init_params, loss_fn, prefill
+
+RT = Runtime(dtype=jnp.float32, chunk_q=32)
+
+
+def make_batch(cfg, B=2, S=32, key=0):
+    rng = np.random.RandomState(key)
+    batch = {
+        "tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)), jnp.int32),
+    }
+    if cfg.frontend is not None:
+        batch["frontend_embeds"] = jnp.asarray(
+            rng.randn(B, cfg.frontend_tokens, cfg.d_model), jnp.float32
+        )
+    return batch
+
+
+@pytest.fixture(scope="module")
+def arch_state():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = get_reduced(name)
+            params = init_params(cfg, jax.random.PRNGKey(0))
+            cache[name] = (cfg, params)
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_forward_shapes_and_finite(arch_state, name):
+    cfg, params = arch_state(name)
+    batch = make_batch(cfg)
+    logits, aux = jax.jit(lambda p, b: forward(cfg, p, b, RT))(params, batch)
+    S = batch["tokens"].shape[1] + (
+        cfg.frontend_tokens if cfg.frontend == "vision" else 0
+    )
+    assert logits.shape == (2, S, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_train_step_no_nans(arch_state, name):
+    cfg, params = arch_state(name)
+    batch = make_batch(cfg)
+
+    @jax.jit
+    def step(p, b):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda q: loss_fn(cfg, q, b, RT), has_aux=True
+        )(p)
+        new_p = jax.tree.map(lambda w, g: w - 1e-3 * g, p, grads)
+        return loss, new_p
+
+    loss, new_params = step(params, batch)
+    assert np.isfinite(float(loss)), f"{name}: loss={loss}"
+    leaves = jax.tree.leaves(new_params)
+    assert all(np.isfinite(np.asarray(l)).all() for l in leaves), name
+    # params actually changed
+    changed = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), leaves)
+    )
+    assert changed, name
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_prefill_then_decode(arch_state, name):
+    cfg, params = arch_state(name)
+    B, S = 2, 16
+    batch = make_batch(cfg, B=B, S=S)
+    logits, state = jax.jit(lambda p, b: prefill(cfg, p, b, RT))(params, batch)
+    assert logits.shape == (B, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits)).all()
+
+    total = S + (cfg.frontend_tokens if cfg.frontend == "vision" else 0)
+    logits, state = jax.jit(
+        lambda p, b: prefill(cfg, p, b, RT, max_len=total + 4)
+    )(params, batch)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32) % cfg.vocab_size
+    step = jax.jit(lambda p, s, t: decode_step(cfg, p, s, t, RT, seq_len=total + 4))
+    for _ in range(3):
+        logits, state = step(params, state, tok)
+        assert logits.shape == (B, cfg.vocab_padded)
+        assert np.isfinite(np.asarray(logits)).all(), name
+        tok = jnp.argmax(logits, -1).astype(jnp.int32) % cfg.vocab_size
+
+
+def test_decode_matches_forward_dense():
+    """Teacher-forced decode must reproduce the forward logits (dense arch)."""
+    cfg = get_reduced("granite-8b")
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    B, S = 1, 12
+    batch = make_batch(cfg, B=B, S=S, key=3)
+    full_logits, _ = forward(cfg, params, batch, RT)
+
+    pre = {k: (v[:, :4] if v.ndim > 1 else v) for k, v in batch.items()}
+    logits, state = prefill(cfg, params, pre, RT, max_len=S)
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(full_logits[:, 3]), rtol=2e-4, atol=2e-4
+    )
+    for t in range(4, S):
+        tok = batch["tokens"][:, t]
+        logits, state = decode_step(cfg, params, state, tok, RT, seq_len=S)
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full_logits[:, t]), rtol=2e-4, atol=2e-4,
+            err_msg=f"t={t}",
+        )

@@ -1,0 +1,167 @@
+"""Model-internals unit + property tests: RoPE, masks, MoE dispatch, stacks."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_reduced
+from repro.models.attention import attention_apply, init_attention
+from repro.models.layers import norm_apply, rope_apply
+from repro.models.moe import capacity, init_moe, moe_apply
+from repro.models.stack import build_segments, layer_specs, param_groups
+
+
+# ------------------------------------------------------------------- RoPE
+def test_rope_preserves_norm():
+    x = jnp.asarray(np.random.RandomState(0).randn(2, 8, 4, 64), jnp.float32)
+    pos = jnp.arange(8)[None].repeat(2, 0)
+    out = rope_apply(x, pos, 1e4)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(out), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_rope_relative_property():
+    """<rope(q,m), rope(k,n)> depends only on m-n."""
+    rng = np.random.RandomState(1)
+    q = jnp.asarray(rng.randn(1, 1, 1, 64), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 1, 1, 64), jnp.float32)
+
+    def dot_at(m, n):
+        qm = rope_apply(q, jnp.array([[m]]), 1e4)
+        kn = rope_apply(k, jnp.array([[n]]), 1e4)
+        return float(jnp.sum(qm * kn))
+
+    assert dot_at(3, 1) == pytest.approx(dot_at(10, 8), abs=1e-4)
+    assert dot_at(0, 0) == pytest.approx(dot_at(25, 25), abs=1e-4)
+
+
+# -------------------------------------------------------------- attention
+def test_causal_mask_no_future_leak():
+    """Changing future tokens must not change past outputs."""
+    d, H, Kv, hd, S = 32, 2, 1, 16, 16
+    p = init_attention(jax.random.PRNGKey(0), d, H, Kv, hd)
+    rng = np.random.RandomState(0)
+    x1 = rng.randn(1, S, d).astype(np.float32)
+    x2 = x1.copy()
+    x2[:, 10:] += 5.0
+    o1, _ = attention_apply(p, jnp.asarray(x1), n_heads=H, n_kv=Kv, head_dim=hd,
+                            theta=1e4, chunk_q=8)
+    o2, _ = attention_apply(p, jnp.asarray(x2), n_heads=H, n_kv=Kv, head_dim=hd,
+                            theta=1e4, chunk_q=8)
+    np.testing.assert_allclose(np.asarray(o1[:, :10]), np.asarray(o2[:, :10]),
+                               atol=1e-5)
+
+
+def test_sliding_window_ignores_distant_past():
+    d, H, Kv, hd, S, W = 32, 2, 1, 16, 64, 8
+    p = init_attention(jax.random.PRNGKey(1), d, H, Kv, hd)
+    rng = np.random.RandomState(0)
+    x1 = rng.randn(1, S, d).astype(np.float32)
+    x2 = x1.copy()
+    x2[:, :40] += 3.0  # beyond the window of the last 16 positions
+    kw = dict(n_heads=H, n_kv=Kv, head_dim=hd, theta=1e4, window=W, chunk_q=16)
+    o1, _ = attention_apply(p, jnp.asarray(x1), **kw)
+    o2, _ = attention_apply(p, jnp.asarray(x2), **kw)
+    np.testing.assert_allclose(np.asarray(o1[:, 56:]), np.asarray(o2[:, 56:]),
+                               atol=1e-5)
+
+
+def test_chunked_equals_unchunked():
+    d, H, Kv, hd, S = 32, 4, 2, 16, 64
+    p = init_attention(jax.random.PRNGKey(2), d, H, Kv, hd)
+    x = jnp.asarray(np.random.RandomState(2).randn(2, S, d), jnp.float32)
+    kw = dict(n_heads=H, n_kv=Kv, head_dim=hd, theta=1e4)
+    o1, _ = attention_apply(p, x, chunk_q=S + 1, **kw)   # single chunk
+    o2, _ = attention_apply(p, x, chunk_q=16, **kw)      # 4 chunks
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+# -------------------------------------------------------------------- MoE
+@hypothesis.given(
+    seed=st.integers(0, 20), top_k=st.integers(1, 4), E=st.sampled_from([4, 8])
+)
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_property_moe_capacity_conservation(seed, top_k, E):
+    """Every token's combine weight mass is <= 1 (dropped slots lose mass,
+    never gain); output is zero for tokens whose every slot dropped."""
+    d, dff, T = 32, 16, 64
+    p = init_moe(jax.random.PRNGKey(seed), d, dff, E, gated=True)
+    x = jnp.asarray(np.random.RandomState(seed).randn(1, T, d), jnp.float32)
+    out, aux = moe_apply(p, x, top_k=top_k, capacity_factor=1.0, gated=True)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(aux) >= 0.99  # load-balance loss >= 1 at optimum E*sum(f*p)
+
+
+def test_moe_uniform_router_balanced_no_drops():
+    """With capacity_factor >= E/topk... a generous capacity, no drops: the
+    output must equal the dense mixture computed directly."""
+    d, dff, E, k, T = 16, 8, 4, 2, 32
+    p = init_moe(jax.random.PRNGKey(0), d, dff, E, gated=False)
+    x = jnp.asarray(np.random.RandomState(3).randn(1, T, d), jnp.float32)
+    out, _ = moe_apply(p, x, top_k=k, capacity_factor=float(E), gated=False)
+
+    # dense reference: full softmax-topk mixture
+    logits = x.reshape(T, d) @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    vals, idx = jax.lax.top_k(probs, k)
+    vals = vals / vals.sum(-1, keepdims=True)
+    ref = np.zeros((T, d), np.float32)
+    xt = np.asarray(x.reshape(T, d))
+    for t in range(T):
+        for j in range(k):
+            e = int(idx[t, j])
+            h = jax.nn.silu(xt[t] @ p["w_up"][e]) @ p["w_down"][e]
+            ref[t] += float(vals[t, j]) * np.asarray(h)
+    np.testing.assert_allclose(np.asarray(out.reshape(T, d)), ref, atol=1e-4)
+
+
+def test_capacity_formula():
+    assert capacity(1024, 2, 8, 1.25) == 320
+    assert capacity(1, 1, 128, 1.0) == 1
+
+
+# ------------------------------------------------------------------ stacks
+def test_param_groups_recurrentgemma():
+    cfg = get_config("recurrentgemma-2b")
+    groups = param_groups(cfg)
+    assert groups[0] == (("rglru", "rglru", "attn"), 8)
+    assert groups[1] == (("rglru", "rglru"), 1)
+
+
+def test_segments_gemma3_runtime_pattern():
+    cfg = get_config("gemma3-1b")
+    specs = layer_specs(cfg, seq_len=1024)
+    segs = build_segments(cfg, specs)
+    assert len(segs) == 2
+    assert len(segs[0].unit_specs) == 6 and segs[0].repeats == 4
+    assert len(segs[1].unit_specs) == 2 and segs[1].repeats == 1
+    # 5 local + 1 global inside the unit
+    kinds = [s.kind for s in segs[0].unit_specs]
+    assert kinds == ["local"] * 5 + ["attn"]
+
+
+def test_segments_sw_variant_long_context():
+    cfg = get_config("granite-34b")
+    specs = layer_specs(cfg, seq_len=524_288, long_variant=True)
+    segs = build_segments(cfg, specs)
+    assert segs[0].repeats == 11 and len(segs[0].unit_specs) == 8
+    kinds = [s.kind for s in segs[0].unit_specs]
+    assert kinds == ["local"] * 7 + ["attn"]
+    assert specs[7].cache_len == 524_288          # global layer: full cache
+    assert specs[0].cache_len == cfg.lc_window    # local layer: window cache
+
+
+def test_norm_apply_layernorm_and_rmsnorm():
+    x = jnp.asarray(np.random.RandomState(0).randn(4, 32) * 3 + 1, jnp.float32)
+    out_ln = norm_apply({"scale": jnp.ones(32), "bias": jnp.zeros(32)}, x, "layernorm")
+    np.testing.assert_allclose(np.asarray(out_ln).mean(-1), 0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out_ln).std(-1), 1, atol=1e-2)
+    out_rms = norm_apply({"scale": jnp.ones(32)}, x, "rmsnorm")
+    rms = np.sqrt((np.asarray(out_rms) ** 2).mean(-1))
+    np.testing.assert_allclose(rms, 1, atol=1e-3)

@@ -1,0 +1,78 @@
+"""Offload planners (survey §2.2, Table 3)."""
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core.offload import (
+    ACTION_KEEP,
+    ACTION_OFFLOAD,
+    LinkModel,
+    dynprog_joint,
+    greedy_planner,
+    lifetime_planner,
+    simulate_schedule,
+)
+
+FAST_LINK = LinkModel(bandwidth=1e12, latency=0.0)
+SLOW_LINK = LinkModel(bandwidth=1.0, latency=0.0)  # 1 byte/s: transfers hurt
+
+
+def test_keep_everything_baseline():
+    t = [1.0] * 8
+    a = [1.0] * 8
+    est, peak = simulate_schedule(t, a, [ACTION_KEEP] * 8, FAST_LINK)
+    assert peak == 8.0
+    assert est == pytest.approx(sum(t) * 3)  # fwd + 2x bwd
+
+
+def test_offload_cuts_peak_fast_link_free():
+    t = [1.0] * 8
+    a = [1.0] * 8
+    actions = [ACTION_OFFLOAD] * 4 + [ACTION_KEEP] * 4
+    est, peak = simulate_schedule(t, a, actions, FAST_LINK)
+    base_est, base_peak = simulate_schedule(t, a, [ACTION_KEEP] * 8, FAST_LINK)
+    assert peak < base_peak
+    assert est == pytest.approx(base_est, rel=1e-6)  # infinite link: free
+
+
+def test_offload_costs_time_on_slow_link():
+    t = [1.0] * 4
+    a = [10.0] * 4
+    actions = [ACTION_OFFLOAD] * 4
+    est, _ = simulate_schedule(t, a, actions, SLOW_LINK)
+    base, _ = simulate_schedule(t, a, [ACTION_KEEP] * 4, SLOW_LINK)
+    assert est > base  # transfers dominate
+
+
+@pytest.mark.parametrize("planner", [lifetime_planner, greedy_planner, dynprog_joint])
+def test_planners_respect_budget(planner):
+    t = [1.0, 2.0, 1.0, 3.0, 1.0, 1.0]
+    a = [4.0, 1.0, 2.0, 1.0, 3.0, 1.0]
+    budget = 6.0
+    plan = planner(t, a, budget, LinkModel(bandwidth=10.0))
+    assert plan.peak_memory <= budget + 1e-9, plan
+
+
+def test_dynprog_no_worse_than_heuristics():
+    t = [1.0, 2.0, 1.0, 3.0, 1.0, 1.0]
+    a = [4.0, 1.0, 2.0, 1.0, 3.0, 1.0]
+    budget = 6.0
+    link = LinkModel(bandwidth=10.0)
+    dp = dynprog_joint(t, a, budget, link)
+    for h in (lifetime_planner(t, a, budget, link), greedy_planner(t, a, budget, link)):
+        if h.peak_memory <= budget:
+            assert dp.est_time <= h.est_time + 1e-9
+
+
+@hypothesis.given(st.integers(2, 8), st.integers(0, 50))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_property_planner_feasible_or_fallback(n, seed):
+    import random
+
+    rng = random.Random(seed)
+    t = [0.5 + rng.random() for _ in range(n)]
+    a = [0.5 + 2 * rng.random() for _ in range(n)]
+    budget = max(a) + 0.5  # very tight but feasible via recompute-all
+    plan = dynprog_joint(t, a, budget, LinkModel(bandwidth=5.0))
+    est, peak = simulate_schedule(t, a, plan.actions, LinkModel(bandwidth=5.0))
+    assert est == pytest.approx(plan.est_time)

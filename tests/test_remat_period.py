@@ -1,0 +1,64 @@
+"""Plan-based remat granularity: trajectory-identical, memory-smaller."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SURVEY_DEMO, reduced
+from repro.core.remat import period_from_plan
+from repro.core.remat_solver import periodic
+from repro.models import Runtime, init_params, loss_fn
+
+CFG = reduced(SURVEY_DEMO, n_layers=8, d_model=128, n_heads=4, n_kv_heads=2,
+              d_ff=256, vocab_size=512)
+
+
+def grads_at(remat, period):
+    rt = Runtime(dtype=jnp.float32, remat=remat, remat_period=period)
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jnp.asarray(
+            np.random.RandomState(0).randint(0, 512, (2, 64)), jnp.int32),
+        "labels": jnp.asarray(
+            np.random.RandomState(1).randint(0, 512, (2, 64)), jnp.int32),
+    }
+    g = jax.jit(jax.grad(lambda p: loss_fn(CFG, p, batch, rt)[0]))(params)
+    return g
+
+
+def test_period_grads_identical():
+    g1 = grads_at("none", 1)
+    for period in (2, 4):
+        g2 = grads_at("full", period)
+        for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=1e-6)
+
+
+def test_period_memory_matches_solver_cost_model():
+    """Compiled temp bytes follow the remat_solver simulate() model:
+    peak = stored checkpoints + in-flight recompute span. With small d_model
+    the span term dominates, so temp grows with the period but every
+    checkpointed variant stays far below remat=none (measured here:
+    none 71 MiB > full@4 45 > full@2 36 > full@1 12)."""
+    def temp_for(remat, period):
+        rt = Runtime(dtype=jnp.float32, remat=remat, remat_period=period)
+        params = init_params(CFG, jax.random.PRNGKey(0))
+        batch = {
+            "tokens": jnp.zeros((4, 128), jnp.int32),
+            "labels": jnp.zeros((4, 128), jnp.int32),
+        }
+        c = jax.jit(
+            jax.grad(lambda p: loss_fn(CFG, p, batch, rt)[0])
+        ).lower(params).compile()
+        return float(c.memory_analysis().temp_size_in_bytes)
+
+    t_none = temp_for("none", 1)
+    t1, t2, t4 = temp_for("full", 1), temp_for("full", 2), temp_for("full", 4)
+    assert t1 < t2 < t4 < t_none, (t1, t2, t4, t_none)  # span-dominated regime
+
+
+def test_period_from_plan():
+    plan = periodic(16, budget=4)
+    assert period_from_plan(plan) == 4
+    plan1 = periodic(8, budget=8)
+    assert period_from_plan(plan1) == 1

@@ -1,0 +1,96 @@
+"""Remat solvers: optimality vs brute force + policy sanity (+ hypothesis)."""
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core.remat_solver import (
+    RematPlan,
+    binomial,
+    brute_force,
+    dtr_scores,
+    dynprog_het,
+    periodic,
+    simulate,
+)
+
+
+def test_simulate_no_checkpoints_baseline():
+    # only segment 0 checkpointed: backward replays the whole chain once
+    extra, peak = simulate(8, [0])
+    assert extra == 8
+    assert peak == 8  # replaying the single span stores everything
+
+
+def test_simulate_all_checkpoints():
+    extra, peak = simulate(8, range(8))
+    assert extra == 8  # each span of length 1 replays its own segment
+    assert peak == 8
+
+
+def test_periodic_reduces_peak():
+    full = simulate(16, [0])[1]
+    plan = periodic(16, budget=4)
+    assert plan.peak_memory < full
+    assert plan.extra_forwards >= 16  # recompute cost paid
+
+
+@pytest.mark.parametrize("n,budget", [(6, 2), (8, 3), (10, 4)])
+def test_dynprog_matches_bruteforce(n, budget):
+    t = [1.0 + 0.3 * (i % 3) for i in range(n)]
+    a = [1.0 + 0.5 * ((i + 1) % 2) for i in range(n)]
+    mem = budget + 2.0
+    bf = brute_force(n, mem, t, a)
+    dp = dynprog_het(t, a, mem)
+    assert dp.peak_memory <= mem + 1e-9
+    assert dp.extra_forwards <= bf.extra_forwards + 1e-9, (dp, bf)
+
+
+def test_binomial_beats_or_ties_periodic_uniform():
+    for n, m in [(12, 3), (16, 4), (24, 4)]:
+        b = binomial(n, m)
+        p = periodic(n, m)
+        # compare at equal achieved memory
+        if b.peak_memory <= p.peak_memory:
+            assert b.extra_forwards <= p.extra_forwards
+
+
+def test_dtr_keeps_expensive_segments():
+    t = [10.0, 1.0, 1.0, 10.0, 1.0, 1.0]
+    a = [1.0] * 6
+    plan = dtr_scores(t, a, keep=3)
+    assert 3 in plan.checkpoints  # expensive segment stays resident
+    assert 0 in plan.checkpoints
+
+
+@hypothesis.given(
+    n=st.integers(2, 9),
+    seed=st.integers(0, 100),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_property_simulate_monotone_memory(n, seed):
+    """Adding a checkpoint never increases replay time; peak memory respects
+    the stored-checkpoint lower bound."""
+    import random
+
+    rng = random.Random(seed)
+    t = [1.0 + rng.random() for _ in range(n)]
+    a = [1.0 + rng.random() for _ in range(n)]
+    cps = sorted(rng.sample(range(n), rng.randint(1, n)))
+    if 0 not in cps:
+        cps = [0] + cps
+    extra, peak = simulate(n, cps, t, a)
+    assert peak >= max(a)  # at least one span activation resident
+    # adding every checkpoint reduces replay to sum(t)
+    extra_all, _ = simulate(n, range(n), t, a)
+    assert extra_all <= extra + 1e-9
+
+
+@hypothesis.given(st.integers(4, 20), st.integers(2, 6))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_property_binomial_cost_matches_recurrence(n, m):
+    from repro.core.remat_solver import _opt_cost
+
+    # REVOLVE closed form for m=1: l(l-1)/2
+    assert _opt_cost(n, 1) == n * (n - 1) // 2
+    # monotone in budget
+    assert _opt_cost(n, m + 1) <= _opt_cost(n, m)

@@ -1,0 +1,62 @@
+"""Distributed selective scan (sequence-parallel Mamba) == local scan.
+
+Runs on 4 simulated devices in a subprocess; asserts the sharded scan's
+outputs and gradients match the single-device reference."""
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.models.ssm import init_mamba, mamba_apply, mamba_apply_seqpar
+
+    mesh = jax.make_mesh((1, 4), ("data", "model"))
+    d, di, s, K = 32, 64, 8, 4
+    p = init_mamba(jax.random.PRNGKey(0), d, di, s, K)
+    x = jnp.asarray(np.random.RandomState(1).randn(2, 64, d), jnp.float32)
+
+    ref = mamba_apply(p, x)
+    par = jax.jit(lambda p, x: mamba_apply_seqpar(
+        p, x, mesh=mesh, batch_axes=(), ))(p, x)
+    np.testing.assert_allclose(np.asarray(par), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+    gr = jax.grad(lambda p_: jnp.sum(mamba_apply(p_, x) ** 2))(p)
+    # note: jit required — eager shard_map linearization hits a sharding-
+    # override assertion in jax 0.8.2 (production path is always jitted)
+    gp = jax.jit(jax.grad(lambda p_: jnp.sum(mamba_apply_seqpar(
+        p_, x, mesh=mesh, batch_axes=()) ** 2)))(p)
+    for k in gr:
+        np.testing.assert_allclose(np.asarray(gp[k]), np.asarray(gr[k]),
+                                   rtol=5e-3, atol=5e-4), k
+    # RG-LRU distributed scan
+    from repro.models.rglru import init_rglru, rglru_apply, rglru_apply_seqpar
+    pr = init_rglru(jax.random.PRNGKey(2), 32, 64, 4)
+    ref = rglru_apply(pr, x)
+    par = jax.jit(lambda p_, x_: rglru_apply_seqpar(
+        p_, x_, mesh=mesh, batch_axes=()))(pr, x)
+    np.testing.assert_allclose(np.asarray(par), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+    gr = jax.grad(lambda p_: jnp.sum(rglru_apply(p_, x) ** 2))(pr)
+    gp = jax.jit(jax.grad(lambda p_: jnp.sum(rglru_apply_seqpar(
+        p_, x, mesh=mesh, batch_axes=()) ** 2)))(pr)
+    for k in gr:
+        np.testing.assert_allclose(np.asarray(gp[k]), np.asarray(gr[k]),
+                                   rtol=5e-3, atol=5e-4)
+    print("SEQPAR_OK")
+    """
+)
+
+
+def test_seqpar_matches_local():
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        cwd="/root/repo",
+    )
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "SEQPAR_OK" in r.stdout

@@ -1,0 +1,109 @@
+"""ZeRO spec algebra + mixed-precision/loss-scaling unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core.precision import (
+    PrecisionPolicy,
+    init_scale_state,
+    scale_loss,
+    unscale_and_check,
+)
+from repro.core.zero import add_axis_to_spec, memory_per_device, overlay
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+def test_add_axis_prefers_largest_divisible_dim():
+    spec = add_axis_to_spec(P(None, "model"), (4096, 1024), MESH)
+    assert spec == P("data", "model")
+
+
+def test_add_axis_skips_sharded_and_indivisible():
+    # dim0 already sharded; dim1 not divisible by 16
+    spec = add_axis_to_spec(P("model", None), (512, 100), MESH)
+    assert spec == P("model", None)
+
+
+def test_add_axis_leaves_small_tensors_replicated():
+    assert add_axis_to_spec(P(None), (7,), MESH) == P(None)
+
+
+def test_overlay_stages():
+    specs = {"w": P(None, "model"), "b": P(None)}
+    shapes = {
+        "w": jax.ShapeDtypeStruct((4096, 1024), jnp.float32),
+        "b": jax.ShapeDtypeStruct((1024,), jnp.float32),
+    }
+    for stage, (p_sharded, g_sharded, o_sharded) in {
+        0: (False, False, False),
+        1: (False, False, True),
+        2: (False, True, True),
+        3: (True, True, True),
+    }.items():
+        p, g, o = overlay(stage, specs, shapes, MESH)
+        assert (p["w"] == P("data", "model")) == p_sharded
+        assert (g["w"] == P("data", "model")) == g_sharded
+        assert (o["w"] == P("data", "model")) == o_sharded
+
+
+def test_memory_per_device_monotone():
+    last = None
+    for stage in range(4):
+        m = memory_per_device(8e9, MESH, stage, tp_shard=16)
+        total = sum(m.values())
+        if last is not None:
+            assert total <= last
+        last = total
+    # stage3 with dp=16: everything /16
+    m3 = memory_per_device(8e9, MESH, 3, tp_shard=16)
+    m0 = memory_per_device(8e9, MESH, 0, tp_shard=16)
+    assert sum(m3.values()) == pytest.approx(sum(m0.values()) / 16)
+
+
+# ---------------------------------------------------------------- precision
+def test_fp16_scale_halves_on_nonfinite():
+    pol = PrecisionPolicy.fp16()
+    st = init_scale_state(pol)
+    grads = {"w": jnp.array([jnp.inf, 1.0])}
+    g, st2, finite = unscale_and_check(grads, st, pol)
+    assert not bool(finite)
+    assert float(st2["scale"]) == float(st["scale"]) / 2
+
+
+def test_fp16_scale_grows_after_interval():
+    pol = PrecisionPolicy(compute_dtype=jnp.float16, use_loss_scaling=True,
+                          growth_interval=3, init_scale=8.0)
+    st = init_scale_state(pol)
+    grads = {"w": jnp.ones(4)}
+    for i in range(3):
+        g, st, finite = unscale_and_check(grads, st, pol)
+        assert bool(finite)
+    assert float(st["scale"]) == 16.0
+    assert int(st["good_steps"]) == 0
+
+
+def test_unscale_restores_magnitude():
+    pol = PrecisionPolicy.fp16()
+    st = init_scale_state(pol)
+    loss = jnp.array(2.0)
+    scaled = scale_loss(loss, st)
+    assert float(scaled) == 2.0 * pol.init_scale
+    g, _, _ = unscale_and_check({"w": jnp.ones(2) * pol.init_scale}, st, pol)
+    np.testing.assert_allclose(np.asarray(g["w"]), np.ones(2))
+
+
+def test_bf16_no_scaling():
+    pol = PrecisionPolicy.bf16()
+    st = init_scale_state(pol)
+    assert float(st["scale"]) == 1.0
+    g, st2, finite = unscale_and_check({"w": jnp.ones(2)}, st, pol)
+    assert bool(finite) and float(st2["scale"]) == 1.0
