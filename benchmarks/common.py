@@ -33,3 +33,13 @@ def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
 def header(title: str) -> None:
     print(f"\n# === {title} ===")
     print("name,us_per_call,derived")
+
+
+def subprocess_env():
+    """Inherit the environment (JAX_PLATFORMS etc. — a bare env hangs jax
+    backend probing on CPU containers); scripts set their own XLA_FLAGS."""
+    import os
+
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    return env

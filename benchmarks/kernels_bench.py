@@ -1,6 +1,9 @@
 """Pallas kernels vs pure-jnp references (interpret-mode correctness timing
 is NOT a TPU perf claim — see EXPERIMENTS.md; derived fields carry the
-roofline-relevant arithmetic intensities instead)."""
+roofline-relevant arithmetic intensities and peak-activation estimates
+instead). Backward entries time jax.grad through the reference paths; the
+fused Pallas backwards are validated against those same paths in
+tests/test_kernels_backward.py."""
 from __future__ import annotations
 
 import jax
@@ -9,14 +12,21 @@ import numpy as np
 
 from benchmarks.common import emit, header, time_fn
 from repro.kernels.blockwise_quant import quantize
+from repro.kernels.chunked_ce import chunked_ce
+from repro.kernels.chunked_ce.ref import chunked_ce_ref
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def _mb(nbytes: float) -> str:
+    return f"{nbytes / 2**20:.1f}MB"
 
 
 def main() -> None:
     header("Kernels (refs timed on CPU; kernels validated in interpret mode)")
     rng = np.random.RandomState(0)
 
+    # ---------------------------------------------------- attention fwd/bwd
     B, S, Kv, G, hd = 1, 1024, 4, 2, 64
     q = jnp.asarray(rng.randn(B, S, Kv, G, hd), jnp.float32) * hd**-0.5
     k = jnp.asarray(rng.randn(B, S, Kv, hd), jnp.float32)
@@ -26,16 +36,78 @@ def main() -> None:
     flops = 4 * B * S * S * Kv * G * hd / 2  # causal half
     emit("kernel/attention_ref_1k", us, f"arith_intensity~{flops/(q.size*4*3):.0f}")
 
+    fa_bwd = jax.jit(
+        jax.grad(
+            lambda q, k, v: jnp.sum(flash_attention_ref(q, k, v, causal=True)),
+            argnums=(0, 1, 2),
+        )
+    )
+    us = time_fn(fa_bwd, q, k, v, iters=3)
+    # backward ~2.5x fwd FLOPs (dq, dk, dv + score recompute); fused kernel
+    # reads q/k/v/o/do + (m,l) stats once per tile pair, never (S, S)
+    bwd_flops = 2.5 * flops
+    bwd_bytes = (q.size * 3 + k.size * 2 + v.size * 2) * 4
+    emit(
+        "kernel/attention_bwd_ref_1k", us,
+        f"arith_intensity~{bwd_flops/bwd_bytes:.0f}; "
+        f"saved_stats={_mb(2 * B * Kv * G * S * 4)} vs "
+        f"scores={_mb(B * Kv * G * S * S * 4)}",
+    )
+
+    # ------------------------------------------------------ rmsnorm fwd/bwd
     x = jnp.asarray(rng.randn(4096, 2048), jnp.float32)
     s = jnp.ones(2048)
     rn = jax.jit(lambda x, s: rmsnorm_ref(x, s))
     emit("kernel/rmsnorm_ref_4kx2k", time_fn(rn, x, s, iters=3),
          "memory-bound: AI~0.5 flop/byte")
 
+    rn_bwd = jax.jit(
+        jax.grad(lambda x, s: jnp.sum(rmsnorm_ref(x, s)), argnums=(0, 1))
+    )
+    us = time_fn(rn_bwd, x, s, iters=3)
+    # fused bwd: one pass reads x+g, writes dx and a VMEM-accumulated dscale
+    emit(
+        "kernel/rmsnorm_bwd_4kx2k", us,
+        f"memory-bound: AI~0.7 flop/byte; fused reads={_mb(x.size * 2 * 4)} "
+        f"vs unfused={_mb(x.size * 4 * 4)}",
+    )
+
+    # ------------------------------------------------------- blockwise quant
     g = jnp.asarray(rng.randn(256 * 256), jnp.float32)
     qz = jax.jit(lambda g: quantize(g, backend="ref")[0])
     emit("kernel/blockwise_quant_ref_64k", time_fn(qz, g, iters=3),
          "VPU-bound: 256-way codebook compare")
+
+    # --------------------------------------------------- chunked-CE head
+    Bc, Sc, d, V, C = 2, 512, 128, 32768, 2048
+    xh = jnp.asarray(rng.randn(Bc, Sc, d), jnp.float32)
+    wh = jnp.asarray(rng.randn(V, d), jnp.float32) * 0.05
+    labels = jnp.asarray(rng.randint(0, V, (Bc, Sc)), jnp.int32)
+
+    def _loss(ce):
+        def f(x_, w_):
+            ll, logz = ce(x_, w_)
+            return jnp.mean(logz - ll)
+
+        return f
+
+    dense = jax.jit(
+        jax.grad(_loss(lambda x_, w_: chunked_ce_ref(x_, w_, labels)),
+                 argnums=(0, 1))
+    )
+    chunked = jax.jit(
+        jax.grad(_loss(lambda x_, w_: chunked_ce(x_, w_, labels, C)),
+                 argnums=(0, 1))
+    )
+    peak_dense = Bc * Sc * V * 4 * 2      # logits + dlogits, f32
+    peak_chunk = Bc * Sc * C * 4          # one (B, S, chunk) tile live
+    emit("kernel/ce_dense_grad_32kvocab", time_fn(dense, xh, wh, iters=3),
+         f"peak_logits_act={_mb(peak_dense)}")
+    emit(
+        "kernel/ce_chunked_grad_32kvocab", time_fn(chunked, xh, wh, iters=3),
+        f"peak_logits_act={_mb(peak_chunk)} ({peak_dense // peak_chunk}x "
+        f"smaller); AI~{2 * d:.0f} flop/byte on the head matmul",
+    )
 
 
 if __name__ == "__main__":

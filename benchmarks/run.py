@@ -1,12 +1,15 @@
 """Benchmark driver: one module per survey table + framework benches.
 
-``python -m benchmarks.run [--only table1,table4,...]``
-Each module prints ``name,us_per_call,derived`` CSV rows.
+``python -m benchmarks.run [--only table1,table4,...] [--json out.json]``
+Each module prints ``name,us_per_call,derived`` CSV rows; ``--json`` also
+records the collected rows as a structured snapshot (e.g.
+``--only kernels --json BENCH_kernels.json``).
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
 import traceback
 
 MODULES = [
@@ -25,6 +28,7 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default="", help="write collected rows to this path")
     args = ap.parse_args()
     wanted = [w.strip() for w in args.only.split(",") if w.strip()]
     failures = []
@@ -37,6 +41,18 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             failures.append((short, repr(e)))
             traceback.print_exc()
+    if args.json:
+        from benchmarks.common import ROWS
+
+        rows = []
+        for row in ROWS:
+            name, us, derived = row.split(",", 2)
+            rows.append(
+                {"name": name, "us_per_call": float(us), "derived": derived}
+            )
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows}, f, indent=2)
+        print(f"wrote {len(rows)} rows to {args.json}")
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
 

@@ -7,12 +7,15 @@ device).
 """
 from __future__ import annotations
 
+import os
+
 import subprocess
 import sys
 import textwrap
 
-from benchmarks.common import emit, header
+from benchmarks.common import emit, header, subprocess_env
 from repro.core.pipeline import SCHEDULES, simulate
+
 
 
 def main() -> None:
@@ -55,7 +58,7 @@ SCRIPT = textwrap.dedent(
 def _executable() -> None:
     r = subprocess.run(
         [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
-        timeout=600, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        timeout=600, env=subprocess_env(),
         cwd="/root/repo",
     )
     us = 0.0

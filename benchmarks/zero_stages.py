@@ -8,12 +8,15 @@ all-gathers of params (ZeRO's documented comm overhead).
 """
 from __future__ import annotations
 
+import os
+
 import subprocess
 import sys
 import textwrap
 
-from benchmarks.common import emit, header
+from benchmarks.common import emit, header, subprocess_env
 from repro.configs import get_config
+
 
 
 def analytic() -> None:
@@ -63,7 +66,7 @@ SCRIPT = textwrap.dedent(
 def compiled_small_mesh() -> None:
     r = subprocess.run(
         [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
-        timeout=900, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        timeout=900, env=subprocess_env(),
         cwd="/root/repo",
     )
     for ln in r.stdout.splitlines():

@@ -7,6 +7,7 @@
 
     PYTHONPATH=src python examples/pipeline_demo.py
 """
+import os
 import subprocess
 import sys
 import textwrap
@@ -16,6 +17,15 @@ from repro.core.partitioner import (
     dp_pp_search, dynprog_partition, heuristic_partition, layer_costs_from_config,
 )
 from repro.core.pipeline import SCHEDULES, simulate
+
+def _subprocess_env():
+    """Inherit the environment (JAX_PLATFORMS etc. — a bare env hangs jax
+    backend probing on CPU containers); scripts set their own XLA_FLAGS."""
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    return env
+
+
 
 
 def main() -> None:
@@ -41,7 +51,7 @@ def main() -> None:
     print("\nexecutable GPipe on 4 simulated devices:")
     r = subprocess.run(
         [sys.executable, "-c", _RUNNER], text=True, timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        env=_subprocess_env(),
     )
     assert r.returncode == 0
     print("pipeline_demo OK")

@@ -7,9 +7,19 @@ collective traffic per stage.
 
     PYTHONPATH=src python examples/zero_fsdp_demo.py
 """
+import os
 import subprocess
 import sys
 import textwrap
+
+def _subprocess_env():
+    """Inherit the environment (JAX_PLATFORMS etc. — a bare env hangs jax
+    backend probing on CPU containers); scripts set their own XLA_FLAGS."""
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    return env
+
+
 
 SCRIPT = textwrap.dedent(
     """
@@ -62,7 +72,7 @@ SCRIPT = textwrap.dedent(
 def main() -> None:
     r = subprocess.run(
         [sys.executable, "-c", SCRIPT], text=True, timeout=1800,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        env=_subprocess_env(),
         cwd=".",
     )
     assert r.returncode == 0

@@ -1,0 +1,35 @@
+"""jax version-compatibility shims.
+
+``shard_map`` was promoted from ``jax.experimental.shard_map`` to the
+top-level namespace (and its ``check_rep`` flag renamed ``check_vma``) in
+newer jax releases, and ``jax.lax.axis_size`` only exists on the new side;
+the containers this repo runs on may carry either. Route every use through
+here.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(axis_name):
+    """Size of a bound mesh axis (inside shard_map/pmap)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)  # jax <= 0.4.x
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )
+
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+        kw = {} if check_vma is None else {"check_rep": check_vma}
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )

@@ -349,6 +349,8 @@ def pipeline_apply(
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as Pspec
 
+    from repro.compat import shard_map
+
     P_count = mesh.shape[axis]
     x0 = jax.tree.map(lambda m: m[0], microbatches)
     M = jax.tree.leaves(microbatches)[0].shape[0]
@@ -385,7 +387,7 @@ def pipeline_apply(
     pspec = jax.tree.map(lambda _: Pspec(axis), stage_params)
     mspec = jax.tree.map(lambda _: Pspec(), microbatches)
     ospec = jax.tree.map(lambda _: Pspec(), microbatches)
-    fn = jax.shard_map(
+    fn = shard_map(
         inner, mesh=mesh, in_specs=(pspec, mspec), out_specs=ospec,
         check_vma=False,
     )

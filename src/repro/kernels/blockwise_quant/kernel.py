@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.blockwise_quant.ref import BLOCK, dynamic_map
+from repro.kernels.runtime import resolve_interpret
 
 TILE_ROWS = 64
 
@@ -52,7 +53,8 @@ def _dequant_kernel(idx_ref, scale_ref, codes_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def quantize_pallas(x: jax.Array, block: int = BLOCK, interpret: bool = True):
+def quantize_pallas(x: jax.Array, block: int = BLOCK, interpret=None):
+    interpret = resolve_interpret(interpret)
     n = x.size
     assert n % block == 0, (n, block)
     rows = n // block
@@ -83,8 +85,9 @@ def quantize_pallas(x: jax.Array, block: int = BLOCK, interpret: bool = True):
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def dequantize_pallas(
-    idx: jax.Array, scale: jax.Array, block: int = BLOCK, interpret: bool = True
+    idx: jax.Array, scale: jax.Array, block: int = BLOCK, interpret=None
 ):
+    interpret = resolve_interpret(interpret)
     rows = idx.size // block
     assert rows % TILE_ROWS == 0, (rows, TILE_ROWS)
     codes = jnp.asarray(dynamic_map())[None, :]

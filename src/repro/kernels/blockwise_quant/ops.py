@@ -1,7 +1,8 @@
 """Public blockwise-quant ops: pad-to-block, kernel/ref routing.
 
-On this CPU container the Pallas kernel runs in interpret mode; on TPU set
-``interpret=False`` (the kernel is written against BlockSpec/VMEM tiling).
+Interpret-vs-compiled execution is resolved centrally by
+``repro.kernels.runtime`` (interpret off TPU, ``REPRO_PALLAS_INTERPRET``
+override); pass ``interpret`` explicitly only to force a mode.
 ``backend="ref"`` uses the pure-jnp oracle (fastest under jit on CPU — the
 interpret-mode kernel is for validation, not speed).
 """
@@ -28,7 +29,7 @@ def _pad(n: int, block: int) -> int:
 
 
 def quantize(
-    x: jax.Array, block: int = BLOCK, backend: str = "ref", interpret: bool = True
+    x: jax.Array, block: int = BLOCK, backend: str = "ref", interpret=None
 ) -> Tuple[jax.Array, jax.Array, int]:
     """Flattens, zero-pads to a tile multiple, quantizes.
 
@@ -53,7 +54,7 @@ def dequantize(
     shape,
     block: int = BLOCK,
     backend: str = "ref",
-    interpret: bool = True,
+    interpret=None,
 ) -> jax.Array:
     if backend == "pallas":
         flat = dequantize_pallas(codes, scales, block=block, interpret=interpret)

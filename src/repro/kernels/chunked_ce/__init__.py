@@ -1,0 +1,1 @@
+from repro.kernels.chunked_ce.ops import chunked_ce  # noqa: F401

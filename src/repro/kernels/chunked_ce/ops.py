@@ -1,0 +1,118 @@
+"""Vocab-chunked cross-entropy head with a custom VJP.
+
+For small models with large vocabularies the dominant activation term of the
+training step is the (B, S, V) logits tensor plus its equally-sized gradient
+(survey §2.2). This op computes the two per-position statistics the loss
+needs — the label logit and the partition logsumexp — by scanning the head
+matmul over vocab chunks, so only one (B, S, chunk) tile is ever live:
+
+  forward   online logsumexp over chunks (running max / sum-exp carry) and
+            a compare-gather of the label logit; saves only x, w and logz.
+  backward  re-scans the chunks: d logits_c = dlogz * softmax_c, folded into
+            dx and dw immediately; the label one-hot terms are a gather
+            (dll * w[labels] into dx) and a scatter-add (dll * x into dw).
+
+Neither direction materializes (B, S, V); the (V, d) weight gradient is the
+only vocab-sized array, and that is parameter-shaped, not activation-shaped.
+The dense oracle lives in ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _chunk_weights(w: jax.Array, chunk: int):
+    """Pad (V, d) to a chunk multiple; returns ((n, C, d) f32, (n, C) ids)."""
+    V, d = w.shape
+    C = min(chunk, V)
+    Vp = (V + C - 1) // C * C
+    wf = w.astype(jnp.float32)
+    if Vp != V:
+        wf = jnp.pad(wf, ((0, Vp - V), (0, 0)))
+    ids = jnp.arange(Vp, dtype=jnp.int32).reshape(Vp // C, C)
+    return wf.reshape(Vp // C, C, d), ids, V
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def chunked_ce(
+    x: jax.Array, w: jax.Array, labels: jax.Array, chunk: int = 2048
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d); w: (V, d) vocab-major; labels: (B, S) int in [0, V).
+
+    Returns (label_logit (B, S), logz (B, S)), both f32. Matches
+    ``ref.chunked_ce_ref`` without ever materializing (B, S, V) logits.
+    """
+    (ll, logz), _ = _fwd(x, w, labels, chunk)
+    return ll, logz
+
+
+def _fwd(x, w, labels, chunk):
+    xf = x.astype(jnp.float32)
+    wc, ids, V = _chunk_weights(w, chunk)
+    B, S = labels.shape
+
+    def body(carry, sl):
+        m, l, ll = carry
+        w_c, id_c = sl
+        logits = jnp.einsum("bsd,cd->bsc", xf, w_c)          # (B, S, C)
+        valid = (id_c < V)[None, None, :]
+        logits = jnp.where(valid, logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        l = l * jnp.exp(m - m_new) + jnp.sum(
+            jnp.where(valid, jnp.exp(logits - m_new[..., None]), 0.0), axis=-1
+        )
+        ll = ll + jnp.sum(
+            jnp.where(labels[..., None] == id_c[None, None, :], logits, 0.0),
+            axis=-1,
+        )
+        return (m_new, l, ll), None
+
+    init = (
+        jnp.full((B, S), NEG_INF, jnp.float32),
+        jnp.zeros((B, S), jnp.float32),
+        jnp.zeros((B, S), jnp.float32),
+    )
+    (m, l, ll), _ = jax.lax.scan(body, init, (wc, ids))
+    logz = m + jnp.log(jnp.maximum(l, 1e-30))
+    return (ll, logz), (x, w, labels, logz)
+
+
+def _bwd(chunk, res, cts):
+    x, w, labels, logz = res
+    dll, dlogz = cts
+    xf = x.astype(jnp.float32)
+    wc, ids, V = _chunk_weights(w, chunk)
+
+    def body(dx, sl):
+        w_c, id_c = sl
+        logits = jnp.einsum("bsd,cd->bsc", xf, w_c)
+        valid = (id_c < V)[None, None, :]
+        p = jnp.where(valid, jnp.exp(logits - logz[..., None]), 0.0)
+        dlog = dlogz[..., None] * p                          # (B, S, C)
+        dx = dx + jnp.einsum("bsc,cd->bsd", dlog, w_c)
+        dw_c = jnp.einsum("bsc,bsd->cd", dlog, xf)
+        return dx, dw_c
+
+    dx, dw_chunks = jax.lax.scan(body, jnp.zeros_like(xf), (wc, ids))
+    d = w.shape[1]
+    dw = dw_chunks.reshape(-1, d)[:V]
+    # label one-hot terms: gather into dx, scatter-add into dw
+    dx = dx + dll[..., None] * jnp.take(w.astype(jnp.float32), labels, axis=0)
+    dw = dw.at[labels.reshape(-1)].add(
+        (dll[..., None] * xf).reshape(-1, d)
+    )
+    return (
+        dx.astype(x.dtype),
+        dw.astype(w.dtype),
+        np.zeros(labels.shape, jax.dtypes.float0),
+    )
+
+
+chunked_ce.defvjp(_fwd, _bwd)

@@ -1,0 +1,26 @@
+"""Dense oracle for the chunked cross-entropy head.
+
+Materializes the full (B, S, V) logits — this is exactly the activation the
+chunked op exists to avoid; it is the correctness reference only.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_ce_ref(
+    x: jax.Array, w: jax.Array, labels: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d); w: (V, d) vocab-major; labels: (B, S) int in [0, V).
+
+    Returns (label_logit (B, S), logz (B, S)), both f32.
+    """
+    logits = jnp.einsum(
+        "bsd,vd->bsv", x.astype(jnp.float32), w.astype(jnp.float32)
+    )
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return ll, logz

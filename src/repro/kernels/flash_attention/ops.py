@@ -1,7 +1,11 @@
 """Public flash-attention op in the model's (B, S, Kv, G, hd) layout.
 
-Forward runs the Pallas kernel; backward (custom_vjp) recomputes with the
-pure-JAX reference — flash memory profile, oracle-exact gradients.
+Kernel-fused in both directions: the forward Pallas kernel saves per-row
+softmax stats (``lse``) alongside the output; the backward (custom_vjp) runs
+the two-pass Pallas dq / dk+dv kernels (``kernel_bwd``) which recompute tile
+scores from the saved stats — flash memory profile without replaying the
+pure-JAX reference. The reference (``ref.py``) remains the correctness
+oracle for both directions.
 """
 from __future__ import annotations
 
@@ -11,8 +15,28 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention.kernel import flash_attention_flat
-from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.flash_attention.kernel import flash_attention_fwd_flat
+from repro.kernels.flash_attention.kernel_bwd import flash_attention_bwd_flat
+
+
+def _flatten_q(q: jax.Array) -> jax.Array:
+    B, S, Kv, G, hd = q.shape
+    return q.transpose(0, 2, 3, 1, 4).reshape(B * Kv * G, S, hd)
+
+
+def _unflatten_q(qf: jax.Array, B: int, Kv: int, G: int) -> jax.Array:
+    BH, S, hd = qf.shape
+    return qf.reshape(B, Kv, G, S, hd).transpose(0, 3, 1, 2, 4)
+
+
+def _flatten_kv(k: jax.Array) -> jax.Array:
+    B, Sk, Kv, hd = k.shape
+    return k.transpose(0, 2, 1, 3).reshape(B * Kv, Sk, hd)
+
+
+def _unflatten_kv(kf: jax.Array, B: int, Kv: int) -> jax.Array:
+    BKv, Sk, hd = kf.shape
+    return kf.reshape(B, Kv, Sk, hd).transpose(0, 2, 1, 3)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
@@ -22,33 +46,37 @@ def flash_attention(
     v: jax.Array,
     causal: bool = True,
     window: int = 0,
-    interpret: bool = True,
+    interpret=None,
 ) -> jax.Array:
     """q: (B, S, Kv, G, hd) pre-scaled; k/v: (B, Sk, Kv, hd) -> (B, S, Kv, G, hd)."""
-    B, S, Kv, G, hd = q.shape
-    Sk = k.shape[1]
-    qf = q.transpose(0, 2, 3, 1, 4).reshape(B * Kv * G, S, hd)
-    kf = k.transpose(0, 2, 1, 3).reshape(B * Kv, Sk, hd)
-    vf = v.transpose(0, 2, 1, 3).reshape(B * Kv, Sk, hd)
-    of = flash_attention_flat(
-        qf, kf, vf, group=G, causal=causal, window=window, interpret=interpret
-    )
-    return of.reshape(B, Kv, G, S, hd).transpose(0, 3, 1, 2, 4)
+    out, _ = _fwd(q, k, v, causal, window, interpret)
+    return out
 
 
 def _fwd(q, k, v, causal, window, interpret):
-    return flash_attention(q, k, v, causal, window, interpret), (q, k, v)
+    B, S, Kv, G, hd = q.shape
+    qf = _flatten_q(q)
+    kf = _flatten_kv(k)
+    vf = _flatten_kv(v)
+    of, lse = flash_attention_fwd_flat(
+        qf, kf, vf, group=G, causal=causal, window=window, interpret=interpret
+    )
+    return _unflatten_q(of, B, Kv, G), (qf, kf, vf, of, lse)
 
 
 def _bwd(causal, window, interpret, res, dout):
-    q, k, v = res
-    _, vjp = jax.vjp(
-        lambda q_, k_, v_: flash_attention_ref(
-            q_, k_, v_, causal=causal, window=window
-        ),
-        q, k, v,
+    qf, kf, vf, of, lse = res
+    B, S, Kv, G, hd = dout.shape
+    dof = _flatten_q(dout)
+    dqf, dkf, dvf = flash_attention_bwd_flat(
+        qf, kf, vf, of, lse, dof,
+        group=G, causal=causal, window=window, interpret=interpret,
     )
-    return vjp(dout)
+    return (
+        _unflatten_q(dqf, B, Kv, G),
+        _unflatten_kv(dkf, B, Kv),
+        _unflatten_kv(dvf, B, Kv),
+    )
 
 
 flash_attention.defvjp(_fwd, _bwd)

@@ -1,18 +1,32 @@
-"""Pallas TPU fused RMSNorm.
+"""Pallas TPU fused RMSNorm, forward and backward.
 
-One pass per row tile: mean-of-squares reduce, rsqrt, scale — fused so the
-row is read from HBM once (XLA emits separate reduce + multiply kernels when
-the norm is unfused at the boundary of a remat block). Rows tile over the
-grid; the feature dim stays whole in VMEM (d_model <= 8192 -> <= 32 KiB f32
-per row, well inside VMEM at TILE_ROWS=256).
+Forward — one pass per row tile: mean-of-squares reduce, rsqrt, scale —
+fused so the row is read from HBM once (XLA emits separate reduce + multiply
+kernels when the norm is unfused at the boundary of a remat block). Rows tile
+over the grid; the feature dim stays whole in VMEM (d_model <= 8192 ->
+<= 32 KiB f32 per row, well inside VMEM at TILE_ROWS=256).
+
+Backward — fused dx/dscale in the same row tiling. With xhat = x * inv and
+gs = g * scale:
+
+  dx     = inv * (gs - xhat * mean(gs * xhat))     per row
+  dscale = sum_rows g * xhat                       cross-row reduce
+
+The dscale reduce accumulates into a single (1, d) output block revisited by
+every sequential grid step (init at step 0), so x and g are read from HBM
+once for BOTH cotangents — the unfused backward reads x twice (once per
+cotangent) and re-derives inv both times.
 """
 from __future__ import annotations
 
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import resolve_interpret
 
 TILE_ROWS = 256
 
@@ -24,17 +38,41 @@ def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
     o_ref[...] = (x * inv * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
 
 
+def _rmsnorm_bwd_kernel(x_ref, s_ref, g_ref, dx_ref, ds_ref, *, eps: float):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        ds_ref[...] = jnp.zeros_like(ds_ref)
+
+    x = x_ref[...].astype(jnp.float32)                 # (rows, d)
+    g = g_ref[...].astype(jnp.float32)
+    s = s_ref[...].astype(jnp.float32)                 # (1, d)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + eps)
+    xhat = x * inv
+    gs = g * s
+    rowmean = jnp.mean(gs * xhat, axis=-1, keepdims=True)
+    dx_ref[...] = (inv * (gs - xhat * rowmean)).astype(dx_ref.dtype)
+    ds_ref[...] += jnp.sum(g * xhat, axis=0, keepdims=True)
+
+
+def _tile(rows: int) -> Tuple[int, int]:
+    tile = min(TILE_ROWS, rows)
+    pad = (-rows) % tile
+    return tile, pad
+
+
 @functools.partial(jax.jit, static_argnames=("eps", "interpret"))
 def rmsnorm_pallas(
-    x: jax.Array, scale: jax.Array, eps: float = 1e-6, interpret: bool = True
+    x: jax.Array, scale: jax.Array, eps: float = 1e-6, interpret=None
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     orig_shape = x.shape
     d = orig_shape[-1]
     rows = x.size // d
     xr = x.reshape(rows, d)
-    tile = min(TILE_ROWS, rows)
-    # pad rows to a tile multiple
-    pad = (-rows) % tile
+    tile, pad = _tile(rows)
     if pad:
         xr = jnp.pad(xr, ((0, pad), (0, 0)))
     out = pl.pallas_call(
@@ -49,3 +87,41 @@ def rmsnorm_pallas(
         interpret=interpret,
     )(xr, scale[None, :])
     return out[:rows].reshape(orig_shape)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm_bwd_pallas(
+    x: jax.Array, scale: jax.Array, g: jax.Array, eps: float = 1e-6,
+    interpret=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused backward. Returns (dx with x's shape/dtype, dscale (d,) f32)."""
+    interpret = resolve_interpret(interpret)
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = x.size // d
+    xr = x.reshape(rows, d)
+    gr = g.reshape(rows, d)
+    tile, pad = _tile(rows)
+    if pad:
+        # zero rows contribute exact zeros to both dx (sliced off) and dscale
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+        gr = jnp.pad(gr, ((0, pad), (0, 0)))
+    dx, dscale = pl.pallas_call(
+        functools.partial(_rmsnorm_bwd_kernel, eps=eps),
+        grid=((rows + pad) // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(((rows + pad), d), x.dtype),
+            jax.ShapeDtypeStruct((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xr, scale[None, :], gr)
+    return dx[:rows].reshape(orig_shape), dscale[0]

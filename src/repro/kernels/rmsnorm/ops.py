@@ -1,12 +1,11 @@
-"""Fused RMSNorm op: Pallas forward, oracle-recompute backward."""
+"""Fused RMSNorm op: Pallas forward AND fused dx/dscale Pallas backward."""
 from __future__ import annotations
 
 import functools
 
 import jax
 
-from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
-from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.rmsnorm.kernel import rmsnorm_bwd_pallas, rmsnorm_pallas
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
@@ -20,8 +19,8 @@ def _fwd(x, scale, eps):
 
 def _bwd(eps, res, dout):
     x, scale = res
-    _, vjp = jax.vjp(lambda x_, s_: rmsnorm_ref(x_, s_, eps), x, scale)
-    return vjp(dout)
+    dx, dscale = rmsnorm_bwd_pallas(x, scale, dout, eps=eps)
+    return dx, dscale.astype(scale.dtype)
 
 
 rmsnorm.defvjp(_fwd, _bwd)

@@ -1,0 +1,36 @@
+"""Central Pallas execution-mode policy for every kernel in this package.
+
+All kernel entry points take ``interpret=None`` and resolve it here instead of
+hard-coding per-call-site literals: on a TPU backend the kernels run compiled,
+anywhere else (the CPU containers this repo's tests run on) they run in
+interpret mode. ``REPRO_PALLAS_INTERPRET=0|1`` overrides the platform detect —
+useful for forcing interpret-mode validation on TPU or asserting that compiled
+lowering is exercised in CI.
+
+Note: kernel wrappers are jitted with ``interpret`` as a static argument, so
+the environment variable is read at trace time; changing it mid-process only
+affects call signatures not yet traced.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+ENV_VAR = "REPRO_PALLAS_INTERPRET"
+
+_FALSY = ("0", "false", "no", "off")
+
+
+def default_interpret() -> bool:
+    """True when Pallas kernels should run in interpret mode."""
+    env = os.environ.get(ENV_VAR)
+    if env is not None:
+        return env.strip().lower() not in _FALSY
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Resolve a per-call ``interpret`` argument (None -> platform policy)."""
+    return default_interpret() if interpret is None else bool(interpret)

@@ -60,6 +60,8 @@ def make_runtime(cfg: ArchConfig, mesh, shape: ShapeSpec, tc: TrainConfig) -> Ru
         scan_mode=tc.scan_mode,
         ssm_seqpar=tc.ssm_seqpar,
         remat_period=tc.remat_period,
+        fused_backward=tc.fused_backward,
+        use_flash_kernel=tc.fused_backward,
     )
 
 
@@ -208,6 +210,8 @@ def main() -> None:
     ap.add_argument("--zero", type=int, default=1)
     ap.add_argument("--precision", default="f32")
     ap.add_argument("--remat", default="none")
+    ap.add_argument("--fused-backward", action="store_true",
+                    help="fused Pallas backwards + chunked-CE head")
     args = ap.parse_args()
 
     n = len(jax.devices())
@@ -223,7 +227,8 @@ def main() -> None:
     assert cfg is not None, "--full training requires a TPU fleet"
     registry.ARCHITECTURES[cfg.name] = cfg
     tc = TrainConfig(precision=args.precision, remat=args.remat,
-                     zero_stage=args.zero)
+                     zero_stage=args.zero,
+                     fused_backward=args.fused_backward)
     shape = ShapeSpec("cli", args.seq, args.batch, "train")
     jitted, (s_struct, b_struct) = build_train(cfg.name, mesh, tc, shape)
 

@@ -1,6 +1,7 @@
 from repro.models.lm import (  # noqa: F401
     decode_step,
     forward,
+    forward_hidden,
     init_decode_state,
     init_params,
     loss_fn,

@@ -4,9 +4,9 @@ Design notes
 ------------
 * The full-sequence path scans over query chunks so the (S, S) score matrix is
   never materialized — this is the pure-JAX baseline of flash attention; the
-  Pallas kernel in ``repro.kernels.flash_attention`` is its TPU-tiled version
-  (``use_kernel=True`` routes through it via a custom_vjp whose backward
-  recomputes with this reference path).
+  Pallas kernel in ``repro.kernels.flash_attention`` is its TPU-tiled version.
+  ``use_kernel=True`` is kernel-fused in both directions: the custom_vjp
+  backward runs the Pallas dq/dkv kernels from saved (lse) stats.
 * ``window > 0`` means sliding-window (local) attention; the chunked path then
   only reads the (window + chunk) key band per query chunk, so local-attention
   prefill is O(S * window) not O(S^2).

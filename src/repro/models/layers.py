@@ -37,8 +37,19 @@ def init_norm(norm: str, d: int) -> Params:
     return p
 
 
-def norm_apply(p: Params, x: jax.Array, norm: str, eps: float = 1e-6) -> jax.Array:
-    """RMSNorm / LayerNorm in f32, result cast back to x.dtype."""
+def norm_apply(
+    p: Params, x: jax.Array, norm: str, eps: float = 1e-6, fused: bool = False
+) -> jax.Array:
+    """RMSNorm / LayerNorm in f32, result cast back to x.dtype.
+
+    ``fused=True`` routes RMSNorm through the Pallas kernel whose custom_vjp
+    computes dx/dscale in one fused pass (repro.kernels.rmsnorm); LayerNorm
+    has no fused path and falls through to the jnp implementation.
+    """
+    if fused and norm == "rmsnorm":
+        from repro.kernels.rmsnorm import rmsnorm
+
+        return rmsnorm(x, p["scale"], eps)
     dtype = x.dtype
     x = x.astype(jnp.float32)
     if norm == "rmsnorm":

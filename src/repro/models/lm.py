@@ -74,7 +74,7 @@ def encode(cfg: ArchConfig, params: Params, embeds: jax.Array, rt: Runtime) -> j
         enc_cfg, params["enc_stack"], embeds.astype(rt.dtype), rt, specs,
         causal=False,
     )
-    return norm_apply(params["enc_norm"], x, cfg.norm)
+    return norm_apply(params["enc_norm"], x, cfg.norm, fused=rt.fused_backward)
 
 
 # ------------------------------------------------------------------- forward
@@ -94,6 +94,27 @@ def _decoder_input(
     return tok, memory, n_prefix
 
 
+def forward_hidden(
+    cfg: ArchConfig,
+    params: Params,
+    batch: Dict[str, jax.Array],
+    rt: Runtime,
+) -> Tuple[jax.Array, jax.Array]:
+    """Training forward up to (but not including) the vocab projection.
+
+    Returns (hidden (B, S, d) after the final norm, aux). Splitting here lets
+    ``loss_fn`` route the head through the chunked cross-entropy path without
+    ever materializing (B, S, V) logits.
+    """
+    x, memory, _ = _decoder_input(cfg, params, batch, rt)
+    specs = layer_specs(cfg, seq_len=x.shape[1], long_variant=rt.long_variant)
+    x, aux, _ = stack_mod.stack_forward(
+        cfg, params["stack"], x, rt, specs, memory=memory
+    )
+    x = norm_apply(params["final_norm"], x, cfg.norm, fused=rt.fused_backward)
+    return x, aux
+
+
 def forward(
     cfg: ArchConfig,
     params: Params,
@@ -101,12 +122,7 @@ def forward(
     rt: Runtime,
 ) -> Tuple[jax.Array, jax.Array]:
     """Training forward: logits over the full sequence. Returns (logits, aux)."""
-    x, memory, _ = _decoder_input(cfg, params, batch, rt)
-    specs = layer_specs(cfg, seq_len=x.shape[1], long_variant=rt.long_variant)
-    x, aux, _ = stack_mod.stack_forward(
-        cfg, params["stack"], x, rt, specs, memory=memory
-    )
-    x = norm_apply(params["final_norm"], x, cfg.norm)
+    x, aux = forward_hidden(cfg, params, batch, rt)
     logits = logits_apply(params.get("head"), params["embed"], x, cfg.tie_embeddings)
     return logits, aux
 
@@ -118,16 +134,35 @@ def loss_fn(
     rt: Runtime,
     z_loss: float = 1e-4,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """Next-token cross entropy (+ router aux + z-loss). labels -1 are masked."""
-    logits, aux = forward(cfg, params, batch, rt)
+    """Next-token cross entropy (+ router aux + z-loss). labels -1 are masked.
+
+    ``rt.fused_backward`` routes the head through the vocab-chunked CE op
+    (repro.kernels.chunked_ce): same loss/grads as the dense path, but the
+    (B, S, V) logits and their gradient are never materialized at once.
+    """
+    h, aux = forward_hidden(cfg, params, batch, rt)
     labels = batch["labels"]
     if cfg.frontend == "vision":  # image prefix positions carry no loss
         n_prefix = batch["frontend_embeds"].shape[1]
-        logits = logits[:, n_prefix:]
+        h = h[:, n_prefix:]
     mask = (labels >= 0).astype(jnp.float32)
     safe = jnp.maximum(labels, 0)
-    logz = jax.nn.logsumexp(logits, axis=-1)
-    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0] - logz
+    if rt.fused_backward:
+        from repro.kernels.chunked_ce import chunked_ce
+
+        w = (
+            params["embed"]["table"]
+            if cfg.tie_embeddings
+            else params["head"]["w"].T
+        )
+        lab, logz = chunked_ce(h, w, safe, rt.ce_chunk)
+        ll = lab - logz
+    else:
+        logits = logits_apply(
+            params.get("head"), params["embed"], h, cfg.tie_embeddings
+        )
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0] - logz
     denom = jnp.maximum(mask.sum(), 1.0)
     xent = -(ll * mask).sum() / denom
     zl = z_loss * ((logz**2) * mask).sum() / denom

@@ -17,6 +17,9 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+from repro.compat import shard_map
+
 from repro.models.layers import Params, dense_init, subkey
 from repro.models.ssm import _causal_conv
 
@@ -114,7 +117,7 @@ def rglru_apply_seqpar(
 
     def inner(p_, x_):
         dtype = x_.dtype
-        n = jax.lax.axis_size(axis)
+        n = compat.axis_size(axis)
         idx = jax.lax.axis_index(axis)
         u = x_ @ p_["w_in"].astype(dtype)
         gate = jax.nn.gelu(x_ @ p_["w_gate"].astype(dtype))
@@ -144,7 +147,7 @@ def rglru_apply_seqpar(
         h = h_loc + A_cum * h0[:, None]
         return (h.astype(dtype) * gate) @ p_["w_out"].astype(dtype)
 
-    fn = jax.shard_map(inner, mesh=mesh, in_specs=(pspec, xspec), out_specs=xspec)
+    fn = shard_map(inner, mesh=mesh, in_specs=(pspec, xspec), out_specs=xspec)
     return fn(p, x)
 
 

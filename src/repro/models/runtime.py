@@ -24,6 +24,12 @@ class Runtime:
     mesh: Optional[Any] = None       # jax Mesh, required for moe_mode="ep"
     batch_axes: Tuple[str, ...] = () # mesh axes the batch dim is sharded over
     remat: str = "none"              # none | full | dots | offload
+    # Route backward passes through the fused Pallas/chunked paths:
+    # flash-attention dq/dkv kernels (with use_flash_kernel), the fused
+    # RMSNorm dx/dscale kernel, and the vocab-chunked cross-entropy head
+    # that never materializes (B, S, V) logits (survey §2.2).
+    fused_backward: bool = False
+    ce_chunk: int = 2048             # vocab chunk for the fused CE head
     # checkpoint granularity: group this many scan units per checkpoint —
     # the executable form of the §2.1 periodic/binomial plans (a plan with
     # L/k checkpoints == remat="full" at remat_period=k); see

@@ -15,6 +15,9 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+from repro.compat import shard_map
+
 from repro.models.layers import Params, dense_init, subkey
 
 
@@ -159,7 +162,7 @@ def mamba_apply_seqpar(
 
     def inner(p_, x_):
         dtype = x_.dtype
-        n = jax.lax.axis_size(axis)
+        n = compat.axis_size(axis)
         idx = jax.lax.axis_index(axis)
         d_inner = p_["in_proj"].shape[1] // 2
         xz = x_ @ p_["in_proj"].astype(dtype)
@@ -202,7 +205,7 @@ def mamba_apply_seqpar(
 
     # default check_vma=True: replicated param in_specs then transpose to a
     # proper psum of the cotangents in the backward pass
-    fn = jax.shard_map(inner, mesh=mesh, in_specs=(pspec, xspec), out_specs=xspec)
+    fn = shard_map(inner, mesh=mesh, in_specs=(pspec, xspec), out_specs=xspec)
     return fn(p, x)
 
 

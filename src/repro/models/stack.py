@@ -23,6 +23,7 @@ from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.configs.base import ArchConfig
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
@@ -277,7 +278,7 @@ def _ffn_apply(
     aux = jnp.zeros((), jnp.float32)
     if cfg.ffn_kind == "none":
         return x, aux
-    h = norm_apply(p["norm2"], x, cfg.norm)
+    h = norm_apply(p["norm2"], x, cfg.norm, fused=rt.fused_backward)
     if cfg.ffn_kind == "dense":
         out = mlp_apply(p["ffn"], h, cfg.mlp_gated)
     else:
@@ -313,7 +314,7 @@ def _moe_dispatch(
         axes = tuple(rt.batch_axes) + ("model",)
         return out, jax.lax.pmean(aux, axes)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         inner,
         mesh=rt.mesh,
         in_specs=(pspec, bspec),
@@ -334,7 +335,7 @@ def _mixer_apply(
     causal: bool = True,
     cache_len: Optional[int] = None,
 ):
-    h = norm_apply(p["norm1"], x, cfg.norm)
+    h = norm_apply(p["norm1"], x, cfg.norm, fused=rt.fused_backward)
     if spec.kind in ("attn", "local"):
         out, kv = attn_mod.attention_apply(
             p["mixer"], h,
@@ -379,7 +380,7 @@ def _mixer_apply(
 def _cross_apply(
     cfg: ArchConfig, p: Params, x: jax.Array, memory: jax.Array, rt: Runtime
 ) -> jax.Array:
-    h = norm_apply(p["norm_x"], x, cfg.norm)
+    h = norm_apply(p["norm_x"], x, cfg.norm, fused=rt.fused_backward)
     out, _ = attn_mod.attention_apply(
         p["cross"], h,
         n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,

@@ -21,6 +21,7 @@ from typing import Any, Callable, Dict, Iterable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.configs.base import ArchConfig
 from repro.core import compression as comp_mod
 from repro.core.precision import (
@@ -41,6 +42,7 @@ class TrainConfig:
     precision: str = "f32"            # f32 | bf16 | fp16
     remat: str = "none"               # none | full | dots | offload
     remat_period: int = 1             # checkpoint every k-th scan unit (§2.1 plans)
+    fused_backward: bool = False      # fused Pallas backwards + chunked-CE head
     compression: Any = None           # repro.core.compression method or None
     zero_stage: int = 0               # used by the distributed trainer
     moe_mode: str = "auto"            # auto (pjit) | ep (shard_map expert-parallel)
@@ -69,7 +71,9 @@ def make_state(
 def _runtime(cfg: ArchConfig, tc: TrainConfig) -> Runtime:
     policy = getattr(PrecisionPolicy, tc.precision)()
     return Runtime(dtype=policy.compute_dtype, remat=tc.remat,
-                   remat_period=tc.remat_period)
+                   remat_period=tc.remat_period,
+                   fused_backward=tc.fused_backward,
+                   use_flash_kernel=tc.fused_backward)
 
 
 def make_train_step(
@@ -153,7 +157,7 @@ def make_train_step(
 
             bspec = jax.tree.map(lambda _: P(data_axis), batch)
             sspec = jax.tree.map(lambda _: P(), state)
-            fn = jax.shard_map(
+            fn = shard_map(
                 inner, mesh=mesh,
                 in_specs=(sspec, bspec),
                 out_specs=(sspec, jax.tree.map(lambda _: P(), _metric_struct())),

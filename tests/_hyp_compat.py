@@ -1,0 +1,38 @@
+"""Optional-hypothesis shim so the tier-1 suite runs on a bare interpreter.
+
+Test modules do ``from _hyp_compat import hypothesis, st`` instead of a hard
+``import hypothesis``. When hypothesis is installed the real module is passed
+through and the property tests run; when it is missing only the
+``@hypothesis.given`` tests skip (with an importorskip-style reason) while
+the rest of the module still collects and runs.
+"""
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare interpreters
+    HAVE_HYPOTHESIS = False
+
+    class _Strategies:
+        """Placeholder strategy factory: args are never drawn, only displayed."""
+
+        def __getattr__(self, name):
+            def strategy(*args, **kwargs):
+                return None
+
+            return strategy
+
+    class _Hypothesis:
+        def given(self, *args, **kwargs):
+            return pytest.mark.skip(
+                reason="could not import 'hypothesis' (property test)"
+            )
+
+        def settings(self, *args, **kwargs):
+            return lambda fn: fn
+
+    hypothesis = _Hypothesis()
+    st = _Strategies()

@@ -1,0 +1,10 @@
+"""Shared env for tests that spawn jax subprocesses on simulated devices."""
+import os
+
+
+def subprocess_env():
+    """Inherit the environment (JAX_PLATFORMS etc. — a bare env hangs jax
+    backend probing on CPU containers); scripts set their own XLA_FLAGS."""
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    return env

@@ -4,8 +4,9 @@ import subprocess
 import sys
 import textwrap
 
-import hypothesis
-import hypothesis.strategies as st
+from _subproc import subprocess_env
+
+from _hyp_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -123,6 +124,7 @@ MULTIDEV_SCRIPT = textwrap.dedent(
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
     from repro.core.compression import TopK, QSGD, init_state, sync
 
     mesh = jax.make_mesh((8,), ("data",))
@@ -133,7 +135,7 @@ MULTIDEV_SCRIPT = textwrap.dedent(
         ghat, _, _ = sync(QSGD(8), grads, None, axis_name="data")
         return ghat["w"][None]
 
-    fn = jax.jit(jax.shard_map(per_shard, mesh=mesh,
+    fn = jax.jit(shard_map(per_shard, mesh=mesh,
         in_specs=P("data"), out_specs=P("data"), check_vma=False))
     out = np.asarray(fn(g_global))
     want = np.asarray(jnp.mean(g_global, 0))
@@ -151,7 +153,7 @@ def test_multidevice_compressed_sync_subprocess():
     r = subprocess.run(
         [sys.executable, "-c", MULTIDEV_SCRIPT],
         capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        env=subprocess_env(),
         cwd="/root/repo",
     )
     assert r.returncode == 0, r.stderr[-3000:]

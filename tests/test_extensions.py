@@ -1,7 +1,6 @@
 """Tests for the beyond-baseline extensions: pipeline partitioners,
 4-bit optimizer + GradScale, 1-bit Adam."""
-import hypothesis
-import hypothesis.strategies as st
+from _hyp_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,6 +1,5 @@
 """Blockwise-quant + rmsnorm kernels: sweeps vs oracles (+ hypothesis)."""
-import hypothesis
-import hypothesis.strategies as st
+from _hyp_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

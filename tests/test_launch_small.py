@@ -4,11 +4,15 @@ reduced archs x all four shape kinds must lower + compile + RUN a step.
 This is the executable twin of the 512-device dry-run: same build_train /
 build_prefill / build_decode code, real numerics on 4 fake devices.
 """
+import os
 import subprocess
 import sys
 import textwrap
 
+from _subproc import subprocess_env
+
 import pytest
+
 
 SCRIPT = textwrap.dedent(
     """
@@ -88,7 +92,7 @@ def test_launch_small_mesh(arch, zero):
     r = subprocess.run(
         [sys.executable, "-c", SCRIPT.format(arch=arch, zero=zero)],
         capture_output=True, text=True, timeout=1200,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        env=subprocess_env(),
         cwd="/root/repo",
     )
     assert r.returncode == 0, r.stderr[-4000:]

@@ -1,6 +1,5 @@
 """Model-internals unit + property tests: RoPE, masks, MoE dispatch, stacks."""
-import hypothesis
-import hypothesis.strategies as st
+from _hyp_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

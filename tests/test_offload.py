@@ -1,6 +1,5 @@
 """Offload planners (survey §2.2, Table 3)."""
-import hypothesis
-import hypothesis.strategies as st
+from _hyp_compat import hypothesis, st
 import pytest
 
 from repro.core.offload import (

@@ -1,11 +1,15 @@
 """Pipeline schedules: simulator invariants (Table 4) + executable GPipe."""
+import os
 import subprocess
 import sys
 import textwrap
 
+from _subproc import subprocess_env
+
 import pytest
 
 from repro.core.pipeline import SCHEDULES, simulate
+
 
 
 def test_gpipe_bubble_closed_form():
@@ -111,7 +115,7 @@ def test_executable_gpipe_matches_sequential():
     r = subprocess.run(
         [sys.executable, "-c", RUNNER_SCRIPT],
         capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        env=subprocess_env(),
         cwd="/root/repo",
     )
     assert r.returncode == 0, r.stderr[-3000:]

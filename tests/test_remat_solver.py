@@ -1,6 +1,5 @@
 """Remat solvers: optimality vs brute force + policy sanity (+ hypothesis)."""
-import hypothesis
-import hypothesis.strategies as st
+from _hyp_compat import hypothesis, st
 import pytest
 
 from repro.core.remat_solver import (

@@ -2,9 +2,13 @@
 
 Runs on 4 simulated devices in a subprocess; asserts the sharded scan's
 outputs and gradients match the single-device reference."""
+import os
 import subprocess
 import sys
 import textwrap
+
+from _subproc import subprocess_env
+
 
 SCRIPT = textwrap.dedent(
     """
@@ -55,7 +59,7 @@ def test_seqpar_matches_local():
     r = subprocess.run(
         [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
         timeout=600,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        env=subprocess_env(),
         cwd="/root/repo",
     )
     assert r.returncode == 0, r.stderr[-4000:]
