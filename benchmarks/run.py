@@ -21,6 +21,7 @@ MODULES = [
     "benchmarks.compression_bench",
     "benchmarks.lowbit_bench",
     "benchmarks.kernels_bench",
+    "benchmarks.serve_bench",
     "benchmarks.roofline_report",
 ]
 

@@ -1,0 +1,137 @@
+"""Pallas TPU paged decode attention: block-table-gathered K/V pages.
+
+Grid = (B, Kv, n_pages): one program row per (request slot, kv head), the
+innermost page axis executed sequentially per core carrying the online-
+softmax state (m, l, acc) in VMEM scratch — the decode-shaped sibling of the
+flash forward kernel (``kernels/flash_attention/kernel.py``).
+
+The page gather is the point of the kernel: ``tables`` (B, P) rides in as a
+scalar-prefetch operand (``pltpu.PrefetchScalarGridSpec``), so the k/v
+BlockSpec index_maps can address pool page ``tables[b, j]`` directly — each
+(page, hd) tile is DMA'd straight out of the global pool in HBM without ever
+materializing a gathered (B, S, hd) key band.
+
+GQA: the G query heads sharing a kv head sit in one (G, hd) q tile, so group
+accumulation is a single (G, page) score tile on the MXU. Per-request
+``lengths`` mask the tail page (non-page-multiple lengths) and — combined
+with ``window`` — the sliding-window band, via explicit mask multiplies
+(fully-masked pages contribute exact zeros, never NaNs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.runtime import resolve_interpret
+
+NEG_INF = -1e30
+
+
+def _pa_kernel(
+    tables_ref,   # scalar prefetch (B, P) int32
+    lengths_ref,  # scalar prefetch (B,) int32
+    q_ref,        # (1, 1, G, hd)
+    k_ref,        # (1, page, 1, hd) — pool page selected by index_map
+    v_ref,
+    o_ref,        # (1, 1, G, hd)
+    m_scr, l_scr, acc_scr,
+    *, page: int, n_pages: int, window: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    L = lengths_ref[b]                                   # valid tokens (>= 1)
+
+    # Pages at or beyond the request's extent contribute nothing; skip them.
+    @pl.when(j * page < L)
+    def _accumulate():
+        q = q_ref[0, 0].astype(jnp.float32)              # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)           # (page, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )                                                # (G, page)
+
+        G = scores.shape[0]
+        kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (G, page), 1)
+        t = L - 1                                        # query position
+        mask = kpos <= t
+        if window > 0:
+            mask = jnp.logical_and(mask, kpos > t - window)
+
+        scores = jnp.where(mask, scores, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1))
+        p = jnp.where(mask, jnp.exp(scores - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attention_kernel(
+    q: jax.Array,        # (B, Kv, G, hd) pre-scaled
+    k_pages: jax.Array,  # (N, page, Kv, hd)
+    v_pages: jax.Array,
+    tables: jax.Array,   # (B, P) int32, padding entries 0 (null page)
+    lengths: jax.Array,  # (B,) int32
+    *,
+    window: int = 0,
+    interpret=None,
+) -> jax.Array:
+    """Returns (B, Kv, G, hd); see module docstring for the tiling."""
+    interpret = resolve_interpret(interpret)
+    B, Kv, G, hd = q.shape
+    page = k_pages.shape[1]
+    P = tables.shape[1]
+
+    kernel = functools.partial(
+        _pa_kernel, page=page, n_pages=P, window=window
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Kv, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, k, j, tbl, ln: (b, k, 0, 0)),
+            pl.BlockSpec(
+                (1, page, 1, hd), lambda b, k, j, tbl, ln: (tbl[b, j], 0, k, 0)
+            ),
+            pl.BlockSpec(
+                (1, page, 1, hd), lambda b, k, j, tbl, ln: (tbl[b, j], 0, k, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, G, hd), lambda b, k, j, tbl, ln: (b, k, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Kv, G, hd), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pages, v_pages)

@@ -1,0 +1,36 @@
+"""Public paged decode-attention op + page-layout helpers.
+
+``paged_attention`` routes between the Pallas kernel (``kernel.py``) and the
+pure-jnp oracle (``ref.py``); the kernel is the TPU path, the oracle doubles
+as the fast CPU path (interpret-mode Pallas inside a decode scan is far
+slower than one gather + einsum). Both share the exact layout contract
+documented in ``ref.py``.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention_kernel
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def paged_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    tables: jax.Array,
+    lengths: jax.Array,
+    *,
+    window: int = 0,
+    use_kernel: bool = True,
+    interpret=None,
+) -> jax.Array:
+    """q: (B, Kv, G, hd) pre-scaled; pools (N, page, Kv, hd) -> (B, Kv, G, hd)."""
+    if use_kernel:
+        return paged_attention_kernel(
+            q, k_pages, v_pages, tables, lengths,
+            window=window, interpret=interpret,
+        )
+    return paged_attention_ref(
+        q, k_pages, v_pages, tables, lengths, window=window
+    )

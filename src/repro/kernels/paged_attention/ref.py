@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for paged decode attention.
+
+One decode token per request slot attends over that request's KV history,
+which lives scattered across a global page pool and is addressed through a
+per-request block table — the inference-side analogue of the survey's
+virtualized tensor memory (vDNN-style paging).
+
+Layouts (match ``repro.models.attention`` conventions):
+  q        (B, Kv, G, hd)   pre-scaled by hd^-0.5, roped at position L-1
+  k_pages  (N, page, Kv, hd) global pool; page 0 is the reserved null page
+  v_pages  (N, page, Kv, hd)
+  tables   (B, P) int32      page ids per request (padding entries -> 0)
+  lengths  (B,) int32        valid tokens per request (incl. current token)
+
+The oracle gathers the full (B, P*page) key band and masks by absolute
+position, so it is exact for non-page-multiple lengths and sliding windows.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    tables: jax.Array,
+    lengths: jax.Array,
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Returns (B, Kv, G, hd). Query position is ``lengths - 1`` per slot."""
+    B, Kv, G, hd = q.shape
+    page = k_pages.shape[1]
+    P = tables.shape[1]
+
+    k = k_pages[tables].reshape(B, P * page, Kv, hd)   # gather via block table
+    v = v_pages[tables].reshape(B, P * page, Kv, hd)
+
+    scores = jnp.einsum(
+        "bkgh,bskh->bkgs", q.astype(jnp.float32), k.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    kpos = jnp.arange(P * page, dtype=jnp.int32)[None, :]          # (1, S)
+    t = (lengths - 1)[:, None]                                     # query pos
+    valid = kpos <= t
+    if window > 0:
+        valid = valid & (kpos > t - window)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", w.astype(v.dtype), v)
+    return out.astype(q.dtype)

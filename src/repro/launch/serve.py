@@ -1,12 +1,21 @@
-"""Serving launcher: batched generation driver on whatever devices exist.
+"""Serving launcher: continuous-batching engine / batched generation driver.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
         --batch 4 --prompt-len 32 --new-tokens 32
+
+    # continuous batching over the paged KV pool (variable-length requests):
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --paged \
+        --requests 8 --slots 4 --page-size 16
 
 With ``--reduced`` (the CPU-container mode) a smoke-size variant of the
 architecture family is instantiated and driven through the real prefill +
 decode path. Without it, the full config is built (requires a TPU fleet;
 params are initialized sharded via the dry-run shardings).
+
+``--paged`` routes through ``repro.serve.ServeEngine``: requests with
+varying prompt lengths are admitted into fixed decode slots against the
+paged KV-cache pool; unsupported families (SSM / enc-dec) fall back to the
+dense path automatically.
 """
 from __future__ import annotations
 
@@ -19,6 +28,7 @@ import numpy as np
 
 from repro.configs import ASSIGNED, get_config, get_reduced
 from repro.models import Runtime, init_params
+from repro.serve import EngineConfig, ServeEngine, paged_supported
 from repro.train import generate
 
 
@@ -32,13 +42,58 @@ def main() -> None:
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="continuous batching over the paged KV pool")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="number of variable-length requests (--paged)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--kernel", action="store_true",
+                    help="route decode through the Pallas paged kernel")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     rt = Runtime(dtype=jnp.float32 if args.reduced else jnp.bfloat16, chunk_q=32)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
-
     rng = np.random.RandomState(args.seed)
+
+    if args.paged:
+        paged = paged_supported(cfg)
+        if not paged:
+            print(f"{cfg.name}: family {cfg.family!r} -> dense fallback")
+        eng = ServeEngine(
+            cfg, params, rt,
+            EngineConfig.sized_for(
+                args.prompt_len + cfg.frontend_tokens, args.new_tokens,
+                slots=args.slots, page_size=args.page_size, headroom=2.0,
+                temperature=args.temperature, seed=args.seed,
+                use_kernel=args.kernel,
+                prefill_bucket=args.page_size,  # random lengths: bound compiles
+            ),
+            paged=paged,
+        )
+        rids = []
+        for _ in range(args.requests):
+            plen = rng.randint(max(args.prompt_len // 2, 1), args.prompt_len + 1)
+            tokens = rng.randint(0, cfg.vocab_size, (plen,)).astype(np.int32)
+            fe = (
+                rng.randn(cfg.frontend_tokens, cfg.d_model).astype(np.float32)
+                if cfg.frontend is not None else None
+            )
+            rids.append(eng.submit(tokens, args.new_tokens, frontend_embeds=fe))
+        out = eng.run()
+        s = eng.stats
+        ttft = np.mean(list(s["ttft_s"].values()))
+        print(
+            f"{cfg.name} [{cfg.family}] paged={eng.paged}: "
+            f"{sum(len(v) for v in out.values())} tokens, "
+            f"{s['tokens_per_s']:.1f} tok/s, mean TTFT {ttft * 1e3:.0f}ms, "
+            f"evictions={s.get('evictions', 0)}"
+        )
+        for rid in rids[:2]:
+            print(f"  req[{rid}]: {out[rid][:12].tolist()}...")
+        return
+
     batch = {
         "tokens": jnp.asarray(
             rng.randint(0, cfg.vocab_size, (args.batch, args.prompt_len)),

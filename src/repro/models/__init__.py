@@ -1,8 +1,10 @@
 from repro.models.lm import (  # noqa: F401
     decode_step,
+    decode_step_paged,
     forward,
     forward_hidden,
     init_decode_state,
+    init_paged_state,
     init_params,
     loss_fn,
     prefill,

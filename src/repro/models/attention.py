@@ -232,3 +232,74 @@ def attention_decode(
     w = _softmax(scores, valid[None, None, None, :]).astype(dtype)
     out = jnp.einsum("bkgs,bskh->bkgh", w, v_c).reshape(B, 1, n_heads * head_dim)
     return out @ p["wo"].astype(dtype), {"k": k_c, "v": v_c, "pos": pos_c}
+
+
+# ------------------------------------------------------------- paged caching
+def init_paged_kv_cache(
+    num_pages: int, page_size: int, n_kv: int, head_dim: int, dtype
+) -> Dict[str, jax.Array]:
+    """Per-layer KV page pool. Page 0 is the reserved null/trash page: block
+    table padding and inactive-slot writes are routed there, and reads of it
+    are always masked (or discarded with the slot's output)."""
+    return {
+        "kp": jnp.zeros((num_pages, page_size, n_kv, head_dim), dtype),
+        "vp": jnp.zeros((num_pages, page_size, n_kv, head_dim), dtype),
+    }
+
+
+def attention_decode_paged(
+    p: Params,
+    x: jax.Array,
+    cache: Dict[str, jax.Array],
+    tables: jax.Array,
+    lengths: jax.Array,
+    active: jax.Array,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    theta: float,
+    window: int = 0,
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode token per slot against the paged KV pool.
+
+    x: (B, 1, d); cache: {"kp","vp"} (N, page, Kv, hd); tables: (B, P) int32;
+    lengths: (B,) int32 tokens already cached per slot (the new token's
+    position); active: (B,) bool — inactive slots write to the null page and
+    their output is garbage by contract (the serve engine discards it).
+
+    Unlike ``attention_decode``'s ring buffer, every slot here has its own
+    position, so continuous batching can mix requests at different depths.
+    """
+    from repro.kernels.paged_attention import paged_attention
+
+    B = x.shape[0]
+    dtype = x.dtype
+    G = n_heads // n_kv
+    page = cache["kp"].shape[1]
+
+    pos = lengths[:, None].astype(jnp.int32)                   # (B, 1)
+    q = rope_apply(_split_heads(x @ p["wq"].astype(dtype), n_heads, head_dim),
+                   pos, theta)
+    k_new = rope_apply(_split_heads(x @ p["wk"].astype(dtype), n_kv, head_dim),
+                       pos, theta)
+    v_new = _split_heads(x @ p["wv"].astype(dtype), n_kv, head_dim)
+
+    page_idx = lengths // page
+    in_range = page_idx < tables.shape[1]      # horizon overflow -> null page
+    page_ids = jnp.take_along_axis(
+        tables, jnp.clip(page_idx, 0, tables.shape[1] - 1)[:, None], axis=1
+    )[:, 0]
+    page_ids = jnp.where(active & in_range, page_ids, 0)
+    slot = jnp.where(active & in_range, lengths % page, 0)
+    k_c = cache["kp"].at[page_ids, slot].set(k_new[:, 0])
+    v_c = cache["vp"].at[page_ids, slot].set(v_new[:, 0])
+
+    q = q.reshape(B, n_kv, G, head_dim) * (head_dim ** -0.5)
+    out = paged_attention(
+        q, k_c, v_c, tables, lengths + 1,
+        window=window, use_kernel=use_kernel,
+    )
+    out = out.astype(dtype).reshape(B, 1, n_heads * head_dim)
+    return out @ p["wo"].astype(dtype), {"kp": k_c, "vp": v_c}

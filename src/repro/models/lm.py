@@ -178,11 +178,21 @@ def prefill(
     batch: Dict[str, jax.Array],
     rt: Runtime,
     max_len: Optional[int] = None,
+    gather_pos: Optional[jax.Array] = None,
+    full_cache: bool = False,
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """Forward over the prompt, returning last-position logits + decode cache.
 
     ``max_len`` sizes the kv caches for the decode horizon (default: prompt
     length — i.e. ring-buffer reuse from the first generated token).
+    ``gather_pos`` (traced scalar) selects which position's logits to return
+    instead of the last — the bucketed-prefill path pads prompts to a shape
+    bucket on the right and gathers at the true final position.
+    ``full_cache`` collects every position for sliding-window layers too
+    (cache_len = horizon instead of the window) — required by the paged
+    serve engine, whose pool keeps all positions: a window-sized ring would
+    drop real in-window tokens whenever the prompt is right-padded past the
+    window (bucketed prefill).
     """
     x, memory, _ = _decoder_input(cfg, params, batch, rt)
     S = x.shape[1]
@@ -190,11 +200,21 @@ def prefill(
     cache_specs = layer_specs(
         cfg, seq_len=max_len or S, long_variant=rt.long_variant
     )
+    if full_cache:
+        cache_specs = tuple(
+            s._replace(cache_len=max_len or S)
+            if s.kind in ("attn", "local") else s
+            for s in cache_specs
+        )
     x, _, caches = stack_mod.stack_forward(
         cfg, params["stack"], x, rt, specs, memory=memory, collect_cache=True,
         cache_specs=cache_specs,
     )
-    x = norm_apply(params["final_norm"], x[:, -1:], cfg.norm)
+    if gather_pos is None:
+        x = x[:, -1:]
+    else:
+        x = jax.lax.dynamic_slice_in_dim(x, gather_pos, 1, axis=1)
+    x = norm_apply(params["final_norm"], x, cfg.norm)
     logits = logits_apply(params.get("head"), params["embed"], x, cfg.tie_embeddings)
     state = {"caches": caches, "t": jnp.array(S, jnp.int32)}
     if memory is not None:
@@ -213,6 +233,61 @@ def init_decode_state(
     if cfg.is_encdec:
         state["memory"] = jnp.zeros((B, enc_len, cfg.d_model), rt.dtype)
     return state
+
+
+def init_paged_state(
+    cfg: ArchConfig,
+    B: int,
+    rt: Runtime,
+    *,
+    num_pages: int,
+    page_size: int,
+    max_len: int,
+) -> Dict[str, Any]:
+    """Paged decode state: per-layer KV page pools shared by ``B`` slots.
+
+    ``tables`` rows are all-zero (null page) until the serve engine admits a
+    request into the slot; ``lengths`` count cached tokens per slot.
+    """
+    specs = layer_specs(cfg, seq_len=max_len, long_variant=rt.long_variant)
+    table_width = -(-max_len // page_size)
+    return {
+        "caches": stack_mod.init_stack_pool(cfg, rt, specs, num_pages, page_size),
+        "tables": jnp.zeros((B, table_width), jnp.int32),
+        "lengths": jnp.zeros((B,), jnp.int32),
+    }
+
+
+def decode_step_paged(
+    cfg: ArchConfig,
+    params: Params,
+    state: Dict[str, Any],
+    token: jax.Array,
+    rt: Runtime,
+    max_len: int,
+    active: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One paged decode step; each slot advances at its own position.
+
+    token: (B,) int32. ``active`` masks slots (inactive slots neither write
+    the pool nor advance ``lengths``; their logits are discarded by the
+    caller). Returns (logits (B, V), new state).
+    """
+    specs = layer_specs(cfg, seq_len=max_len, long_variant=rt.long_variant)
+    lengths = state["lengths"]
+    if active is None:
+        active = jnp.ones(lengths.shape, bool)
+    x = embed_apply(params["embed"], token[:, None], rt.dtype)
+    x, caches = stack_mod.stack_decode(
+        cfg, params["stack"], x, state["caches"], lengths, rt, specs,
+        tables=state["tables"], active=active,
+    )
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = logits_apply(params.get("head"), params["embed"], x, cfg.tie_embeddings)
+    new_state = dict(
+        state, caches=caches, lengths=lengths + active.astype(jnp.int32)
+    )
+    return logits[:, 0], new_state
 
 
 def decode_step(

@@ -48,6 +48,10 @@ class Runtime:
     # distributed selective scan: shard the SSM sequence over 'model' with
     # chunk-summary handoff (repro.models.ssm.mamba_apply_seqpar)
     ssm_seqpar: bool = False
+    # Paged-KV decode (repro.serve engine): route the per-slot decode
+    # attention through the Pallas paged kernel (block-table page gathers)
+    # instead of the pure-jnp oracle. The oracle is the faster CPU path.
+    use_paged_kernel: bool = False
 
     def replace(self, **kw) -> "Runtime":
         return dataclasses.replace(self, **kw)

@@ -524,6 +524,75 @@ def init_stack_cache(
     return caches
 
 
+def init_stack_pool(
+    cfg: ArchConfig,
+    rt: Runtime,
+    specs: Tuple[LayerSpec, ...],
+    num_pages: int,
+    page_size: int,
+) -> List[Any]:
+    """Per-layer paged KV pools in the segment layout (attention kinds only).
+
+    Every layer shares one block table per request (the vLLM convention), so
+    all pools have identical page geometry; pools are slot-count independent
+    — requests share the pool through their block tables.
+    """
+    segments = build_segments(cfg, specs)
+    pools = []
+    for seg in segments:
+        unit: Dict[str, Any] = {}
+        for j, spec in enumerate(seg.unit_specs):
+            assert spec.kind in ("attn", "local"), (
+                f"paged decode supports attention mixers only, got {spec.kind}"
+            )
+            unit[f"p{j}"] = attn_mod.init_paged_kv_cache(
+                num_pages, page_size, cfg.n_kv_heads, cfg.head_dim, rt.dtype
+            )
+        pools.append(
+            jax.tree.map(
+                lambda l: jnp.broadcast_to(l, (seg.repeats,) + l.shape), unit
+            )
+        )
+    return pools
+
+
+def write_prefill_to_pool(
+    pools: List[Any], caches: List[Any], table: jax.Array, page_size: int
+) -> List[Any]:
+    """Scatter one request's prefill KV into its block-table pages.
+
+    ``caches`` is the segment-layout ring-cache pytree collected by
+    ``stack_forward(collect_cache=True)`` for a batch of ONE request; each
+    entry's explicit ``pos`` array drives placement (pool position = absolute
+    token position), so ring-truncated local-layer caches land exactly on
+    their surviving window band and invalid entries fall into null page 0.
+    ``table``: (P,) int32 page ids for this request.
+    """
+    def scatter(kp, vp, k, v, pos):
+        # entries that are invalid OR beyond the table's coverage go to the
+        # null page (a clip would clobber the last real page instead)
+        valid = (pos >= 0) & (pos // page_size < table.shape[0])
+        pid = jnp.where(
+            valid,
+            table[jnp.clip(pos // page_size, 0, table.shape[0] - 1)],
+            0,
+        )
+        slot = jnp.where(valid, pos % page_size, 0)
+        return kp.at[pid, slot].set(k[0]), vp.at[pid, slot].set(v[0])
+
+    new_pools: List[Any] = []
+    for seg_pool, seg_cache in zip(pools, caches):
+        unit: Dict[str, Any] = {}
+        for key, pool in seg_pool.items():
+            c = seg_cache[key]
+            kp, vp = jax.vmap(scatter)(
+                pool["kp"], pool["vp"], c["k"], c["v"], c["pos"]
+            )
+            unit[key] = {"kp": kp, "vp": vp}
+        new_pools.append(unit)
+    return new_pools
+
+
 def stack_decode(
     cfg: ArchConfig,
     stack: Params,
@@ -532,8 +601,18 @@ def stack_decode(
     t: jax.Array,
     rt: Runtime,
     specs: Tuple[LayerSpec, ...],
+    *,
+    tables: Optional[jax.Array] = None,
+    active: Optional[jax.Array] = None,
 ):
-    """One-token decode. x: (B, 1, d). Returns (x, new_caches)."""
+    """One-token decode. x: (B, 1, d). Returns (x, new_caches).
+
+    Dense mode (``tables is None``): ``t`` is the scalar position shared by
+    the whole batch and ``caches`` are ring buffers / recurrent states.
+    Paged mode: ``caches`` are page pools (see ``init_stack_pool``), ``t`` is
+    the per-slot (B,) lengths vector, and ``tables``/``active`` address the
+    pool — each slot decodes at its own depth (continuous batching).
+    """
     segments = build_segments(cfg, specs)
     new_caches: List[Any] = []
 
@@ -548,7 +627,14 @@ def stack_decode(
                 c = unit_c[f"p{j}"]
                 self_c = c["self"] if (cfg.is_encdec and isinstance(c, dict) and "self" in c) else c
                 hn = norm_apply(bp["norm1"], h, cfg.norm)
-                if spec.kind in ("attn", "local"):
+                if spec.kind in ("attn", "local") and tables is not None:
+                    out, self_c = attn_mod.attention_decode_paged(
+                        bp["mixer"], hn, self_c, tables, t, active,
+                        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                        head_dim=cfg.head_dim, theta=cfg.rope_theta,
+                        window=spec.window, use_kernel=rt.use_paged_kernel,
+                    )
+                elif spec.kind in ("attn", "local"):
                     out, self_c = attn_mod.attention_decode(
                         bp["mixer"], hn, self_c, t,
                         n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,

@@ -1,0 +1,8 @@
+from repro.serve.engine import (  # noqa: F401
+    EngineConfig,
+    ServeEngine,
+    paged_supported,
+)
+from repro.serve.pool import PagePool, PoolExhausted  # noqa: F401
+from repro.serve.sampling import sample_slots, sample_token  # noqa: F401
+from repro.serve.scheduler import Request, Scheduler  # noqa: F401

@@ -1,0 +1,144 @@
+"""Dense (contiguous-cache) serving path with cached compiled functions.
+
+This is the ``paged=False`` fallback kept for architecture families the
+paged engine cannot serve (recurrent SSM/RG-LRU states, enc-dec cross
+caches) and for equal-length batch generation. Two fixes over the historical
+``train/serve.py`` loop live here:
+
+* prefill / decode are compiled ONCE per (cfg, rt, shapes, horizon) key and
+  cached module-wide — the old code rebuilt and re-``jit``-ed its lambdas on
+  every ``generate`` call, retracing every time (``CACHE_BUILDS`` is exposed
+  so tests can assert a second same-shape call doesn't rebuild, alongside
+  ``jax.jit``'s own ``_cache_size`` miss counters);
+* the per-token Python decode loop is a single jitted ``lax.scan``, so a
+  whole generation is one device program instead of ``max_new`` dispatches.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import Runtime, decode_step, prefill
+from repro.models.layers import Params
+from repro.serve.sampling import sample_token
+
+# (cfg, rt, batch_key, total, max_new, temperature) -> (prefill_fn, loop_fn)
+_CACHE: Dict[Any, Any] = {}
+CACHE_BUILDS = 0  # incremented on every fresh compile-cache entry (tests)
+
+
+def batch_shape_key(batch: Dict[str, jax.Array]) -> Tuple:
+    return tuple(
+        (k, tuple(v.shape), str(v.dtype)) for k, v in sorted(batch.items())
+    )
+
+
+def compiled_prefill(
+    cfg: ArchConfig, rt: Runtime, batch_key: Tuple, total: int,
+    dynamic_gather: bool = False, full_cache: bool = False,
+):
+    """Cached jitted prefill sized for a ``total``-token decode horizon.
+
+    With ``dynamic_gather`` the returned fn takes an extra traced position
+    ``(params, batch, gather_pos)`` — the engine's bucketed-prefill path pads
+    prompts up to a shape bucket (bounding distinct compiles) and gathers
+    the first-token logits at the true prompt end. ``full_cache`` collects
+    un-windowed caches (see ``repro.models.lm.prefill``) for the page pool.
+    """
+    key = ("prefill", cfg, rt, batch_key, total, dynamic_gather, full_cache)
+    if key not in _CACHE:
+        global CACHE_BUILDS
+        CACHE_BUILDS += 1
+        if dynamic_gather:
+            fn = jax.jit(
+                lambda p, b, pos: prefill(
+                    cfg, p, b, rt, max_len=total, gather_pos=pos,
+                    full_cache=full_cache,
+                )
+            )
+        else:
+            fn = jax.jit(
+                lambda p, b: prefill(
+                    cfg, p, b, rt, max_len=total, full_cache=full_cache
+                )
+            )
+        _CACHE[key] = fn
+    return _CACHE[key]
+
+
+def compiled_decode_loop(
+    cfg: ArchConfig, rt: Runtime, batch_key: Tuple, total: int,
+    max_new: int, temperature: float,
+):
+    """Cached jitted scan over ``max_new - 1`` decode steps.
+
+    Returns ``loop(params, state, tok0, key) -> (tokens (B, max_new), state)``
+    where ``tok0`` is the prefill-sampled first token and step ``i`` samples
+    with ``fold_in(key, i)``.
+    """
+    key = ("loop", cfg, rt, batch_key, total, max_new, temperature)
+    if key not in _CACHE:
+        global CACHE_BUILDS
+        CACHE_BUILDS += 1
+
+        def loop(params, state, tok0, rng):
+            def step(carry, i):
+                st, tok = carry
+                logits, st = decode_step(cfg, params, st, tok, rt, seq_len=total)
+                tok = sample_token(
+                    logits, jax.random.fold_in(rng, i), temperature,
+                    cfg.vocab_size,
+                )
+                return (st, tok), tok
+
+            (state_f, _), toks = jax.lax.scan(
+                step, (state, tok0), jnp.arange(max_new - 1)
+            )
+            tokens = jnp.concatenate([tok0[:, None], toks.T], axis=1)
+            return tokens, state_f
+
+        _CACHE[key] = jax.jit(loop)
+    return _CACHE[key]
+
+
+def generate_dense(
+    cfg: ArchConfig,
+    params: Params,
+    batch: Dict[str, jax.Array],
+    rt: Runtime,
+    max_new_tokens: int,
+    temperature: float = 0.0,
+    seed: int = 0,
+) -> Tuple[jax.Array, Dict[str, Any], float]:
+    """Batched dense generation. Returns (tokens (B, max_new), state, ttft_s).
+
+    ``ttft_s`` is wall time to the first sampled token (prefill + sample;
+    includes compile on a cold cache — callers wanting steady-state numbers
+    should warm the cache first).
+    """
+    import time
+
+    assert max_new_tokens >= 1
+    prompt_len = batch["tokens"].shape[1]
+    total = prompt_len + max_new_tokens
+    if cfg.frontend == "vision":
+        total += cfg.frontend_tokens
+
+    bkey = batch_shape_key(batch)
+    prefill_fn = compiled_prefill(cfg, rt, bkey, total)
+    loop_fn = compiled_decode_loop(
+        cfg, rt, bkey, total, max_new_tokens, temperature
+    )
+
+    rng = jax.random.PRNGKey(seed)
+    t0 = time.perf_counter()
+    logits, state = prefill_fn(params, batch)
+    tok0 = sample_token(logits, rng, temperature, cfg.vocab_size)
+    tok0.block_until_ready()
+    ttft = time.perf_counter() - t0
+
+    tokens, state = loop_fn(params, state, tok0, rng)
+    return tokens, state, ttft

@@ -1,0 +1,551 @@
+"""Continuous-batching serve engine over the paged KV-cache pool.
+
+Execution model
+---------------
+A fixed number of decode *slots* (the jitted batch dimension) is fed from a
+FIFO scheduler. Each admitted request is prefilled alone (B=1, cached
+compiled prefill), its KV scattered into pool pages through its block table,
+and its first token sampled (that wall time is the request's TTFT). Decode
+then runs in jitted ``lax.scan`` chunks of ``inner_steps`` single-token
+steps over ALL slots at once — every slot at its own depth, masked by a
+per-slot ``remaining`` counter — with the host only intervening between
+chunks to retire finished requests (freeing their pages) and admit new ones
+into the vacated slots. Per-slot sample keys + step counters make each
+request's token stream independent of what else shares the batch, so engine
+output is identical to running the request alone (the dense path can only
+promise that for greedy decoding).
+
+Families whose decode state is not a KV cache (SSM / RG-LRU recurrences,
+enc-dec cross caches) fall back to the dense path (``paged=False``), grouped
+into equal-prompt-length batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import Runtime, decode_step_paged, init_paged_state
+from repro.models.layers import Params
+from repro.models.stack import write_prefill_to_pool
+from repro.serve import dense as dense_mod
+from repro.serve.pool import PagePool, PoolExhausted
+from repro.serve.sampling import sample_slots, sample_token
+from repro.serve.scheduler import Request, Scheduler
+
+
+def paged_supported(cfg: ArchConfig) -> bool:
+    """Paged decode needs every mixer to be a KV-cache attention kind and no
+    cross-attention cache (enc-dec)."""
+    return (
+        not cfg.is_encdec
+        and cfg.n_heads > 0
+        and all(k in ("attn", "local") for k in cfg.pattern)
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_slots: int = 4        # decode batch width (jit-static)
+    page_size: int = 16       # tokens per KV page (= kernel block size)
+    num_pages: int = 129      # pool size incl. reserved null page 0
+    max_len: int = 256        # per-request horizon; block-table width
+    inner_steps: int = 8      # decode steps per jitted scan chunk
+    temperature: float = 0.0
+    seed: int = 0
+    use_kernel: bool = False  # Pallas paged kernel vs jnp oracle gather
+    policy: str = "reserve"   # admission policy (see serve.scheduler)
+    # Pad prompts up to a multiple of this bucket before prefill, so distinct
+    # prompt lengths share max_len/bucket compiled programs instead of one
+    # XLA compile each (0 = exact shapes). Exactness: padded positions are
+    # causally invisible, the engine prefills with full (un-windowed) caches
+    # so no real token is ring-evicted by the padding, and padded KV is
+    # either null-paged or overwritten before it can be attended — outputs
+    # are unchanged for dense AND sliding-window attention families. MoE
+    # routing does see pad tokens in its capacity count, which can perturb
+    # token dropping vs an exact-shape run.
+    prefill_bucket: int = 0
+
+    @classmethod
+    def sized_for(
+        cls,
+        max_prompt_total: int,
+        max_new: int,
+        *,
+        slots: int,
+        page_size: int = 16,
+        headroom: float = 1.0,
+        **kw,
+    ) -> "EngineConfig":
+        """Config sized so ``slots`` worst-case requests (prompt incl. any
+        frontend prefix + ``max_new``) fit concurrently — the one place the
+        capacity arithmetic lives, next to the reservation policy it must
+        satisfy (``scheduler.reserve_tokens`` needs ``horizon - 1`` tokens).
+        ``headroom`` > 1 over-provisions pages for queue churn."""
+        horizon = max_prompt_total + max_new
+        max_len = -(-horizon // page_size) * page_size
+        pages_per_req = max_len // page_size
+        num_pages = 1 + math.ceil(slots * pages_per_req * headroom)
+        return cls(
+            max_slots=slots, page_size=page_size, num_pages=num_pages,
+            max_len=max_len, **kw,
+        )
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int
+    sid: int                  # pool sequence id
+    req: Request
+    order: int                # admission order (eviction picks the youngest)
+
+
+# Module-wide compile caches: fresh ServeEngine instances with an identical
+# (cfg, rt, engine-config) key reuse the jitted chunk fn instead of
+# retracing (same policy as repro.serve.dense's prefill/loop cache). The
+# page pools are donated in both fns — per-chunk/per-admission updates land
+# in place instead of double-buffering the whole KV pool (the donation is a
+# no-op on CPU backends, which jax reports with a one-time warning).
+_CHUNK_CACHE: Dict[Any, Any] = {}
+_SCATTER = jax.jit(
+    write_prefill_to_pool, static_argnames=("page_size",), donate_argnums=(0,)
+)
+_COPY_PAGES = jax.jit(
+    lambda caches, src, dst: jax.tree.map(
+        lambda leaf: leaf.at[:, dst].set(leaf[:, src]), caches
+    ),
+    donate_argnums=(0,),
+)
+
+
+def dense_kv_bytes(cfg: ArchConfig, rt: Runtime, total: int) -> int:
+    """Dense per-request cache footprint for a ``total``-token horizon: each
+    layer holds its full ``cache_len`` extent regardless of request length
+    (window-truncated local layers, rough recurrent-state share)."""
+    from repro.models.stack import layer_specs
+
+    itemsize = jnp.dtype(rt.dtype).itemsize
+    specs = layer_specs(cfg, seq_len=total, long_variant=rt.long_variant)
+    tokens = sum(s.cache_len for s in specs if s.kind in ("attn", "local"))
+    per_token = cfg.n_kv_heads * cfg.head_dim * 2 * itemsize
+    rec = sum(
+        1 for s in specs if s.kind not in ("attn", "local")
+    ) * cfg.d_model * 4 * itemsize
+    return tokens * per_token + rec
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params: Params,
+        rt: Optional[Runtime] = None,
+        engine: EngineConfig = EngineConfig(),
+        paged: Optional[bool] = None,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = engine
+        rt = rt if rt is not None else Runtime()
+        self.rt = rt.replace(
+            use_paged_kernel=engine.use_kernel or rt.use_paged_kernel
+        )
+        if paged is None:
+            paged = paged_supported(cfg)
+        if paged and not paged_supported(cfg):
+            raise ValueError(
+                f"{cfg.name}: family {cfg.family!r} has non-KV decode state; "
+                "use paged=False (dense fallback)"
+            )
+        self.paged = paged
+        self.pool = PagePool(engine.num_pages, engine.page_size)
+        self.scheduler = Scheduler(policy=engine.policy)
+        self._next_rid = 0
+        self._admit_count = 0
+        self._slots: List[Optional[_Slot]] = [None] * engine.max_slots
+        self._outputs: Dict[int, List[int]] = {}
+        self.stats: Dict[str, Any] = {"ttft_s": {}, "kv_bytes": {}}
+        if self.paged:
+            self._dev = init_paged_state(
+                cfg, engine.max_slots, self.rt,
+                num_pages=engine.num_pages, page_size=engine.page_size,
+                max_len=engine.max_len,
+            )
+            B = engine.max_slots
+            self._dev.update(
+                remaining=jnp.zeros((B,), jnp.int32),
+                tok=jnp.zeros((B,), jnp.int32),
+                keys=jnp.stack([jax.random.PRNGKey(0)] * B),
+                steps=jnp.zeros((B,), jnp.int32),
+            )
+            # key only on what the trace depends on (seed/policy are
+            # host-side; self.rt already folds in use_kernel)
+            ckey = (
+                cfg, self.rt, engine.max_slots, engine.page_size,
+                engine.num_pages, engine.max_len, engine.inner_steps,
+                engine.temperature,
+            )  # seed/policy/prefill_bucket are host-side only
+            if ckey not in _CHUNK_CACHE:
+                _CHUNK_CACHE[ckey] = self._build_chunk_fn()
+            self._chunk_fn = _CHUNK_CACHE[ckey]
+            self._scatter_fn = _SCATTER
+
+    # ------------------------------------------------------------- public
+    def submit(
+        self,
+        tokens: np.ndarray,
+        max_new: int,
+        frontend_embeds: Optional[np.ndarray] = None,
+    ) -> int:
+        assert max_new >= 1
+        req = Request(
+            rid=self._next_rid,
+            tokens=np.asarray(tokens, np.int32).reshape(-1),
+            max_new=int(max_new),
+            frontend_embeds=frontend_embeds,
+        )
+        self._next_rid += 1
+        if self.paged:
+            total = self._prompt_total(req) + req.max_new - 1
+            if total > self.ecfg.max_len:
+                raise ValueError(
+                    f"request needs {total} tokens > max_len={self.ecfg.max_len}"
+                )
+            if self.pool.pages_for(total) > self.pool.budget:
+                raise ValueError(
+                    f"request needs {self.pool.pages_for(total)} pages "
+                    f"> pool budget {self.pool.budget}"
+                )
+        self.scheduler.add(req)
+        return req.rid
+
+    def run(self) -> Dict[int, np.ndarray]:
+        """Drain the queue; returns {rid: generated tokens (max_new,)} for
+        the requests completed by THIS call (the engine is reusable —
+        submit more and run again; ``self.stats`` throughput fields are
+        likewise per-run, while the per-rid dicts accumulate).
+        """
+        if not self.paged:
+            return self._run_dense()
+        self._completed_run = set()
+        t0 = time.perf_counter()
+        # per-run deltas so a second submit()/run() cycle on the same engine
+        # reports its own throughput, not a mix with the previous run's
+        admit0 = self._admit_count
+        evict0 = self.stats.get("evictions", 0)
+        discard0 = self.stats.get("discarded_tokens", 0)
+        decode_tokens = 0
+        while len(self.scheduler) or any(self._slots):
+            self._admit_free_slots()
+            self._topup_or_evict()
+            emits, remaining = self._run_chunk()
+            decode_tokens += self._collect(emits)
+            self._retire(remaining)
+        wall = time.perf_counter() - t0
+        # throughput counts DELIVERED tokens; work thrown away by
+        # preemption is reported separately, not inflated into tokens/s
+        discarded = self.stats.get("discarded_tokens", 0) - discard0
+        n_prefill = (self._admit_count - admit0) - (
+            self.stats.get("evictions", 0) - evict0
+        )
+        self.stats["decode_tokens"] = decode_tokens - discarded
+        self.stats["wall_s"] = wall
+        self.stats["tokens_per_s"] = (
+            decode_tokens - discarded + n_prefill
+        ) / max(wall, 1e-9)
+        self.stats["pool_high_water_pages"] = self.pool.high_water
+        return {
+            rid: np.asarray(self._outputs[rid], np.int32)
+            for rid in sorted(self._completed_run)
+        }
+
+    # ----------------------------------------------------------- internals
+    def _prompt_total(self, req: Request) -> int:
+        extra = (
+            self.cfg.frontend_tokens if self.cfg.frontend == "vision" else 0
+        )
+        return req.prompt_len + extra
+
+    def _kv_bytes_per_page(self) -> int:
+        itemsize = jnp.dtype(self.rt.dtype).itemsize
+        per_layer = (
+            self.ecfg.page_size * self.cfg.n_kv_heads * self.cfg.head_dim
+            * 2 * itemsize
+        )
+        return per_layer * self.cfg.n_layers
+
+    def _build_chunk_fn(self):
+        cfg, rt, ecfg = self.cfg, self.rt, self.ecfg
+
+        def chunk(params, caches, tables, lengths, remaining, tok, keys, steps):
+            state0 = {"caches": caches, "tables": tables, "lengths": lengths}
+
+            def step(carry, _):
+                state, rem, tok, steps = carry
+                active = rem > 0
+                logits, state = decode_step_paged(
+                    cfg, params, state, tok, rt, max_len=ecfg.max_len,
+                    active=active,
+                )
+                nxt = sample_slots(
+                    logits, keys, steps, ecfg.temperature, cfg.vocab_size
+                )
+                emit = jnp.where(active, nxt, -1)
+                tok = jnp.where(active, nxt, tok)
+                act = active.astype(jnp.int32)
+                return (state, rem - act, tok, steps + act), emit
+
+            (state, remaining, tok, steps), emits = jax.lax.scan(
+                step, (state0, remaining, tok, steps), None,
+                length=ecfg.inner_steps,
+            )
+            return (
+                state["caches"], state["lengths"], remaining, tok, steps, emits
+            )
+
+        return jax.jit(chunk, donate_argnums=(1,))  # caches update in place
+
+    def _admission_headroom(self) -> int:
+        """Extra free pages required beyond a newcomer's reservation under
+        the optimistic policy: one chunk's worth of page-boundary crossings
+        for every request that would then be running. Without this, a
+        preempted request re-admits into a pool that cannot sustain the next
+        chunk and is immediately evicted again (prefill thrash)."""
+        if self.ecfg.policy != "optimistic":
+            return 0
+        n_active = sum(1 for s in self._slots if s is not None)
+        if n_active == 0:
+            return 0
+        per_slot = self.ecfg.inner_steps // self.ecfg.page_size + 1
+        return (n_active + 1) * per_slot
+
+    def _admit_free_slots(self) -> None:
+        for slot_id, slot in enumerate(self._slots):
+            if slot is not None:
+                continue
+            req = self.scheduler.pop_admissible(
+                self.pool, self._prompt_total,
+                headroom_pages=self._admission_headroom(),
+            )
+            if req is None:
+                break
+            self._admit(slot_id, req)
+        if not any(self._slots) and len(self.scheduler):
+            raise RuntimeError(
+                "deadlock: empty engine cannot admit the head request "
+                "(pool too small for it — submit() should have rejected it)"
+            )
+
+    def _admit(self, slot_id: int, req: Request) -> None:
+        ecfg, cfg = self.ecfg, self.cfg
+        prompt_total = self._prompt_total(req)
+        sid = self.pool.alloc(
+            self.scheduler.reserve_tokens(req, prompt_total)
+        )
+        t0 = time.perf_counter()
+        tokens = req.tokens
+        bucket = ecfg.prefill_bucket
+        if bucket:
+            pad = -len(tokens) % bucket
+            tokens = np.pad(tokens, (0, pad))
+        batch = {"tokens": jnp.asarray(tokens[None])}
+        if req.frontend_embeds is not None:
+            batch["frontend_embeds"] = jnp.asarray(req.frontend_embeds[None])
+        prefill_fn = dense_mod.compiled_prefill(
+            cfg, self.rt, dense_mod.batch_shape_key(batch),
+            prompt_total + (len(tokens) - req.prompt_len),
+            dynamic_gather=bool(bucket), full_cache=True,
+        )
+        if bucket:
+            logits, pstate = prefill_fn(
+                self.params, batch, jnp.int32(prompt_total - 1)
+            )
+        else:
+            logits, pstate = prefill_fn(self.params, batch)
+        rkey = jax.random.fold_in(jax.random.PRNGKey(ecfg.seed), req.rid)
+        tok0 = sample_token(
+            logits, jax.random.fold_in(rkey, 0), ecfg.temperature,
+            cfg.vocab_size,
+        )
+        tok0.block_until_ready()
+        self.stats["ttft_s"][req.rid] = time.perf_counter() - t0
+
+        table_row = jnp.asarray(
+            self.pool.table(sid, self._dev["tables"].shape[1]), jnp.int32
+        )
+        self._apply_copies()
+        self._dev["caches"] = self._scatter_fn(
+            self._dev["caches"], pstate["caches"], table_row,
+            page_size=ecfg.page_size,
+        )
+        d = self._dev
+        d["tables"] = d["tables"].at[slot_id].set(table_row)
+        d["lengths"] = d["lengths"].at[slot_id].set(prompt_total)
+        d["remaining"] = d["remaining"].at[slot_id].set(req.max_new - 1)
+        d["tok"] = d["tok"].at[slot_id].set(tok0[0])
+        d["keys"] = d["keys"].at[slot_id].set(rkey)
+        d["steps"] = d["steps"].at[slot_id].set(1)  # fold 0 used at prefill
+        self._slots[slot_id] = _Slot(req.rid, sid, req, self._admit_count)
+        self._admit_count += 1
+        self._outputs[req.rid] = [int(tok0[0])]
+
+    def _topup_or_evict(self) -> None:
+        """Ensure every active slot's pages cover this chunk's writes;
+        evict the youngest on exhaustion. Under the reserve policy the whole
+        horizon was reserved at admission, so skip the per-chunk host sync
+        and table rewrites entirely."""
+        if self.ecfg.policy == "reserve":
+            return
+        lengths = np.asarray(self._dev["lengths"])
+        remaining = np.asarray(self._dev["remaining"])
+        for slot_id, slot in enumerate(self._slots):
+            if slot is None:
+                continue
+            need = int(lengths[slot_id]) + min(
+                int(remaining[slot_id]), self.ecfg.inner_steps
+            )
+            while self._slots[slot_id] is not None:
+                try:
+                    self.pool.ensure(slot.sid, need)
+                    break
+                except PoolExhausted:
+                    # preempt the youngest active request — possibly the
+                    # very slot that needs pages (FIFO fairness: the oldest
+                    # admissions keep their pages and finish first)
+                    actives = [
+                        (s_id, s) for s_id, s in enumerate(self._slots)
+                        if s is not None
+                    ]
+                    if len(actives) == 1:
+                        raise   # a lone request frees nothing by preemption
+                    self._evict(*max(actives, key=lambda kv: kv[1].order))
+            if self._slots[slot_id] is None:
+                continue                       # this slot was the victim
+            self._apply_copies()
+            row = jnp.asarray(
+                self.pool.table(slot.sid, self._dev["tables"].shape[1]),
+                jnp.int32,
+            )
+            self._dev["tables"] = self._dev["tables"].at[slot_id].set(row)
+
+    def _evict(self, slot_id: int, slot: _Slot) -> None:
+        """Recompute-style preemption: free pages, requeue from scratch."""
+        self.pool.free(slot.sid)
+        # all but the prefill-sampled token were counted as decode output
+        self.stats["discarded_tokens"] = (
+            self.stats.get("discarded_tokens", 0)
+            + len(self._outputs[slot.rid]) - 1
+        )
+        del self._outputs[slot.rid]
+        self.stats["ttft_s"].pop(slot.rid, None)
+        self.scheduler.requeue_front(slot.req)
+        d = self._dev
+        d["tables"] = d["tables"].at[slot_id].set(0)
+        d["lengths"] = d["lengths"].at[slot_id].set(0)
+        d["remaining"] = d["remaining"].at[slot_id].set(0)
+        self._slots[slot_id] = None
+        self.stats["evictions"] = self.stats.get("evictions", 0) + 1
+
+    def _apply_copies(self) -> None:
+        copies = self.pool.drain_copies()
+        if not copies:
+            return
+        src = jnp.asarray([c[0] for c in copies], jnp.int32)
+        dst = jnp.asarray([c[1] for c in copies], jnp.int32)
+        self._dev["caches"] = _COPY_PAGES(self._dev["caches"], src, dst)
+
+    def _run_chunk(self):
+        d = self._dev
+        caches, lengths, remaining, tok, steps, emits = self._chunk_fn(
+            self.params, d["caches"], d["tables"], d["lengths"],
+            d["remaining"], d["tok"], d["keys"], d["steps"],
+        )
+        d.update(
+            caches=caches, lengths=lengths, remaining=remaining, tok=tok,
+            steps=steps,
+        )
+        return np.asarray(emits), np.asarray(remaining)
+
+    def _collect(self, emits: np.ndarray) -> int:
+        n = 0
+        for slot_id, slot in enumerate(self._slots):
+            if slot is None:
+                continue
+            toks = emits[:, slot_id]
+            toks = toks[toks >= 0]
+            self._outputs[slot.rid].extend(int(t) for t in toks)
+            n += len(toks)
+        return n
+
+    def _retire(self, remaining: np.ndarray) -> None:
+        for slot_id, slot in enumerate(self._slots):
+            if slot is None or remaining[slot_id] > 0:
+                continue
+            self.stats["kv_bytes"][slot.rid] = (
+                len(self.pool.seq_pages(slot.sid)) * self._kv_bytes_per_page()
+            )
+            self._completed_run.add(slot.rid)
+            self.pool.free(slot.sid)
+            d = self._dev
+            d["tables"] = d["tables"].at[slot_id].set(0)
+            d["lengths"] = d["lengths"].at[slot_id].set(0)
+            self._slots[slot_id] = None
+
+    # ------------------------------------------------------ dense fallback
+    def _run_dense(self) -> Dict[int, np.ndarray]:
+        """Group queued requests into equal-prompt-length batches and run the
+        cached dense generate (contiguous (B, total) caches)."""
+        cfg, ecfg = self.cfg, self.ecfg
+        t0 = time.perf_counter()
+        decode_tokens = 0
+        reqs: List[Request] = []
+        while len(self.scheduler):
+            reqs.append(self.scheduler.pop())
+        groups: Dict[Tuple[int, int], List[Request]] = {}
+        for r in reqs:
+            groups.setdefault((r.prompt_len, r.max_new), []).append(r)
+        for (plen, max_new), members in groups.items():
+            for i in range(0, len(members), ecfg.max_slots):
+                part = members[i : i + ecfg.max_slots]
+                batch = {
+                    "tokens": jnp.asarray(
+                        np.stack([r.tokens for r in part]), jnp.int32
+                    )
+                }
+                if part[0].frontend_embeds is not None:
+                    batch["frontend_embeds"] = jnp.asarray(
+                        np.stack([r.frontend_embeds for r in part])
+                    )
+                tokens, _, ttft = dense_mod.generate_dense(
+                    cfg, self.params, batch, self.rt, max_new,
+                    temperature=ecfg.temperature, seed=ecfg.seed,
+                )
+                tokens.block_until_ready()
+                total = plen + max_new + (
+                    cfg.frontend_tokens if cfg.frontend == "vision" else 0
+                )
+                kv = self._dense_kv_bytes(total)
+                for b, r in enumerate(part):
+                    self._outputs[r.rid] = list(np.asarray(tokens[b]))
+                    self.stats["ttft_s"][r.rid] = ttft
+                    self.stats["kv_bytes"][r.rid] = kv
+                    decode_tokens += max_new - 1
+        wall = time.perf_counter() - t0
+        done = [r.rid for r in reqs]
+        self.stats["decode_tokens"] = decode_tokens
+        self.stats["wall_s"] = wall
+        self.stats["tokens_per_s"] = (
+            decode_tokens + len(done)
+        ) / max(wall, 1e-9)
+        return {
+            rid: np.asarray(self._outputs[rid], np.int32) for rid in done
+        }
+
+    def _dense_kv_bytes(self, total: int) -> int:
+        return dense_kv_bytes(self.cfg, self.rt, total)

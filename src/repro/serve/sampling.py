@@ -1,0 +1,55 @@
+"""Token sampling shared by the dense path and the paged serve engine.
+
+``sample_token`` keeps the historical ``repro.train.serve`` contract (one key
+for the whole batch); ``sample_slots`` is the continuous-batching variant —
+every decode slot carries its own key and per-request step counter, so a
+request's sample stream is identical whether it runs alone or packed into a
+busy batch (admission order cannot perturb outputs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mask_padded_logits(logits: jax.Array, vocab: int) -> jax.Array:
+    """Mask vocab-padding ids with the dtype's finfo min (not a hard-coded
+    -1e30, which overflows to -inf in fp16 and is above bf16's range)."""
+    if not vocab or vocab >= logits.shape[-1]:
+        return logits
+    neg = jnp.finfo(logits.dtype).min
+    mask = jnp.arange(logits.shape[-1]) < vocab
+    return jnp.where(mask[None, :], logits, neg)
+
+
+def sample_token(
+    logits: jax.Array, key: jax.Array, temperature: float = 0.0, vocab: int = 0
+) -> jax.Array:
+    """logits: (B, Vp). temperature 0 = greedy. Padding ids masked out."""
+    logits = mask_padded_logits(logits, vocab)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(
+        jnp.int32
+    )
+
+
+def sample_slots(
+    logits: jax.Array,
+    keys: jax.Array,
+    steps: jax.Array,
+    temperature: float,
+    vocab: int,
+) -> jax.Array:
+    """Per-slot sampling. logits: (B, Vp); keys: (B, 2) PRNG keys; steps:
+    (B,) int32 per-request sample counters (folded into the slot key so the
+    stream depends only on the request, not on global engine time)."""
+    logits = mask_padded_logits(logits, vocab)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def one(logit, key, step):
+        k = jax.random.fold_in(key, step)
+        return jax.random.categorical(k, logit / temperature)
+
+    return jax.vmap(one)(logits, keys, steps).astype(jnp.int32)

@@ -1,0 +1,81 @@
+"""Request admission/eviction policy for the continuous-batching engine.
+
+FIFO with page-budget gating: the head request is admitted into a free
+decode slot only when the pool can cover its reservation —
+
+* ``reserve`` (default): the whole horizon (prompt + max_new - 1 tokens) is
+  reserved at admission, so decode-time appends can never fail; admission
+  throughput trades against pool utilization.
+* ``optimistic``: only the prompt is reserved; the engine tops up pages
+  chunk-by-chunk and, on exhaustion, preempts the youngest running request
+  (pages freed, request requeued at the front — recompute-style preemption,
+  the scheduling analogue of discard-and-rematerialize).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Optional
+
+import numpy as np
+
+from repro.serve.pool import PagePool
+
+POLICIES = ("reserve", "optimistic")
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray                     # (S,) int32 prompt ids
+    max_new: int
+    frontend_embeds: Optional[np.ndarray] = None  # (P, d) modality prefix
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+class Scheduler:
+    def __init__(self, policy: str = "reserve"):
+        assert policy in POLICIES, policy
+        self.policy = policy
+        self._queue: Deque[Request] = deque()
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def add(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def pop(self) -> Request:
+        """Unconditional FIFO pop (dense fallback — no page gating)."""
+        return self._queue.popleft()
+
+    def requeue_front(self, req: Request) -> None:
+        """Preempted request goes back to the head (it was admitted first)."""
+        self._queue.appendleft(req)
+
+    def reserve_tokens(self, req: Request, prompt_total: int) -> int:
+        """Tokens to reserve at admission. The final sampled token is never
+        written back (nothing consumes it), hence ``max_new - 1``."""
+        if self.policy == "reserve":
+            return prompt_total + max(0, req.max_new - 1)
+        return prompt_total
+
+    def pop_admissible(
+        self, pool: PagePool, prompt_total_of, headroom_pages: int = 0
+    ) -> Optional[Request]:
+        """Head request if its reservation (+ the engine's chunk headroom,
+        see ``ServeEngine._admission_headroom``) fits the pool's free pages.
+
+        Strict FIFO: no head-of-line bypass, so admission order (and with it
+        per-request output, under per-slot sample streams) is deterministic.
+        """
+        if not self._queue:
+            return None
+        req = self._queue[0]
+        need = pool.pages_for(self.reserve_tokens(req, prompt_total_of(req)))
+        if need + headroom_pages > pool.free_pages:
+            return None
+        return self._queue.popleft()

@@ -1,32 +1,29 @@
-"""Batched serving: prefill + autoregressive decode with sampling.
+"""Batched serving API: prefill + autoregressive decode with sampling.
 
-``generate`` drives the KV-cache decode path for any architecture family
-(attention ring buffers, SSM/RG-LRU recurrent states, enc-dec cross caches).
+Thin public wrapper over the serving subsystem (``repro.serve``):
+
+* dense path (default) — cached compiled prefill + one jitted ``lax.scan``
+  decode loop per (cfg, rt, shapes, horizon) key (``repro.serve.dense``);
+  works for every architecture family (ring-buffer attention, SSM/RG-LRU
+  recurrences, enc-dec cross caches).
+* ``paged=True`` — routes through the continuous-batching engine and its
+  paged KV-cache pool (``repro.serve.engine``); supported for KV-cache
+  attention families (``repro.serve.paged_supported``).
+
+``sample_token`` lives in ``repro.serve.sampling`` and is re-exported here
+for backwards compatibility.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.models import Runtime, decode_step, prefill
+from repro.models import Runtime
 from repro.models.layers import Params
-
-
-def sample_token(
-    logits: jax.Array, key: jax.Array, temperature: float = 0.0, vocab: int = 0
-) -> jax.Array:
-    """logits: (B, Vp). temperature 0 = greedy. Padding ids masked out."""
-    if vocab:
-        mask = jnp.arange(logits.shape[-1]) < vocab
-        logits = jnp.where(mask[None, :], logits, -1e30)
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(key, logits / temperature, axis=-1).astype(
-        jnp.int32
-    )
+from repro.serve.sampling import sample_token  # noqa: F401  (re-export)
 
 
 def generate(
@@ -37,26 +34,48 @@ def generate(
     max_new_tokens: int,
     temperature: float = 0.0,
     seed: int = 0,
+    paged: bool = False,
 ) -> Tuple[jax.Array, Dict[str, Any]]:
-    """Returns (tokens (B, max_new_tokens), final decode state)."""
-    prompt_len = batch["tokens"].shape[1]
-    total = prompt_len + max_new_tokens
-    if cfg.frontend == "vision":
-        total += cfg.frontend_tokens
+    """Returns (tokens (B, max_new_tokens), final decode state).
 
-    logits, state = jax.jit(
-        lambda p, b: prefill(cfg, p, b, rt, max_len=total)
-    )(params, batch)
+    With ``paged=True`` the batch is served by the continuous-batching
+    engine (one request per batch row) and the second element is the
+    engine's stats dict instead of a dense decode state. Greedy outputs are
+    identical across both paths; temperature>0 streams differ (the engine
+    samples with per-request keys so outputs are batch-composition
+    independent — the dense path's shared key is not).
+    """
+    if paged:
+        from repro.serve import EngineConfig, ServeEngine
 
-    step = jax.jit(
-        lambda p, s, t: decode_step(cfg, p, s, t, rt, seq_len=total)
+        B, S = batch["tokens"].shape
+        prompt_total = S + (
+            cfg.frontend_tokens if cfg.frontend == "vision" else 0
+        )
+        eng = ServeEngine(
+            cfg, params, rt,
+            EngineConfig.sized_for(
+                prompt_total, max_new_tokens, slots=B,
+                temperature=temperature, seed=seed,
+            ),
+        )
+        fe = batch.get("frontend_embeds")
+        rids = [
+            eng.submit(
+                jnp.asarray(batch["tokens"][b]),
+                max_new_tokens,
+                frontend_embeds=None if fe is None else fe[b],
+            )
+            for b in range(B)
+        ]
+        out = eng.run()
+        tokens = jnp.stack([jnp.asarray(out[r]) for r in rids])
+        return tokens, eng.stats
+
+    from repro.serve.dense import generate_dense
+
+    tokens, state, _ = generate_dense(
+        cfg, params, batch, rt, max_new_tokens,
+        temperature=temperature, seed=seed,
     )
-    key = jax.random.PRNGKey(seed)
-    tok = sample_token(logits, key, temperature, cfg.vocab_size)
-    out = [tok]
-    for i in range(max_new_tokens - 1):
-        key = jax.random.fold_in(key, i)
-        logits, state = step(params, state, tok)
-        tok = sample_token(logits, key, temperature, cfg.vocab_size)
-        out.append(tok)
-    return jnp.stack(out, axis=1), state
+    return tokens, state

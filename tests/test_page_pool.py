@@ -1,0 +1,118 @@
+"""Property-based tests for the serve page-pool allocator.
+
+Invariants under arbitrary admit/append/fork/evict sequences: no page is
+leaked or double-assigned, the null page is never handed out, the high-water
+mark respects the budget (the pool raises instead of overcommitting), and
+freed pages are reusable."""
+import pytest
+from _hyp_compat import hypothesis, st
+
+from repro.serve.pool import PagePool, PoolExhausted
+
+
+def test_alloc_append_free_roundtrip():
+    pool = PagePool(num_pages=9, page_size=4)
+    a = pool.alloc(6)          # 2 pages
+    b = pool.alloc(4)          # 1 page
+    assert pool.pages_in_use == 3
+    assert sorted(pool.seq_pages(a) + pool.seq_pages(b)) == [1, 2, 3]
+    pool.append(a, 3)          # 6 -> 9 tokens: 3 pages
+    assert len(pool.seq_pages(a)) == 3
+    pool.free(a)
+    assert pool.pages_in_use == 1
+    c = pool.alloc(16)         # reuses a's freed pages
+    assert len(pool.seq_pages(c)) == 4
+    pool.check()
+
+
+def test_exhaustion_raises_without_leaking():
+    pool = PagePool(num_pages=4, page_size=2)   # budget 3
+    a = pool.alloc(4)
+    with pytest.raises(PoolExhausted):
+        pool.alloc(4)
+    pool.check()
+    assert pool.pages_in_use == 2
+    with pytest.raises(PoolExhausted):
+        pool.append(a, 5)      # needs 3 more pages, 1 free
+    pool.check()
+    pool.free(a)
+    assert pool.pages_in_use == 0
+    assert pool.high_water == 2
+
+
+def test_fork_shares_then_copies_on_write():
+    pool = PagePool(num_pages=9, page_size=4)
+    a = pool.alloc(6)          # pages [1, 2], tail half-filled
+    b = pool.fork(a)
+    assert pool.seq_pages(b) == pool.seq_pages(a)
+    assert pool.pages_in_use == 2          # fully shared
+    pool.append(b, 1)          # writes into shared partial tail -> COW
+    copies = pool.drain_copies()
+    assert len(copies) == 1 and copies[0][0] == pool.seq_pages(a)[-1]
+    assert pool.seq_pages(b)[-1] != pool.seq_pages(a)[-1]
+    assert pool.seq_pages(b)[0] == pool.seq_pages(a)[0]  # full page shared
+    pool.check()
+    # full tail page: fork then append allocates without copying
+    c = pool.alloc(4)
+    d = pool.fork(c)
+    pool.append(d, 1)
+    assert pool.drain_copies() == []
+    assert pool.seq_pages(d)[0] == pool.seq_pages(c)[0]
+    pool.check()
+
+
+def test_fork_free_order_independent():
+    pool = PagePool(num_pages=5, page_size=2)
+    a = pool.alloc(4)
+    b = pool.fork(a)
+    pool.free(a)               # b still holds the pages
+    assert pool.pages_in_use == 2
+    pool.free(b)
+    assert pool.pages_in_use == 0
+    pool.check()
+
+
+@hypothesis.given(
+    st.lists(
+        st.tuples(st.integers(0, 3), st.integers(1, 9)),
+        min_size=1, max_size=60,
+    )
+)
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_pool_invariants_under_random_ops(ops):
+    """ops: (verb, amount) with verb 0=alloc 1=append 2=free 3=fork; the
+    amount doubles as the token count / live-sequence selector."""
+    pool = PagePool(num_pages=8, page_size=3)   # budget 7
+    live = []
+    for verb, n in ops:
+        try:
+            if verb == 0:
+                live.append(pool.alloc(n))
+            elif verb == 1 and live:
+                pool.append(live[n % len(live)], n)
+            elif verb == 2 and live:
+                pool.free(live.pop(n % len(live)))
+            elif verb == 3 and live:
+                live.append(pool.fork(live[n % len(live)]))
+        except PoolExhausted:
+            pass                                # refusal must not corrupt
+        pool.check()
+        assert pool.high_water <= pool.budget
+        assert 0 <= pool.pages_in_use <= pool.budget
+    for sid in live:
+        pool.free(sid)
+    pool.check()
+    assert pool.pages_in_use == 0               # nothing leaked
+    # freed pages are reusable: the whole budget is allocatable again
+    full = pool.alloc(pool.budget * pool.page_size)
+    assert len(pool.seq_pages(full)) == pool.budget
+    pool.check()
+
+
+@hypothesis.given(st.integers(1, 40), st.integers(1, 6))
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_pages_for_matches_alloc(n_tokens, page_size):
+    pool = PagePool(num_pages=64, page_size=page_size)
+    sid = pool.alloc(n_tokens)
+    assert len(pool.seq_pages(sid)) == pool.pages_for(n_tokens)
+    assert pool.pages_for(n_tokens) * page_size >= n_tokens

@@ -1,0 +1,345 @@
+"""Serve engine + serving-path fixes.
+
+* Oracle equivalence: greedy decode reproduces the teacher-forced full-
+  forward argmax token-for-token across architecture families (ring-buffer
+  attention, SSM, RG-LRU, enc-dec cross-attention, vision prefix) and across
+  the paged vs dense cache paths.
+* Continuous batching: each request's engine output is identical to running
+  that request alone (including under eviction pressure and through the
+  Pallas kernel path).
+* Fixes: compile-cache no-retrace regression; finfo-min vocab masking in
+  ``sample_token`` over float dtypes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp_compat import hypothesis, st
+
+from repro.configs import get_reduced
+from repro.models import Runtime, forward, init_params
+from repro.serve import EngineConfig, ServeEngine, paged_supported
+from repro.serve.sampling import sample_token
+from repro.train.serve import generate
+
+RT = Runtime(dtype=jnp.float32, chunk_q=32)
+
+
+@pytest.fixture(scope="module")
+def arch_state():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = get_reduced(name)
+            cache[name] = (cfg, init_params(cfg, jax.random.PRNGKey(0)))
+        return cache[name]
+
+    return get
+
+
+def make_batch(cfg, B, S, key=0):
+    rng = np.random.RandomState(key)
+    batch = {
+        "tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)), jnp.int32)
+    }
+    if cfg.frontend is not None:
+        batch["frontend_embeds"] = jnp.asarray(
+            rng.randn(B, cfg.frontend_tokens, cfg.d_model), jnp.float32
+        )
+    return batch
+
+
+# --------------------------------------------------- oracle equivalence
+FAMILIES = [
+    "granite-8b",           # dense full attention
+    "gemma3-1b",            # sliding-window ring buffers
+    "falcon-mamba-7b",      # recurrent SSM (dense fallback family)
+    "recurrentgemma-2b",    # RG-LRU hybrid (dense fallback family)
+    "seamless-m4t-medium",  # enc-dec cross-attention (dense fallback family)
+    "phi-3-vision-4.2b",    # vision-prefix decode
+]
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_greedy_decode_matches_teacher_forced_argmax(arch_state, name):
+    """Greedy generation == argmax chain of the full (teacher-forced)
+    forward at every step — validates every family's cache path."""
+    cfg, params = arch_state(name)
+    B, S, M = 2, 9, 5
+    batch = make_batch(cfg, B, S, key=11)
+    tokens, _ = generate(cfg, params, batch, RT, max_new_tokens=M)
+    assert tokens.shape == (B, M)
+
+    full = dict(batch, tokens=jnp.concatenate(
+        [batch["tokens"], tokens], axis=1))
+    logits, _ = forward(cfg, params, full, RT)
+    off = cfg.frontend_tokens if cfg.frontend == "vision" else 0
+    for i in range(M):
+        expect = jnp.argmax(
+            logits[:, off + S - 1 + i, : cfg.vocab_size], axis=-1
+        )
+        np.testing.assert_array_equal(
+            np.asarray(tokens[:, i]), np.asarray(expect), err_msg=f"step {i}"
+        )
+
+
+@pytest.mark.parametrize("name", ["granite-8b", "gemma3-1b"])
+def test_paged_path_matches_dense_path(arch_state, name):
+    cfg, params = arch_state(name)
+    batch = make_batch(cfg, B=2, S=10, key=3)
+    dense, _ = generate(cfg, params, batch, RT, max_new_tokens=6)
+    paged, stats = generate(cfg, params, batch, RT, max_new_tokens=6,
+                            paged=True)
+    np.testing.assert_array_equal(np.asarray(paged), np.asarray(dense))
+    assert set(stats["ttft_s"]) == {0, 1} and set(stats["kv_bytes"]) == {0, 1}
+
+
+def test_paged_supported_matrix():
+    assert paged_supported(get_reduced("granite-8b"))
+    assert paged_supported(get_reduced("gemma3-1b"))
+    assert paged_supported(get_reduced("phi-3-vision-4.2b"))
+    assert not paged_supported(get_reduced("falcon-mamba-7b"))
+    assert not paged_supported(get_reduced("recurrentgemma-2b"))
+    assert not paged_supported(get_reduced("seamless-m4t-medium"))
+    with pytest.raises(ValueError):
+        ServeEngine(
+            get_reduced("falcon-mamba-7b"), params=None, rt=RT, paged=True
+        )
+
+
+# --------------------------------------------------- continuous batching
+def _run_alone(cfg, params, prompt, max_new):
+    out, _ = generate(
+        cfg, params, {"tokens": jnp.asarray(prompt[None])}, RT, max_new
+    )
+    return np.asarray(out[0])
+
+
+def test_continuous_batching_matches_alone(arch_state):
+    """Variable-length staggered requests through 2 slots: every request's
+    output must equal its isolated run, and the pool must drain."""
+    cfg, params = arch_state("granite-8b")
+    rng = np.random.RandomState(0)
+    prompts = [
+        rng.randint(0, cfg.vocab_size, (s,)).astype(np.int32)
+        for s in (5, 11, 17, 8)
+    ]
+    max_news = [9, 4, 12, 7]
+    eng = ServeEngine(
+        cfg, params, RT,
+        EngineConfig(max_slots=2, page_size=8, num_pages=33, max_len=64,
+                     inner_steps=4),
+    )
+    rids = [eng.submit(p, m) for p, m in zip(prompts, max_news)]
+    out = eng.run()
+    for rid, p, m in zip(rids, prompts, max_news):
+        assert out[rid].shape == (m,)
+        np.testing.assert_array_equal(
+            out[rid], _run_alone(cfg, params, p, m), err_msg=f"rid={rid}"
+        )
+    eng.pool.check()
+    assert eng.pool.pages_in_use == 0
+    assert set(eng.stats["ttft_s"]) == set(rids)
+    assert all(b > 0 for b in eng.stats["kv_bytes"].values())
+
+
+def test_engine_sliding_window_family(arch_state):
+    cfg, params = arch_state("gemma3-1b")
+    rng = np.random.RandomState(2)
+    prompts = [rng.randint(0, cfg.vocab_size, (s,)).astype(np.int32)
+               for s in (7, 13)]
+    eng = ServeEngine(
+        cfg, params, RT,
+        EngineConfig(max_slots=2, page_size=8, num_pages=33, max_len=64,
+                     inner_steps=3),
+    )
+    rids = [eng.submit(p, 6) for p in prompts]
+    out = eng.run()
+    for rid, p in zip(rids, prompts):
+        np.testing.assert_array_equal(out[rid], _run_alone(cfg, params, p, 6))
+
+
+def test_engine_eviction_under_pressure_stays_exact(arch_state):
+    """Optimistic admission: both requests start at one page and grow past
+    the combined budget, so the engine must preempt the YOUNGEST
+    (evict+requeue, FIFO fairness) and still produce exact outputs."""
+    cfg, params = arch_state("granite-8b")
+    rng = np.random.RandomState(4)
+    prompts = [rng.randint(0, cfg.vocab_size, (4,)).astype(np.int32)
+               for _ in range(2)]
+    max_news = [24, 16]
+    eng = ServeEngine(
+        cfg, params, RT,
+        EngineConfig(max_slots=2, page_size=4, num_pages=10, max_len=48,
+                     inner_steps=4, policy="optimistic"),
+    )
+    rids = [eng.submit(p, m) for p, m in zip(prompts, max_news)]
+    out = eng.run()
+    assert eng.stats.get("evictions", 0) > 0
+    for rid, p, m in zip(rids, prompts, max_news):
+        np.testing.assert_array_equal(out[rid], _run_alone(cfg, params, p, m))
+    eng.pool.check()
+    assert eng.pool.pages_in_use == 0
+
+
+def test_engine_bucketed_prefill_exact_and_bounded_compiles(arch_state):
+    """prefill_bucket pads prompts to a shared shape (bounding XLA prefill
+    compiles to max_len/bucket programs) without changing any output token."""
+    from repro.serve import dense
+
+    cfg, params = arch_state("granite-8b")
+    rng = np.random.RandomState(9)
+    prompts = [rng.randint(0, cfg.vocab_size, (s,)).astype(np.int32)
+               for s in (3, 6, 5, 7)]          # all bucket up to length 8
+    eng = ServeEngine(
+        cfg, params, RT,
+        EngineConfig(max_slots=2, page_size=8, num_pages=33, max_len=64,
+                     inner_steps=4, prefill_bucket=8),
+    )
+    before = dense.CACHE_BUILDS
+    rids = [eng.submit(p, 5) for p in prompts]
+    out = eng.run()
+    # 4 distinct prompt lengths share ONE bucketed prefill program
+    assert dense.CACHE_BUILDS - before == 1
+    for rid, p in zip(rids, prompts):
+        np.testing.assert_array_equal(out[rid], _run_alone(cfg, params, p, 5))
+
+
+def test_engine_bucketed_prefill_exact_past_sliding_window(arch_state):
+    """Regression: right-padding a prompt past a local layer's window must
+    not ring-evict real in-window tokens from the prefill cache — the
+    engine prefills with full (un-windowed) caches for the page pool."""
+    cfg, params = arch_state("gemma3-1b")
+    assert cfg.sliding_window == 64
+    rng = np.random.RandomState(13)
+    prompt = rng.randint(0, cfg.vocab_size, (66,)).astype(np.int32)
+    eng = ServeEngine(
+        cfg, params, RT,
+        EngineConfig(max_slots=1, page_size=16, num_pages=13, max_len=96,
+                     inner_steps=3, prefill_bucket=16),  # pads 66 -> 80 > 64
+    )
+    rid = eng.submit(prompt, 4)
+    out = eng.run()
+    np.testing.assert_array_equal(out[rid], _run_alone(cfg, params, prompt, 4))
+
+
+def test_engine_pallas_kernel_path(arch_state):
+    """End-to-end decode through the Pallas paged kernel (interpret mode on
+    CPU) must match the jnp-oracle engine path."""
+    cfg, params = arch_state("granite-8b")
+    rng = np.random.RandomState(5)
+    prompt = rng.randint(0, cfg.vocab_size, (6,)).astype(np.int32)
+    outs = {}
+    for use_kernel in (False, True):
+        eng = ServeEngine(
+            cfg, params, RT,
+            EngineConfig(max_slots=1, page_size=8, num_pages=9, max_len=16,
+                         inner_steps=2, use_kernel=use_kernel),
+        )
+        rid = eng.submit(prompt, 3)
+        outs[use_kernel] = eng.run()[rid]
+    np.testing.assert_array_equal(outs[True], outs[False])
+
+
+def test_engine_dense_fallback_family(arch_state):
+    cfg, params = arch_state("falcon-mamba-7b")
+    rng = np.random.RandomState(6)
+    prompts = [rng.randint(0, cfg.vocab_size, (8,)).astype(np.int32)
+               for _ in range(2)]
+    eng = ServeEngine(cfg, params, RT, EngineConfig(max_slots=2))
+    assert not eng.paged
+    rids = [eng.submit(p, 5) for p in prompts]
+    out = eng.run()
+    batch = {"tokens": jnp.asarray(np.stack(prompts))}
+    expect, _ = generate(cfg, params, batch, RT, 5)
+    for b, rid in enumerate(rids):
+        np.testing.assert_array_equal(out[rid], np.asarray(expect[b]))
+    assert set(eng.stats["ttft_s"]) == set(rids)
+
+
+def test_engine_reusable_across_runs(arch_state):
+    """submit()/run() a second time on the same engine: only the new
+    request's output is returned and per-run stats stay sane."""
+    cfg, params = arch_state("granite-8b")
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(0, cfg.vocab_size, (6,)).astype(np.int32)
+               for _ in range(2)]
+    eng = ServeEngine(
+        cfg, params, RT,
+        EngineConfig(max_slots=2, page_size=8, num_pages=17, max_len=32,
+                     inner_steps=4),
+    )
+    r0 = eng.submit(prompts[0], 5)
+    out0 = eng.run()
+    assert set(out0) == {r0}
+    r1 = eng.submit(prompts[1], 5)
+    out1 = eng.run()
+    assert set(out1) == {r1}
+    assert eng.stats["decode_tokens"] == 4 and eng.stats["tokens_per_s"] > 0
+    np.testing.assert_array_equal(
+        out1[r1], _run_alone(cfg, params, prompts[1], 5)
+    )
+    eng.pool.check()
+
+
+def test_engine_rejects_oversized_request(arch_state):
+    cfg, params = arch_state("granite-8b")
+    eng = ServeEngine(
+        cfg, params, RT,
+        EngineConfig(max_slots=1, page_size=4, num_pages=5, max_len=64),
+    )
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(40, np.int32), 20)   # > pool budget
+
+
+# ----------------------------------------------------- retrace regression
+def test_generate_does_not_retrace_on_same_shapes(arch_state):
+    from repro.serve import dense
+
+    cfg, params = arch_state("granite-8b")
+    batch = make_batch(cfg, B=2, S=19, key=8)   # unique shape for this test
+    before = dense.CACHE_BUILDS
+    generate(cfg, params, batch, RT, max_new_tokens=4)
+    cold = dense.CACHE_BUILDS - before
+    assert cold == 2                             # prefill + decode loop
+    generate(cfg, params, batch, RT, max_new_tokens=4)
+    assert dense.CACHE_BUILDS - before == cold   # cache hit: no rebuild
+
+    total = 19 + 4
+    bkey = dense.batch_shape_key(batch)
+    prefill_fn = dense.compiled_prefill(cfg, RT, bkey, total)
+    loop_fn = dense.compiled_decode_loop(cfg, RT, bkey, total, 4, 0.0)
+    for fn in (prefill_fn, loop_fn):             # jax.jit miss counters
+        if hasattr(fn, "_cache_size"):
+            assert fn._cache_size() == 1, "second call retraced"
+
+
+# ------------------------------------------------------- sample_token fix
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_sample_token_finfo_masking_over_dtypes(dtype):
+    """Padded-vocab masking must use the dtype's finfo min — a hard-coded
+    -1e30 overflows fp16 (and exceeds bf16 resolution tricks)."""
+    vocab, padded = 5, 8
+    logits = jnp.full((2, padded), 10.0, dtype)
+    logits = logits.at[:, vocab:].set(20.0)      # padding ids look best
+    tok = sample_token(logits, jax.random.PRNGKey(0), 0.0, vocab)
+    assert np.asarray(tok).max() < vocab
+    for seed in range(5):
+        tok = sample_token(logits, jax.random.PRNGKey(seed), 1.0, vocab)
+        assert np.asarray(tok).max() < vocab, "sampled a padded id"
+    masked = jnp.where(
+        jnp.arange(padded) < vocab, logits, jnp.finfo(dtype).min
+    )
+    assert bool(jnp.all(jnp.isfinite(masked) | (masked == jnp.finfo(dtype).min)))
+
+
+@hypothesis.given(st.integers(0, 2**31 - 1))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_zero_temperature_equals_argmax(seed):
+    rng = np.random.RandomState(seed % (2**31 - 1))
+    vocab = 11
+    logits = jnp.asarray(rng.randn(3, 16), jnp.float32)
+    tok = sample_token(logits, jax.random.PRNGKey(seed), 0.0, vocab)
+    expect = jnp.argmax(logits[:, :vocab], axis=-1)
+    np.testing.assert_array_equal(np.asarray(tok), np.asarray(expect))
