@@ -1,0 +1,77 @@
+"""Bench-regression gate: compare a fresh ``benchmarks.run --json`` snapshot
+against the committed reference.
+
+    python -m benchmarks.check_regression --ref BENCH_serve.json \
+        --fresh BENCH_serve.fresh.json [--tolerance 20]
+
+Rules
+-----
+* The fresh snapshot must contain exactly the reference's row names — a
+  silently dropped (or renamed) benchmark is a failure, not a pass.
+* Rows whose reference ``us_per_call`` is 0.0 are *accounting* rows
+  (memory factors, byte counts): their ``derived`` string must match
+  exactly — these are hardware-independent claims and any drift is a real
+  behavior change.
+* Timed rows gate on slowdown only: ``fresh <= ref * tolerance``. The
+  tolerance is deliberately loose (CI runners vs the snapshot machine,
+  interpret-mode CPU noise); the gate exists to catch catastrophic
+  regressions — an accidental per-token retrace shows up as 100x, not 2x.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str):
+    with open(path) as f:
+        return {r["name"]: r for r in json.load(f)["rows"]}
+
+
+def compare(ref: dict, fresh: dict, tolerance: float) -> list:
+    errors = []
+    missing = sorted(set(ref) - set(fresh))
+    extra = sorted(set(fresh) - set(ref))
+    if missing:
+        errors.append(f"rows missing from fresh run: {missing}")
+    if extra:
+        errors.append(
+            f"rows absent from the committed snapshot: {extra} "
+            "(regenerate and commit the BENCH_*.json)"
+        )
+    for name in sorted(set(ref) & set(fresh)):
+        r, f = ref[name], fresh[name]
+        if r["us_per_call"] == 0.0:
+            if f["derived"] != r["derived"]:
+                errors.append(
+                    f"{name}: accounting drift\n  ref:   {r['derived']}"
+                    f"\n  fresh: {f['derived']}"
+                )
+        elif f["us_per_call"] > r["us_per_call"] * tolerance:
+            errors.append(
+                f"{name}: {f['us_per_call']:.1f}us vs ref "
+                f"{r['us_per_call']:.1f}us (> {tolerance:g}x tolerance)"
+            )
+    return errors
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ref", required=True, help="committed snapshot")
+    ap.add_argument("--fresh", required=True, help="snapshot from this run")
+    ap.add_argument("--tolerance", type=float, default=20.0,
+                    help="max allowed slowdown ratio for timed rows")
+    args = ap.parse_args()
+    errors = compare(load(args.ref), load(args.fresh), args.tolerance)
+    if errors:
+        print(f"BENCH REGRESSION ({args.ref}):", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        raise SystemExit(1)
+    n = len(load(args.ref))
+    print(f"bench gate OK: {n} rows within {args.tolerance:g}x of {args.ref}")
+
+
+if __name__ == "__main__":
+    main()

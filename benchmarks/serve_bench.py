@@ -7,6 +7,13 @@ same work. Interpret-mode CPU timings are NOT TPU perf claims (see
 EXPERIMENTS.md); the derived fields carry the memory accounting — the
 KV-bytes ratio is hardware-independent and is the point of the paged pool
 (Li et al. 2021-style empirical memory pinpointing applied to serving).
+
+With >= 2 visible devices (CI forces them via
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``) a sharded section
+also runs: the same engine at mesh shapes 1x2 and 2x2, reporting tokens/s
+and the per-device KV-pool bytes — the deterministic
+``serve/kv_bytes_per_device`` row is the hardware-independent claim (TP
+shards the pool's kv-head axis, so bytes/chip shrink by the model factor).
 """
 from __future__ import annotations
 
@@ -95,6 +102,75 @@ def main() -> None:
         f"dense/paged={kv_dense/max(kv_paged, 1):.2f}x "
         f"(paged pays only used pages; dense pays the full "
         f"(max_prompt+max_new) extent per row)",
+    )
+
+    if len(jax.devices()) >= 2:
+        sharded_section()
+
+
+def sharded_section() -> None:
+    """Tensor-parallel + replicated serving over forced host devices."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_reduced
+    from repro.launch.mesh import make_serve_mesh
+    from repro.models import Runtime, init_params
+    from repro.serve import EngineConfig, ReplicatedServeEngine, ServeEngine
+
+    header("Sharded serving (paged pool over the (data, model) mesh)")
+    cfg = get_reduced("moonshot-v1-16b-a3b")   # GQA: 4 kv heads shard TP<=4
+    rt = Runtime(dtype=jnp.float32, chunk_q=32)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    max_new = 8
+    prompts = [
+        rng.randint(0, cfg.vocab_size, (s,)).astype(np.int32)
+        for s in (9, 16, 12, 14)
+    ]
+    ecfg = EngineConfig.sized_for(
+        16, max_new, slots=2, page_size=8, headroom=2.0, inner_steps=4,
+    )
+    kv_per_dev = {}
+    n_dev = len(jax.devices())
+    shapes = [(1, 1), (1, 2)] + ([(2, 2)] if n_dev >= 4 else [])
+    for data_par, model_par in shapes:
+        mesh = make_serve_mesh(data_par, model_par)
+        tag = f"{data_par}x{model_par}"
+
+        def run():
+            if data_par > 1:
+                eng = ReplicatedServeEngine(cfg, params, rt, ecfg, mesh=mesh)
+            else:
+                from repro.launch.mesh import replica_submeshes
+
+                eng = ServeEngine(
+                    cfg, params, rt.replace(mesh=replica_submeshes(mesh)[0]),
+                    ecfg,
+                )
+            rids = [eng.submit(p, max_new) for p in prompts]
+            out = eng.run()
+            return eng, sum(len(v) for v in out.values())
+
+        run()                                 # warm the compile caches
+        eng, n_tokens = run()
+        s = eng.stats
+        kv = s["kv_pool_bytes_per_device"] if data_par > 1 else (
+            eng.kv_pool_bytes_per_device()
+        )
+        kv_per_dev[tag] = kv
+        emit(
+            f"serve/paged_mesh_{tag}",
+            s["wall_s"] / max(n_tokens, 1) * 1e6,
+            f"tokens_per_s={s['tokens_per_s']:.1f}; "
+            f"kv_pool_bytes_per_device={kv}",
+        )
+    factor = kv_per_dev["1x1"] / max(kv_per_dev.get("1x2", 1), 1)
+    emit(
+        "serve/kv_bytes_per_device",
+        0.0,
+        "; ".join(f"{k}={v}" for k, v in sorted(kv_per_dev.items()))
+        + f"; tp2_factor={factor:.2f}x",
     )
 
 

@@ -5,13 +5,27 @@ pure-jnp oracle (``ref.py``); the kernel is the TPU path, the oracle doubles
 as the fast CPU path (interpret-mode Pallas inside a decode scan is far
 slower than one gather + einsum). Both share the exact layout contract
 documented in ``ref.py``.
+
+Tensor parallelism: with ``mesh`` set and a divisible KV-head count, the op
+runs inside ``shard_map`` over the ``model`` axis — each shard holds
+``Kv / tp`` heads of the page pools (``sharding.specs.pool_kv_spec``) and
+runs the kernel on its local head slice; the block table and lengths are
+replicated, so page ids address the same (head-sliced) pages everywhere.
+No collective is needed here: per-kv-head outputs are independent, and the
+row-sharded ``wo`` matmul downstream carries the reduce.
 """
 from __future__ import annotations
 
 import jax
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.kernels.paged_attention.kernel import paged_attention_kernel
 from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def tp_size(mesh) -> int:
+    return mesh.shape["model"] if mesh is not None and "model" in mesh.shape else 1
 
 
 def paged_attention(
@@ -24,13 +38,29 @@ def paged_attention(
     window: int = 0,
     use_kernel: bool = True,
     interpret=None,
+    mesh=None,
 ) -> jax.Array:
     """q: (B, Kv, G, hd) pre-scaled; pools (N, page, Kv, hd) -> (B, Kv, G, hd)."""
-    if use_kernel:
-        return paged_attention_kernel(
-            q, k_pages, v_pages, tables, lengths,
-            window=window, interpret=interpret,
+
+    def attend(q_, kp_, vp_, tbl_, ln_):
+        if use_kernel:
+            return paged_attention_kernel(
+                q_, kp_, vp_, tbl_, ln_, window=window, interpret=interpret,
+            )
+        return paged_attention_ref(q_, kp_, vp_, tbl_, ln_, window=window)
+
+    tp = tp_size(mesh)
+    if tp > 1 and q.shape[1] % tp == 0:
+        # per-shard head slices: the kernel grid sees Kv/tp program rows,
+        # gathering from a pool that only stores those heads' pages
+        head = P(None, "model", None, None)
+        pool = P(None, None, "model", None)
+        fn = shard_map(
+            attend,
+            mesh=mesh,
+            in_specs=(head, pool, pool, P(None, None), P(None)),
+            out_specs=head,
+            check_vma=False,
         )
-    return paged_attention_ref(
-        q, k_pages, v_pages, tables, lengths, window=window
-    )
+        return fn(q, k_pages, v_pages, tables, lengths)
+    return attend(q, k_pages, v_pages, tables, lengths)

@@ -24,3 +24,44 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_test_mesh(data: int = 2, model: int = 2):
     """Small mesh for subprocess tests (device count forced by XLA_FLAGS)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_serve_mesh(data: int = 1, model: int = 1):
+    """Serving mesh: `model` shards one engine (TP), `data` counts replicas.
+
+    Requires data*model visible devices (force with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` on CPU).
+    """
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(
+            f"mesh {data}x{model} needs {data * model} devices, have {n}"
+        )
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def replica_submeshes(mesh):
+    """Split a ``(data, model)`` mesh into per-replica model-only meshes.
+
+    Each data slice becomes an independent serving replica holding a full
+    (TP-sharded) parameter copy; a mesh without a ``data`` axis is one
+    replica.
+    """
+    from jax.sharding import Mesh
+
+    names = tuple(mesh.axis_names)
+    if "data" not in names or mesh.shape["data"] == 1:
+        keep = [a for a in names if a != "data"] or list(names)
+        devs = mesh.devices.reshape(
+            tuple(mesh.shape[a] for a in keep)
+        )
+        return [Mesh(devs, tuple(keep))]
+    d_axis = names.index("data")
+    devs = mesh.devices
+    out = []
+    for i in range(mesh.shape["data"]):
+        sl = [slice(None)] * devs.ndim
+        sl[d_axis] = i
+        keep = tuple(a for a in names if a != "data")
+        out.append(Mesh(devs[tuple(sl)], keep))
+    return out

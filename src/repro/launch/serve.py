@@ -7,6 +7,10 @@
     PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --paged \
         --requests 8 --slots 4 --page-size 16
 
+    # sharded serving: 2 data replicas x TP=2 over 4 (forced-host) devices
+    PYTHONPATH=src python -m repro.launch.serve --arch moonshot-v1-16b-a3b \
+        --paged --mesh 2x2 --requests 8
+
 With ``--reduced`` (the CPU-container mode) a smoke-size variant of the
 architecture family is instantiated and driven through the real prefill +
 decode path. Without it, the full config is built (requires a TPU fleet;
@@ -16,25 +20,24 @@ params are initialized sharded via the dry-run shardings).
 varying prompt lengths are admitted into fixed decode slots against the
 paged KV-cache pool; unsupported families (SSM / enc-dec) fall back to the
 dense path automatically.
+
+``--mesh DxM`` serves over a ``(data, model)`` mesh: the KV pool and params
+shard over the ``model`` axis (Megatron head split; KV bytes per device
+shrink by M) and the ``data`` axis runs D least-loaded-routed engine
+replicas. On CPU the device count is forced via
+``--xla_force_host_platform_device_count`` unless ``--no-force-devices``
+(set it for real TPU fleets, where the devices already exist).
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import ASSIGNED, get_config, get_reduced
-from repro.models import Runtime, init_params
-from repro.serve import EngineConfig, ServeEngine, paged_supported
-from repro.train import generate
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma3-1b", choices=ASSIGNED)
+    ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--batch", type=int, default=4)
@@ -50,9 +53,47 @@ def main() -> None:
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--kernel", action="store_true",
                     help="route decode through the Pallas paged kernel")
+    ap.add_argument("--mesh", default="",
+                    help="DxM (data replicas x model shards), e.g. 2x2")
+    ap.add_argument("--no-force-devices", dest="force_devices",
+                    action="store_false", default=True,
+                    help="don't force host platform device count for --mesh")
     args = ap.parse_args()
 
+    data_par = model_par = 1
+    if args.mesh:
+        if not args.paged:
+            ap.error("--mesh requires --paged (only the continuous-batching "
+                     "engine serves sharded; the dense driver is unsharded)")
+        data_par, model_par = (int(x) for x in args.mesh.lower().split("x"))
+        if args.force_devices:
+            # must land before jax initializes its backend (first device use)
+            flags = os.environ.get("XLA_FLAGS", "")
+            if "--xla_force_host_platform_device_count" not in flags:
+                os.environ["XLA_FLAGS"] = (
+                    flags
+                    + f" --xla_force_host_platform_device_count="
+                    f"{data_par * model_par}"
+                ).strip()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import ASSIGNED, get_config, get_reduced
+    from repro.launch.mesh import make_serve_mesh
+    from repro.models import Runtime, init_params
+    from repro.serve import (
+        EngineConfig,
+        ReplicatedServeEngine,
+        ServeEngine,
+        paged_supported,
+    )
+    from repro.train import generate
+
+    assert args.arch in ASSIGNED, f"--arch must be one of {ASSIGNED}"
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    mesh = make_serve_mesh(data_par, model_par) if args.mesh else None
     rt = Runtime(dtype=jnp.float32 if args.reduced else jnp.bfloat16, chunk_q=32)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
     rng = np.random.RandomState(args.seed)
@@ -61,17 +102,19 @@ def main() -> None:
         paged = paged_supported(cfg)
         if not paged:
             print(f"{cfg.name}: family {cfg.family!r} -> dense fallback")
-        eng = ServeEngine(
-            cfg, params, rt,
-            EngineConfig.sized_for(
-                args.prompt_len + cfg.frontend_tokens, args.new_tokens,
-                slots=args.slots, page_size=args.page_size, headroom=2.0,
-                temperature=args.temperature, seed=args.seed,
-                use_kernel=args.kernel,
-                prefill_bucket=args.page_size,  # random lengths: bound compiles
-            ),
-            paged=paged,
+        ecfg = EngineConfig.sized_for(
+            args.prompt_len + cfg.frontend_tokens, args.new_tokens,
+            slots=args.slots, page_size=args.page_size, headroom=2.0,
+            temperature=args.temperature, seed=args.seed,
+            use_kernel=args.kernel,
+            prefill_bucket=args.page_size,  # random lengths: bound compiles
         )
+        if mesh is not None:
+            eng = ReplicatedServeEngine(
+                cfg, params, rt, ecfg, mesh=mesh, paged=paged
+            )
+        else:
+            eng = ServeEngine(cfg, params, rt, ecfg, paged=paged)
         rids = []
         for _ in range(args.requests):
             plen = rng.randint(max(args.prompt_len // 2, 1), args.prompt_len + 1)
@@ -85,11 +128,17 @@ def main() -> None:
         s = eng.stats
         ttft = np.mean(list(s["ttft_s"].values()))
         print(
-            f"{cfg.name} [{cfg.family}] paged={eng.paged}: "
-            f"{sum(len(v) for v in out.values())} tokens, "
+            f"{cfg.name} [{cfg.family}] paged={paged}"
+            + (f" mesh={data_par}x{model_par}" if mesh is not None else "")
+            + f": {sum(len(v) for v in out.values())} tokens, "
             f"{s['tokens_per_s']:.1f} tok/s, mean TTFT {ttft * 1e3:.0f}ms, "
             f"evictions={s.get('evictions', 0)}"
         )
+        if mesh is not None:
+            print(
+                f"  replicas={s.get('replica_requests')} "
+                f"kv_pool_bytes_per_device={s.get('kv_pool_bytes_per_device')}"
+            )
         for rid in rids[:2]:
             print(f"  req[{rid}]: {out[rid][:12].tolist()}...")
         return

@@ -261,6 +261,7 @@ def attention_decode_paged(
     theta: float,
     window: int = 0,
     use_kernel: bool = False,
+    mesh=None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One decode token per slot against the paged KV pool.
 
@@ -271,6 +272,9 @@ def attention_decode_paged(
 
     Unlike ``attention_decode``'s ring buffer, every slot here has its own
     position, so continuous batching can mix requests at different depths.
+    With ``mesh`` set the attention itself runs shard_map'd over the
+    ``model`` axis on per-shard head slices (see ``kernels.paged_attention``)
+    — the tensor-parallel serving path.
     """
     from repro.kernels.paged_attention import paged_attention
 
@@ -299,7 +303,7 @@ def attention_decode_paged(
     q = q.reshape(B, n_kv, G, head_dim) * (head_dim ** -0.5)
     out = paged_attention(
         q, k_c, v_c, tables, lengths + 1,
-        window=window, use_kernel=use_kernel,
+        window=window, use_kernel=use_kernel, mesh=mesh,
     )
     out = out.astype(dtype).reshape(B, 1, n_heads * head_dim)
     return out @ p["wo"].astype(dtype), {"kp": k_c, "vp": v_c}

@@ -247,15 +247,35 @@ def init_paged_state(
     """Paged decode state: per-layer KV page pools shared by ``B`` slots.
 
     ``tables`` rows are all-zero (null page) until the serve engine admits a
-    request into the slot; ``lengths`` count cached tokens per slot.
+    request into the slot; ``lengths`` count cached tokens per slot. With
+    ``rt.mesh`` set the pools are laid out head-sharded over the ``model``
+    axis from the start (``sharding.specs.paged_state_specs``) — each device
+    holds ``Kv / tp`` heads of every page — and the slot-addressing arrays
+    are committed replicated so host-side ``.at[].set`` updates stay on the
+    mesh.
     """
     specs = layer_specs(cfg, seq_len=max_len, long_variant=rt.long_variant)
     table_width = -(-max_len // page_size)
-    return {
-        "caches": stack_mod.init_stack_pool(cfg, rt, specs, num_pages, page_size),
-        "tables": jnp.zeros((B, table_width), jnp.int32),
-        "lengths": jnp.zeros((B,), jnp.int32),
-    }
+
+    def build() -> Dict[str, Any]:
+        return {
+            "caches": stack_mod.init_stack_pool(
+                cfg, rt, specs, num_pages, page_size
+            ),
+            "tables": jnp.zeros((B, table_width), jnp.int32),
+            "lengths": jnp.zeros((B,), jnp.int32),
+        }
+
+    if rt.mesh is None:
+        return build()
+    from repro.sharding.specs import paged_state_specs, with_sharding
+
+    shardings = with_sharding(
+        rt.mesh, paged_state_specs(cfg, jax.eval_shape(build), rt.mesh)
+    )
+    # allocate sharded from the start: a pool sized for TP-sharded capacity
+    # need never fit on one chip, so no single-device staging copy
+    return jax.jit(build, out_shardings=shardings)()
 
 
 def decode_step_paged(

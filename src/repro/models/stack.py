@@ -633,6 +633,7 @@ def stack_decode(
                         n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
                         head_dim=cfg.head_dim, theta=cfg.rope_theta,
                         window=spec.window, use_kernel=rt.use_paged_kernel,
+                        mesh=rt.mesh,
                     )
                 elif spec.kind in ("attn", "local"):
                     out, self_c = attn_mod.attention_decode(

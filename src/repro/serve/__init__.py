@@ -1,8 +1,9 @@
 from repro.serve.engine import (  # noqa: F401
     EngineConfig,
+    ReplicatedServeEngine,
     ServeEngine,
     paged_supported,
 )
 from repro.serve.pool import PagePool, PoolExhausted  # noqa: F401
 from repro.serve.sampling import sample_slots, sample_token  # noqa: F401
-from repro.serve.scheduler import Request, Scheduler  # noqa: F401
+from repro.serve.scheduler import ReplicaRouter, Request, Scheduler  # noqa: F401

@@ -36,6 +36,27 @@ def batch_shape_key(batch: Dict[str, jax.Array]) -> Tuple:
     )
 
 
+def place_batch(batch: Dict[str, jax.Array], rt: Runtime) -> Dict[str, jax.Array]:
+    """Commit batch arrays replicated onto ``rt.mesh`` (no-op without one).
+
+    The sharded serving path mixes mesh-committed params/pools with host-
+    built prompt arrays in one jit call; committing the batch replicated
+    makes that mix explicit instead of relying on uncommitted-input
+    auto-placement, and keeps the compiled signature stable across calls.
+    """
+    if rt.mesh is None:
+        return batch
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    return {
+        k: jax.device_put(
+            jnp.asarray(v),
+            NamedSharding(rt.mesh, PartitionSpec(*([None] * jnp.ndim(v)))),
+        )
+        for k, v in batch.items()
+    }
+
+
 def compiled_prefill(
     cfg: ArchConfig, rt: Runtime, batch_key: Tuple, total: int,
     dynamic_gather: bool = False, full_cache: bool = False,
@@ -128,6 +149,7 @@ def generate_dense(
         total += cfg.frontend_tokens
 
     bkey = batch_shape_key(batch)
+    batch = place_batch(batch, rt)
     prefill_fn = compiled_prefill(cfg, rt, bkey, total)
     loop_fn = compiled_decode_loop(
         cfg, rt, bkey, total, max_new_tokens, temperature

@@ -18,6 +18,19 @@ promise that for greedy decoding).
 Families whose decode state is not a KV cache (SSM / RG-LRU recurrences,
 enc-dec cross caches) fall back to the dense path (``paged=False``), grouped
 into equal-prompt-length batches.
+
+Sharded serving
+---------------
+With ``Runtime.mesh`` set, one engine spans the mesh's ``model`` axis:
+params are laid out by the Megatron rules in ``sharding.specs.param_specs``,
+the KV page pools shard their kv-head axis (``paged_state_specs``) so KV
+bytes per device shrink by the TP factor, and the paged-attention op runs
+inside shard_map on per-shard head slices — only the final (vocab-sharded)
+logits are gathered for sampling. Block tables, lengths, and every other
+slot-addressing array stay replicated, so the host-side scheduler is
+topology-blind. ``ReplicatedServeEngine`` adds the ``data`` axis: one engine
+per data slice, with requests routed to the least-loaded replica
+(``scheduler.ReplicaRouter``).
 """
 from __future__ import annotations
 
@@ -164,6 +177,17 @@ class ServeEngine:
                 "use paged=False (dense fallback)"
             )
         self.paged = paged
+        if self.rt.mesh is not None and params is not None:
+            # Megatron layout over the mesh's `model` axis; leaves whose
+            # dims don't divide stay replicated (specs.py guards), so any
+            # reduced config lowers on any mesh.
+            from repro.sharding.specs import param_specs, with_sharding
+
+            shardings = with_sharding(
+                self.rt.mesh,
+                param_specs(cfg, jax.eval_shape(lambda: params), self.rt.mesh),
+            )
+            self.params = jax.tree.map(jax.device_put, params, shardings)
         self.pool = PagePool(engine.num_pages, engine.page_size)
         self.scheduler = Scheduler(policy=engine.policy)
         self._next_rid = 0
@@ -178,12 +202,29 @@ class ServeEngine:
                 max_len=engine.max_len,
             )
             B = engine.max_slots
-            self._dev.update(
+            extras = dict(
                 remaining=jnp.zeros((B,), jnp.int32),
                 tok=jnp.zeros((B,), jnp.int32),
                 keys=jnp.stack([jax.random.PRNGKey(0)] * B),
                 steps=jnp.zeros((B,), jnp.int32),
             )
+            if self.rt.mesh is not None:
+                # commit replicated so host-side .at[].set updates stay on
+                # the mesh's device set (mixing with sharded pool args in
+                # one jit otherwise errors with incompatible devices)
+                from jax.sharding import NamedSharding, PartitionSpec
+
+                extras = {
+                    k: jax.device_put(
+                        v,
+                        NamedSharding(
+                            self.rt.mesh, PartitionSpec(*([None] * v.ndim))
+                        ),
+                    )
+                    for k, v in extras.items()
+                }
+            self._dev.update(extras)
+            self.stats["kv_pool_bytes_per_device"] = self.kv_pool_bytes_per_device()
             # key only on what the trace depends on (seed/policy are
             # host-side; self.rt already folds in use_kernel)
             ckey = (
@@ -280,6 +321,27 @@ class ServeEngine:
         )
         return per_layer * self.cfg.n_layers
 
+    def kv_pool_bytes_per_device(self) -> int:
+        """Bytes of KV pool resident on ONE device — the capacity bound the
+        tensor-parallel sharding relaxes. Computed from the actual shard
+        shapes, so it reflects replication fallbacks exactly."""
+        if not self.paged:
+            return 0
+        total = 0
+        for leaf in jax.tree.leaves(self._dev["caches"]):
+            shape = (
+                leaf.sharding.shard_shape(leaf.shape)
+                if hasattr(leaf, "sharding") else leaf.shape
+            )
+            total += int(np.prod(shape)) * leaf.dtype.itemsize
+        return total
+
+    @property
+    def outstanding_tokens(self) -> int:
+        """Token-weighted load: queued work plus pool-resident sequences."""
+        queued = self.scheduler.queued_tokens(self._prompt_total)
+        return queued + self.pool.tokens_in_use
+
     def _build_chunk_fn(self):
         cfg, rt, ecfg = self.cfg, self.rt, self.ecfg
 
@@ -357,6 +419,7 @@ class ServeEngine:
         batch = {"tokens": jnp.asarray(tokens[None])}
         if req.frontend_embeds is not None:
             batch["frontend_embeds"] = jnp.asarray(req.frontend_embeds[None])
+        batch = dense_mod.place_batch(batch, self.rt)
         prefill_fn = dense_mod.compiled_prefill(
             cfg, self.rt, dense_mod.batch_shape_key(batch),
             prompt_total + (len(tokens) - req.prompt_len),
@@ -549,3 +612,101 @@ class ServeEngine:
 
     def _dense_kv_bytes(self, total: int) -> int:
         return dense_kv_bytes(self.cfg, self.rt, total)
+
+
+class ReplicatedServeEngine:
+    """Data-parallel serving over a ``(data, model)`` mesh.
+
+    The mesh factorizes into ``data`` replicas of a model-only submesh
+    (``launch.mesh.replica_submeshes``); each replica carries a full
+    (TP-sharded) parameter copy and its own KV pool + scheduler, and
+    ``ReplicaRouter`` assigns every request to the least-loaded replica.
+    Because an engine's per-request output is identical to running the
+    request alone, routing can never change tokens — only latency — so the
+    replicated engine inherits the batched==alone determinism guarantee.
+
+    ``run()`` drains replicas sequentially from this host; on real hardware
+    each replica's chunk executes on its own device slice, so a multi-
+    controller launcher can drive them concurrently without any change to
+    the engines themselves.
+    """
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params: Params,
+        rt: Optional[Runtime] = None,
+        engine: EngineConfig = EngineConfig(),
+        mesh=None,
+        paged: Optional[bool] = None,
+    ):
+        from repro.launch.mesh import replica_submeshes
+        from repro.serve.scheduler import ReplicaRouter
+
+        rt = rt if rt is not None else Runtime()
+        meshes = replica_submeshes(mesh) if mesh is not None else [rt.mesh]
+        self.engines = [
+            ServeEngine(cfg, params, rt.replace(mesh=m), engine, paged=paged)
+            for m in meshes
+        ]
+        self.router = ReplicaRouter(len(self.engines))
+        self._where: Dict[int, Tuple[int, int]] = {}  # rid -> (replica, local)
+        self._next_rid = 0
+        self.stats: Dict[str, Any] = {}
+
+    def submit(
+        self,
+        tokens: np.ndarray,
+        max_new: int,
+        frontend_embeds: Optional[np.ndarray] = None,
+    ) -> int:
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        idx = self.router.route(
+            [e.outstanding_tokens for e in self.engines]
+        )
+        local = self.engines[idx].submit(
+            tokens, max_new, frontend_embeds=frontend_embeds
+        )
+        rid = self._next_rid
+        self._next_rid += 1
+        self._where[rid] = (idx, local)
+        return rid
+
+    def run(self) -> Dict[int, np.ndarray]:
+        # run every replica, queued or not: an empty run resets the
+        # engine's per-run stats, so the aggregates below never mix a
+        # previous run's numbers into this one
+        outs: List[Dict[int, np.ndarray]] = [
+            eng.run() for eng in self.engines
+        ]
+        merged = {
+            rid: outs[idx][local]
+            for rid, (idx, local) in self._where.items()
+            if local in outs[idx]
+        }
+        # replicas are drained sequentially from this host, so aggregate
+        # throughput is total delivered work over total wall (a concurrent
+        # multi-controller drive would approach the per-replica sum)
+        wall = sum(e.stats.get("wall_s", 0.0) for e in self.engines)
+        delivered = sum(
+            e.stats.get("decode_tokens", 0) for e in self.engines
+        )
+        self.stats = {
+            "replica_requests": list(self.router.routed),
+            "tokens_per_s": delivered / max(wall, 1e-9),
+            "wall_s": wall,
+            "decode_tokens": delivered,
+            "evictions": sum(
+                e.stats.get("evictions", 0) for e in self.engines
+            ),
+            "ttft_s": {
+                rid: self.engines[idx].stats["ttft_s"][local]
+                for rid, (idx, local) in self._where.items()
+                if local in self.engines[idx].stats["ttft_s"]
+            },
+            "kv_pool_bytes_per_device": max(
+                e.stats.get("kv_pool_bytes_per_device", 0)
+                for e in self.engines
+            ),
+        }
+        return merged

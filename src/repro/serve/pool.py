@@ -63,6 +63,12 @@ class PagePool:
     def free_pages(self) -> int:
         return len(self._free)
 
+    @property
+    def tokens_in_use(self) -> int:
+        """Total reserved token capacity across live sequences (the load
+        measure the replica router balances on)."""
+        return sum(s.tokens for s in self._seqs.values())
+
     def seq_pages(self, sid: int) -> List[int]:
         return list(self._seqs[sid].pages)
 

@@ -10,12 +10,17 @@ decode slot only when the pool can cover its reservation —
   chunk-by-chunk and, on exhaustion, preempts the youngest running request
   (pages freed, request requeued at the front — recompute-style preemption,
   the scheduling analogue of discard-and-rematerialize).
+
+``ReplicaRouter`` is the layer above: data-parallel serving runs one engine
+per ``data``-axis slice, and the router assigns each incoming request to the
+replica with the least outstanding work (token-weighted, ties to the lowest
+index so routing is deterministic).
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Optional
+from typing import Deque, List, Optional
 
 import numpy as np
 
@@ -56,6 +61,10 @@ class Scheduler:
         """Preempted request goes back to the head (it was admitted first)."""
         self._queue.appendleft(req)
 
+    def queued_tokens(self, prompt_total_of) -> int:
+        """Token-weighted size of the wait queue (replica load accounting)."""
+        return sum(prompt_total_of(r) + r.max_new for r in self._queue)
+
     def reserve_tokens(self, req: Request, prompt_total: int) -> int:
         """Tokens to reserve at admission. The final sampled token is never
         written back (nothing consumes it), hence ``max_new - 1``."""
@@ -79,3 +88,24 @@ class Scheduler:
         if need + headroom_pages > pool.free_pages:
             return None
         return self._queue.popleft()
+
+
+class ReplicaRouter:
+    """Least-loaded request routing across data-parallel engine replicas.
+
+    The caller passes each replica's CURRENT load (token-weighted
+    outstanding work — queued requests plus pool-resident sequences, see
+    ``ServeEngine.outstanding_tokens``), so routing reflects what actually
+    occupies KV pools and decode slots rather than a shadow counter that
+    can drift from it. Ties go to the lowest index — deterministic.
+    """
+
+    def __init__(self, n_replicas: int):
+        assert n_replicas >= 1
+        self.routed: List[int] = [0] * n_replicas  # requests per replica
+
+    def route(self, loads: List[int]) -> int:
+        assert len(loads) == len(self.routed)
+        idx = min(range(len(loads)), key=lambda i: (loads[i], i))
+        self.routed[idx] += 1
+        return idx

@@ -185,6 +185,42 @@ def _size(mesh, axes) -> int:
     return s
 
 
+def pool_kv_spec(cfg: ArchConfig, ndim: int, tp: int) -> P:
+    """Spec for one paged KV pool leaf ``(..., num_pages, page, Kv, hd)``.
+
+    The pool shards over ``model`` on the KV-HEAD axis (dim -2) — the
+    Megatron head split applied to serving memory: each chip stores
+    ``Kv / tp`` heads of every page, so KV bytes per chip shrink by the TP
+    factor while page ids stay globally valid (the block table is
+    replicated). Falls back to replication when the head count doesn't
+    divide (same guard as the wk/wv param rule above).
+    """
+    dims: list = [None] * ndim
+    if _div(cfg.n_kv_heads, tp) and tp > 1:
+        dims[-2] = "model"
+    return P(*dims)
+
+
+def paged_state_specs(cfg: ArchConfig, state_shape: Any, mesh) -> Any:
+    """Spec tree for the paged decode state (``models.lm.init_paged_state``).
+
+    ``caches`` leaves are page pools (head-sharded, see ``pool_kv_spec``);
+    ``tables``/``lengths`` (and any other host-updated slot arrays) are
+    replicated — every chip addresses the same page ids.
+    """
+    tp = mesh.shape["model"] if "model" in mesh.shape else 1
+
+    def one(path, leaf):
+        keys = tuple(
+            str(p.key) if hasattr(p, "key") else "" for p in path
+        )
+        if keys[-1] in ("kp", "vp"):
+            return pool_kv_spec(cfg, len(leaf.shape), tp)
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(one, state_shape)
+
+
 def with_sharding(mesh, spec_tree: Any) -> Any:
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), spec_tree,

@@ -1,10 +1,12 @@
 """Shared env for tests that spawn jax subprocesses on simulated devices."""
 import os
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
 
 def subprocess_env():
     """Inherit the environment (JAX_PLATFORMS etc. — a bare env hangs jax
     backend probing on CPU containers); scripts set their own XLA_FLAGS."""
-    env = dict(os.environ, PYTHONPATH="src")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO_ROOT, "src"))
     env.pop("XLA_FLAGS", None)
     return env

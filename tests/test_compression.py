@@ -4,7 +4,7 @@ import subprocess
 import sys
 import textwrap
 
-from _subproc import subprocess_env
+from _subproc import REPO_ROOT, subprocess_env
 
 from _hyp_compat import hypothesis, st
 import jax
@@ -149,12 +149,13 @@ MULTIDEV_SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.multidevice
 def test_multidevice_compressed_sync_subprocess():
     r = subprocess.run(
         [sys.executable, "-c", MULTIDEV_SCRIPT],
         capture_output=True, text=True, timeout=300,
         env=subprocess_env(),
-        cwd="/root/repo",
+        cwd=REPO_ROOT,
     )
     assert r.returncode == 0, r.stderr[-3000:]
     assert "MULTIDEV_OK" in r.stdout

@@ -12,6 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.kernel
+
 from repro.kernels.chunked_ce import chunked_ce
 from repro.kernels.chunked_ce.ref import chunked_ce_ref
 from repro.kernels.flash_attention.ops import flash_attention

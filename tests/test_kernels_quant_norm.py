@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.kernel
+
 from repro.kernels.blockwise_quant import dequantize, quantize
 from repro.kernels.blockwise_quant.ref import dequantize_ref, dynamic_map, quantize_ref
 from repro.kernels.rmsnorm import rmsnorm

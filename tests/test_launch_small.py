@@ -9,9 +9,11 @@ import subprocess
 import sys
 import textwrap
 
-from _subproc import subprocess_env
+from _subproc import REPO_ROOT, subprocess_env
 
 import pytest
+
+pytestmark = pytest.mark.multidevice
 
 
 SCRIPT = textwrap.dedent(
@@ -93,7 +95,7 @@ def test_launch_small_mesh(arch, zero):
         [sys.executable, "-c", SCRIPT.format(arch=arch, zero=zero)],
         capture_output=True, text=True, timeout=1200,
         env=subprocess_env(),
-        cwd="/root/repo",
+        cwd=REPO_ROOT,
     )
     assert r.returncode == 0, r.stderr[-4000:]
     assert f"LAUNCH_OK {arch}" in r.stdout

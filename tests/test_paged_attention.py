@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.kernel
+
 from repro.kernels.paged_attention import paged_attention, paged_attention_ref
 from repro.kernels.paged_attention.kernel import paged_attention_kernel
 

@@ -4,7 +4,7 @@ import subprocess
 import sys
 import textwrap
 
-from _subproc import subprocess_env
+from _subproc import REPO_ROOT, subprocess_env
 
 import pytest
 
@@ -111,12 +111,13 @@ RUNNER_SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.multidevice
 def test_executable_gpipe_matches_sequential():
     r = subprocess.run(
         [sys.executable, "-c", RUNNER_SCRIPT],
         capture_output=True, text=True, timeout=300,
         env=subprocess_env(),
-        cwd="/root/repo",
+        cwd=REPO_ROOT,
     )
     assert r.returncode == 0, r.stderr[-3000:]
     assert "PIPELINE_OK" in r.stdout

@@ -18,7 +18,12 @@ from _hyp_compat import hypothesis, st
 
 from repro.configs import get_reduced
 from repro.models import Runtime, forward, init_params
-from repro.serve import EngineConfig, ServeEngine, paged_supported
+from repro.serve import (
+    EngineConfig,
+    ReplicaRouter,
+    ServeEngine,
+    paged_supported,
+)
 from repro.serve.sampling import sample_token
 from repro.train.serve import generate
 
@@ -291,6 +296,58 @@ def test_engine_rejects_oversized_request(arch_state):
     )
     with pytest.raises(ValueError):
         eng.submit(np.zeros(40, np.int32), 20)   # > pool budget
+
+
+# ------------------------------------------------------- sharded serving
+def test_replica_router_least_loaded_deterministic():
+    """Least-loaded routing over caller-supplied loads, lowest index on
+    ties; routed counts accumulate per replica."""
+    r = ReplicaRouter(3)
+    assert r.route([0, 0, 0]) == 0        # all tied -> lowest index
+    assert r.route([100, 0, 0]) == 1
+    assert r.route([100, 10, 0]) == 2
+    assert r.route([100, 10, 10]) == 1    # 1 and 2 tied -> lowest index
+    assert r.route([100, 15, 10]) == 2
+    assert r.route([0, 15, 11]) == 0      # drained replica is emptiest
+    assert r.routed == [2, 2, 2]
+
+
+def test_engine_outstanding_tokens_tracks_queue_and_pool(arch_state):
+    """The load measure the router balances on: queued tokens before run,
+    zero after the pool drains."""
+    cfg, params = arch_state("granite-8b")
+    rng = np.random.RandomState(17)
+    prompt = rng.randint(0, cfg.vocab_size, (6,)).astype(np.int32)
+    eng = ServeEngine(
+        cfg, params, RT,
+        EngineConfig(max_slots=1, page_size=8, num_pages=9, max_len=16,
+                     inner_steps=2),
+    )
+    assert eng.outstanding_tokens == 0
+    eng.submit(prompt, 4)
+    assert eng.outstanding_tokens == len(prompt) + 4
+    eng.run()
+    assert eng.outstanding_tokens == 0
+
+
+def test_engine_trivial_mesh_matches_unsharded(arch_state):
+    """A 1x1 mesh exercises the whole sharded code path (placement, specs,
+    shard_map guards) on one device and must change nothing."""
+    import jax as _jax
+
+    cfg, params = arch_state("granite-8b")
+    mesh = _jax.make_mesh((1, 1), ("data", "model"))
+    rng = np.random.RandomState(21)
+    prompt = rng.randint(0, cfg.vocab_size, (7,)).astype(np.int32)
+    ecfg = EngineConfig(max_slots=2, page_size=8, num_pages=17, max_len=32,
+                        inner_steps=4)
+    outs = {}
+    for key, rt in (("plain", RT), ("mesh", RT.replace(mesh=mesh))):
+        eng = ServeEngine(cfg, params, rt, ecfg)
+        rid = eng.submit(prompt, 6)
+        outs[key] = eng.run()[rid]
+        assert eng.kv_pool_bytes_per_device() > 0
+    np.testing.assert_array_equal(outs["plain"], outs["mesh"])
 
 
 # ----------------------------------------------------- retrace regression

@@ -1,0 +1,143 @@
+"""Sharded serving: tensor-parallel paged decode over the (data, model) mesh.
+
+Subprocess tests on forced host devices (the in-process jax backend is
+already locked to one CPU device):
+
+* TP=2 / 2x2 engines must produce TOKEN-IDENTICAL output to the TP=1
+  engine for the same requests — the sharded decode is a layout change,
+  not a numerics change the sampler can see.
+* The KV pool's per-device bytes must shrink by the model-axis factor
+  (kv-head axis sharding, ``sharding.specs.pool_kv_spec``).
+* The Pallas paged kernel runs inside shard_map on per-shard head slices.
+* ``ReplicatedServeEngine`` routes work to every data replica and matches
+  the single engine.
+* MQA families (kv heads don't divide TP) fall back to a replicated pool
+  and still serve correctly.
+"""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from _subproc import REPO_ROOT, subprocess_env
+
+pytestmark = pytest.mark.multidevice
+
+HEADER = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_reduced
+    from repro.launch.mesh import make_serve_mesh, replica_submeshes
+    from repro.models import Runtime, init_params
+    from repro.serve import EngineConfig, ReplicatedServeEngine, ServeEngine
+
+    cfg = get_reduced("{arch}")
+    rt = Runtime(dtype=jnp.float32, chunk_q=32)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size, (s,)).astype(np.int32)
+               for s in (5, 11, 17, 8)]
+    max_news = [9, 4, 12, 7]
+    ecfg = EngineConfig(max_slots=2, page_size=8, num_pages=33, max_len=64,
+                        inner_steps=4)
+
+    def run_engine(mesh, ec=ecfg):
+        eng = ServeEngine(cfg, params, rt.replace(mesh=mesh), ec)
+        rids = [eng.submit(p, m) for p, m in zip(prompts, max_news)]
+        out = eng.run()
+        return eng, [out[r] for r in rids]
+    """
+)
+
+TP_SCRIPT = HEADER.format(arch="moonshot-v1-16b-a3b") + textwrap.dedent(
+    """
+    eng1, out1 = run_engine(None)
+    eng2, out2 = run_engine(make_serve_mesh(1, 2))
+    eng4, out4 = run_engine(make_serve_mesh(2, 2))
+    for a, b, c in zip(out1, out2, out4):
+        np.testing.assert_array_equal(a, b)   # TP=2 == TP=1, every token
+        np.testing.assert_array_equal(a, c)   # 2x2 mesh (data-replicated)
+    b1 = eng1.kv_pool_bytes_per_device()
+    b2 = eng2.kv_pool_bytes_per_device()
+    assert b1 == 2 * b2, (b1, b2)             # kv-head shard halves KV/chip
+    assert b2 == eng4.kv_pool_bytes_per_device()
+    for eng in (eng1, eng2, eng4):
+        eng.pool.check()
+        assert eng.pool.pages_in_use == 0
+    print("TP_OK", b1, b2)
+    """
+)
+
+KERNEL_SCRIPT = HEADER.format(arch="moonshot-v1-16b-a3b") + textwrap.dedent(
+    """
+    ek = EngineConfig(max_slots=1, page_size=8, num_pages=9, max_len=32,
+                      inner_steps=2, use_kernel=True)
+    prompts, max_news = prompts[:1], [4]
+    _, out_oracle = run_engine(None, EngineConfig(
+        max_slots=1, page_size=8, num_pages=9, max_len=32, inner_steps=2))
+    _, out_kernel = run_engine(make_serve_mesh(1, 2), ek)
+    np.testing.assert_array_equal(out_oracle[0], out_kernel[0])
+    print("KERNEL_SHARDED_OK")
+    """
+)
+
+REPLICA_SCRIPT = HEADER.format(arch="moonshot-v1-16b-a3b") + textwrap.dedent(
+    """
+    rep = ReplicatedServeEngine(cfg, params, rt, ecfg,
+                                mesh=make_serve_mesh(2, 2))
+    assert len(rep.engines) == 2
+    rids = [rep.submit(p, m) for p, m in zip(prompts, max_news)]
+    out = rep.run()
+    assert all(n > 0 for n in rep.stats["replica_requests"]), (
+        rep.stats["replica_requests"])        # least-loaded: both replicas used
+    _, alone = run_engine(None)
+    for rid, want in zip(rids, alone):
+        np.testing.assert_array_equal(out[rid], want)
+    assert set(rep.stats["ttft_s"]) == set(rids)
+    assert rep.stats["kv_pool_bytes_per_device"] > 0
+    print("REPLICA_OK", rep.stats["replica_requests"])
+    """
+)
+
+MQA_SCRIPT = HEADER.format(arch="granite-8b") + textwrap.dedent(
+    """
+    assert cfg.n_kv_heads == 1                # MQA: heads can't divide TP=2
+    eng1, out1 = run_engine(None)
+    eng2, out2 = run_engine(make_serve_mesh(1, 2))
+    for a, b in zip(out1, out2):
+        np.testing.assert_array_equal(a, b)
+    # pool falls back to replication: same bytes on every device
+    assert eng1.kv_pool_bytes_per_device() == eng2.kv_pool_bytes_per_device()
+    print("MQA_FALLBACK_OK")
+    """
+)
+
+
+def _run(script, marker):
+    r = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, timeout=1200,
+        env=subprocess_env(),
+        cwd=REPO_ROOT,
+    )
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert marker in r.stdout, r.stdout[-2000:]
+
+
+def test_tp_engine_token_identical_and_kv_bytes_halved():
+    _run(TP_SCRIPT, "TP_OK")
+
+
+def test_paged_kernel_inside_shard_map_matches_oracle():
+    _run(KERNEL_SCRIPT, "KERNEL_SHARDED_OK")
+
+
+def test_replicated_engine_routes_and_matches_single():
+    _run(REPLICA_SCRIPT, "REPLICA_OK")
+
+
+def test_mqa_family_falls_back_to_replicated_pool():
+    _run(MQA_SCRIPT, "MQA_FALLBACK_OK")

@@ -4,9 +4,15 @@ import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import ASSIGNED, get_config
+from repro.configs import ASSIGNED, get_config, get_reduced
 from repro.models import init_params
-from repro.sharding.specs import batch_axes, leaf_param_spec, param_specs
+from repro.sharding.specs import (
+    batch_axes,
+    leaf_param_spec,
+    paged_state_specs,
+    param_specs,
+    pool_kv_spec,
+)
 
 
 class FakeMesh:
@@ -62,6 +68,38 @@ def test_embed_sharded_head_sharded():
     cfg = get_config("granite-8b")
     assert leaf_param_spec(("embed", "table"), (49152, 4096), cfg, 16) == P("model", None)
     assert leaf_param_spec(("head", "w"), (4096, 49152), cfg, 16) == P(None, "model")
+
+
+def test_pool_kv_spec_shards_head_axis_or_replicates():
+    """Paged KV pools shard their kv-head axis (dim -2) over `model` when
+    the head count divides, and fall back to replication otherwise (MQA)."""
+    gqa = get_config("moonshot-v1-16b-a3b")      # 16 kv heads
+    assert pool_kv_spec(gqa, 5, 2) == P(None, None, None, "model", None)
+    full = get_config("granite-8b")              # 8 kv heads at full size...
+    red = get_reduced("granite-8b")              # ...but 1 when reduced (MQA)
+    assert red.n_kv_heads == 1
+    assert pool_kv_spec(red, 5, 2) == P(None, None, None, None, None)
+    assert pool_kv_spec(full, 5, 3) == P(None, None, None, None, None)
+
+
+def test_paged_state_specs_tables_replicated():
+    """Block tables / lengths stay replicated — page ids are global, only
+    the head slices of their contents are sharded."""
+    import numpy as np
+
+    cfg = get_reduced("moonshot-v1-16b-a3b")
+    state_shape = {
+        "caches": [{"p0": {
+            "kp": jnp.zeros((2, 9, 8, cfg.n_kv_heads, cfg.head_dim)),
+            "vp": jnp.zeros((2, 9, 8, cfg.n_kv_heads, cfg.head_dim)),
+        }}],
+        "tables": jnp.zeros((4, 8), jnp.int32),
+        "lengths": jnp.zeros((4,), jnp.int32),
+    }
+    specs = paged_state_specs(cfg, state_shape, FakeMesh({"data": 1, "model": 2}))
+    assert specs["caches"][0]["p0"]["kp"] == P(None, None, None, "model", None)
+    assert specs["tables"] == P(None, None)
+    assert specs["lengths"] == P(None)
 
 
 def test_batch_axes_divisibility():

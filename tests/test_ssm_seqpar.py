@@ -7,7 +7,9 @@ import subprocess
 import sys
 import textwrap
 
-from _subproc import subprocess_env
+import pytest
+
+from _subproc import REPO_ROOT, subprocess_env
 
 
 SCRIPT = textwrap.dedent(
@@ -55,12 +57,13 @@ SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.multidevice
 def test_seqpar_matches_local():
     r = subprocess.run(
         [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
         timeout=600,
         env=subprocess_env(),
-        cwd="/root/repo",
+        cwd=REPO_ROOT,
     )
     assert r.returncode == 0, r.stderr[-4000:]
     assert "SEQPAR_OK" in r.stdout
