@@ -1,8 +1,15 @@
-"""Bench-regression gate: compare a fresh ``benchmarks.run --json`` snapshot
-against the committed reference.
+"""Bench-regression gate: compare fresh ``benchmarks.run --json`` snapshots
+against their committed references.
 
     python -m benchmarks.check_regression --ref BENCH_serve.json \
         --fresh BENCH_serve.fresh.json [--tolerance 20]
+
+``--ref``/``--fresh`` repeat pairwise, so one invocation gates every
+snapshot (kernels, serve, serve_sharded, serve_prefix):
+
+    python -m benchmarks.check_regression \
+        --ref BENCH_serve.json --fresh BENCH_serve.fresh.json \
+        --ref BENCH_serve_prefix.json --fresh BENCH_serve_prefix.fresh.json
 
 Rules
 -----
@@ -58,19 +65,31 @@ def compare(ref: dict, fresh: dict, tolerance: float) -> list:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--ref", required=True, help="committed snapshot")
-    ap.add_argument("--fresh", required=True, help="snapshot from this run")
+    ap.add_argument("--ref", action="append", required=True,
+                    help="committed snapshot (repeatable, pairs with --fresh)")
+    ap.add_argument("--fresh", action="append", required=True,
+                    help="snapshot from this run (repeatable)")
     ap.add_argument("--tolerance", type=float, default=20.0,
                     help="max allowed slowdown ratio for timed rows")
     args = ap.parse_args()
-    errors = compare(load(args.ref), load(args.fresh), args.tolerance)
-    if errors:
-        print(f"BENCH REGRESSION ({args.ref}):", file=sys.stderr)
-        for e in errors:
-            print(f"  {e}", file=sys.stderr)
+    if len(args.ref) != len(args.fresh):
+        ap.error("--ref and --fresh must pair up")
+    failed = False
+    for ref_path, fresh_path in zip(args.ref, args.fresh):
+        errors = compare(load(ref_path), load(fresh_path), args.tolerance)
+        if errors:
+            failed = True
+            print(f"BENCH REGRESSION ({ref_path}):", file=sys.stderr)
+            for e in errors:
+                print(f"  {e}", file=sys.stderr)
+        else:
+            n = len(load(ref_path))
+            print(
+                f"bench gate OK: {n} rows within {args.tolerance:g}x of "
+                f"{ref_path}"
+            )
+    if failed:
         raise SystemExit(1)
-    n = len(load(args.ref))
-    print(f"bench gate OK: {n} rows within {args.tolerance:g}x of {args.ref}")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,7 @@ MODULES = [
     "benchmarks.lowbit_bench",
     "benchmarks.kernels_bench",
     "benchmarks.serve_bench",
+    "benchmarks.serve_prefix_bench",
     "benchmarks.roofline_report",
 ]
 

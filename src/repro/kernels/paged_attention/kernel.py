@@ -16,6 +16,13 @@ accumulation is a single (G, page) score tile on the MXU. Per-request
 ``lengths`` mask the tail page (non-page-multiple lengths) and — combined
 with ``window`` — the sliding-window band, via explicit mask multiplies
 (fully-masked pages contribute exact zeros, never NaNs).
+
+``paged_prefill_attention_kernel`` is the chunked-prefill generalization:
+T-row query chunks (flattened with the GQA groups into one (T*G, page)
+score tile) attend to the same block-table pages with per-row causal
+masking by absolute position — decode is its T=1 special case. The chunk's
+own KV is written to the pool before the kernel runs, so in-chunk causality
+needs no separate path.
 """
 from __future__ import annotations
 
@@ -86,6 +93,137 @@ def _pa_kernel(
     def _finish():
         denom = jnp.maximum(l_scr[...], 1e-30)
         o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def _pp_kernel(
+    tables_ref,   # scalar prefetch (B, P) int32
+    starts_ref,   # scalar prefetch (B,) int32 — chunk's first absolute pos
+    qlens_ref,    # scalar prefetch (B,) int32 — valid rows in the chunk
+    q_ref,        # (1, T, 1, G, hd)
+    k_ref,        # (1, page, 1, hd) — pool page selected by index_map
+    v_ref,
+    o_ref,        # (1, T, 1, G, hd)
+    m_scr, l_scr, acc_scr,
+    *, page: int, n_pages: int, window: int, T: int,
+):
+    """Chunked-prefill sibling of ``_pa_kernel``: T query rows per request
+    instead of one. The T*G (row, group) pairs are flattened into a single
+    score tile per page — one (T*G, page) MXU matmul — and the causal /
+    sliding-window masks become per-row absolute-position comparisons
+    (row t sits at ``start + t``). Decode is the T=1 special case."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    start = starts_ref[b]
+    qlen = qlens_ref[b]                       # valid rows (>= 1)
+
+    # Pages entirely beyond the last VALID row's position contribute
+    # nothing to any row the caller keeps; skip them. (Padding rows t >=
+    # qlen may see fewer pages than their kpos<=qpos mask admits — their
+    # output is garbage by contract.)
+    @pl.when(j * page < start + qlen)
+    def _accumulate():
+        G = q_ref.shape[3]
+        hd = q_ref.shape[4]
+        q = q_ref[0, :, 0].astype(jnp.float32).reshape(T * G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)           # (page, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )                                                # (T*G, page)
+
+        kpos = j * page + jax.lax.broadcasted_iota(
+            jnp.int32, (T * G, page), 1
+        )
+        row_t = jax.lax.broadcasted_iota(jnp.int32, (T * G, page), 0) // G
+        qpos = start + row_t
+        mask = kpos <= qpos
+        if window > 0:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+
+        scores = jnp.where(mask, scores, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1))
+        p = jnp.where(mask, jnp.exp(scores - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _finish():
+        G = o_ref.shape[3]
+        hd = o_ref.shape[4]
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0] = (
+            (acc_scr[...] / denom[:, None]).reshape(T, G, hd)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_prefill_attention_kernel(
+    q: jax.Array,        # (B, T, Kv, G, hd) pre-scaled, roped at start + t
+    k_pages: jax.Array,  # (N, page, Kv, hd)
+    v_pages: jax.Array,
+    tables: jax.Array,   # (B, P) int32, padding entries 0 (null page)
+    start: jax.Array,    # (B,) int32 absolute position of row 0
+    q_len: jax.Array,    # (B,) int32 valid rows per request (1..T)
+    *,
+    window: int = 0,
+    interpret=None,
+) -> jax.Array:
+    """Returns (B, T, Kv, G, hd); see ``_pp_kernel`` for the tiling."""
+    interpret = resolve_interpret(interpret)
+    B, T, Kv, G, hd = q.shape
+    page = k_pages.shape[1]
+    P = tables.shape[1]
+
+    kernel = functools.partial(
+        _pp_kernel, page=page, n_pages=P, window=window, T=T
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, Kv, P),
+        in_specs=[
+            pl.BlockSpec(
+                (1, T, 1, G, hd), lambda b, k, j, tbl, st, ln: (b, 0, k, 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, page, 1, hd),
+                lambda b, k, j, tbl, st, ln: (tbl[b, j], 0, k, 0),
+            ),
+            pl.BlockSpec(
+                (1, page, 1, hd),
+                lambda b, k, j, tbl, st, ln: (tbl[b, j], 0, k, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, T, 1, G, hd), lambda b, k, j, tbl, st, ln: (b, 0, k, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((T * G,), jnp.float32),
+            pltpu.VMEM((T * G,), jnp.float32),
+            pltpu.VMEM((T * G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, Kv, G, hd), q.dtype),
+        interpret=interpret,
+    )(
+        tables.astype(jnp.int32), start.astype(jnp.int32),
+        q_len.astype(jnp.int32), q, k_pages, v_pages,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))

@@ -20,8 +20,14 @@ import jax
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.kernels.paged_attention.kernel import paged_attention_kernel
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.kernel import (
+    paged_attention_kernel,
+    paged_prefill_attention_kernel,
+)
+from repro.kernels.paged_attention.ref import (
+    paged_attention_ref,
+    paged_prefill_attention_ref,
+)
 
 
 def tp_size(mesh) -> int:
@@ -64,3 +70,52 @@ def paged_attention(
         )
         return fn(q, k_pages, v_pages, tables, lengths)
     return attend(q, k_pages, v_pages, tables, lengths)
+
+
+def paged_prefill_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    tables: jax.Array,
+    start: jax.Array,
+    q_len: jax.Array,
+    *,
+    window: int = 0,
+    use_kernel: bool = True,
+    interpret=None,
+    mesh=None,
+) -> jax.Array:
+    """Chunked-prefill attention over pool pages.
+
+    q: (B, T, Kv, G, hd) pre-scaled, roped at ``start + t``; pools
+    (N, page, Kv, hd); per-request ``start`` (absolute position of row 0)
+    and ``q_len`` (valid rows). Returns (B, T, Kv, G, hd).
+
+    Same tensor-parallel contract as :func:`paged_attention`: the kv-head
+    axis shards over ``model`` (q axis 2 here), tables / positions stay
+    replicated, and no collective runs inside attention.
+    """
+
+    def attend(q_, kp_, vp_, tbl_, st_, ln_):
+        if use_kernel:
+            return paged_prefill_attention_kernel(
+                q_, kp_, vp_, tbl_, st_, ln_, window=window,
+                interpret=interpret,
+            )
+        return paged_prefill_attention_ref(
+            q_, kp_, vp_, tbl_, st_, ln_, window=window
+        )
+
+    tp = tp_size(mesh)
+    if tp > 1 and q.shape[2] % tp == 0:
+        head = P(None, None, "model", None, None)
+        pool = P(None, None, "model", None)
+        fn = shard_map(
+            attend,
+            mesh=mesh,
+            in_specs=(head, pool, pool, P(None, None), P(None), P(None)),
+            out_specs=head,
+            check_vma=False,
+        )
+        return fn(q, k_pages, v_pages, tables, start, q_len)
+    return attend(q, k_pages, v_pages, tables, start, q_len)

@@ -53,3 +53,53 @@ def paged_attention_ref(
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskh->bkgh", w.astype(v.dtype), v)
     return out.astype(q.dtype)
+
+
+def paged_prefill_attention_ref(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    tables: jax.Array,
+    start: jax.Array,
+    q_len: jax.Array,
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Chunked-prefill sibling of :func:`paged_attention_ref`.
+
+    A *chunk* of queries per request attends over that request's pool pages
+    — which, by the engine's write-then-attend contract, already hold the
+    chunk's own KV — so in-chunk causality and attention to the cached
+    prefix are the same absolute-position mask ``kpos <= qpos``.
+
+      q      (B, T, Kv, G, hd)  pre-scaled, roped at start + t
+      start  (B,) int32         absolute position of the chunk's first row
+      q_len  (B,) int32         valid rows (1..T); rows >= q_len are padding
+                                (their output is garbage by contract — the
+                                caller masks it; see attention_prefill_paged)
+
+    Exactness notes: only keys at ``kpos <= qpos`` are read, and every such
+    position was written (cached prefix or earlier-in-chunk), so stale data
+    in allocated-but-unwritten pages is never attended by a valid row.
+    """
+    B, T, Kv, G, hd = q.shape
+    page = k_pages.shape[1]
+    P = tables.shape[1]
+
+    k = k_pages[tables].reshape(B, P * page, Kv, hd)
+    v = v_pages[tables].reshape(B, P * page, Kv, hd)
+    scores = jnp.einsum(
+        "btkgh,bskh->bkgts", q.astype(jnp.float32), k.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )                                                     # (B, Kv, G, T, S)
+    kpos = jnp.arange(P * page, dtype=jnp.int32)[None, None, :]    # (1,1,S)
+    qpos = (start[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :])[
+        :, :, None
+    ]                                                              # (B,T,1)
+    valid = kpos <= qpos
+    if window > 0:
+        valid = valid & (kpos > qpos - window)
+    scores = jnp.where(valid[:, None, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", w.astype(v.dtype), v)
+    return out.astype(q.dtype)

@@ -7,6 +7,10 @@
     PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --paged \
         --requests 8 --slots 4 --page-size 16
 
+    # radix prefix cache + chunked prefill (shared system prompt workload):
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --paged \
+        --requests 8 --prefix-cache --prefill-chunk 8 --shared-prefix 24
+
     # sharded serving: 2 data replicas x TP=2 over 4 (forced-host) devices
     PYTHONPATH=src python -m repro.launch.serve --arch moonshot-v1-16b-a3b \
         --paged --mesh 2x2 --requests 8
@@ -20,6 +24,14 @@ params are initialized sharded via the dry-run shardings).
 varying prompt lengths are admitted into fixed decode slots against the
 paged KV-cache pool; unsupported families (SSM / enc-dec) fall back to the
 dense path automatically.
+
+``--prefix-cache`` turns on the radix-tree KV prefix cache (retired prompts'
+pages stay pooled; token-exact shared prefixes are adopted with zero prefill
+FLOPs) and ``--prefill-chunk N`` interleaves N-token prefill chunks with the
+decode batch (one jitted step runs both). ``--shared-prefix K`` prepends a
+common K-token system prompt to every generated request so the hit rate is
+demonstrable; engine prefix stats (hit rate, cached-token fraction, mean
+TTFT) print at exit.
 
 ``--mesh DxM`` serves over a ``(data, model)`` mesh: the KV pool and params
 shard over the ``model`` axis (Megatron head split; KV bytes per device
@@ -53,6 +65,14 @@ def main() -> None:
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--kernel", action="store_true",
                     help="route decode through the Pallas paged kernel")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree KV prefix reuse across requests")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="interleave N-token prefill chunks with decode "
+                         "(0 = whole-prompt prefill at admission)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a common K-token system prompt to every "
+                         "request (makes --prefix-cache hits observable)")
     ap.add_argument("--mesh", default="",
                     help="DxM (data replicas x model shards), e.g. 2x2")
     ap.add_argument("--no-force-devices", dest="force_devices",
@@ -102,12 +122,15 @@ def main() -> None:
         paged = paged_supported(cfg)
         if not paged:
             print(f"{cfg.name}: family {cfg.family!r} -> dense fallback")
+        max_prompt = args.prompt_len + args.shared_prefix
         ecfg = EngineConfig.sized_for(
-            args.prompt_len + cfg.frontend_tokens, args.new_tokens,
+            max_prompt + cfg.frontend_tokens, args.new_tokens,
             slots=args.slots, page_size=args.page_size, headroom=2.0,
             temperature=args.temperature, seed=args.seed,
             use_kernel=args.kernel,
             prefill_bucket=args.page_size,  # random lengths: bound compiles
+            prefix_cache=args.prefix_cache,
+            prefill_chunk=args.prefill_chunk,
         )
         if mesh is not None:
             eng = ReplicatedServeEngine(
@@ -115,10 +138,16 @@ def main() -> None:
             )
         else:
             eng = ServeEngine(cfg, params, rt, ecfg, paged=paged)
+        sys_prompt = rng.randint(
+            0, cfg.vocab_size, (args.shared_prefix,)
+        ).astype(np.int32)
         rids = []
         for _ in range(args.requests):
             plen = rng.randint(max(args.prompt_len // 2, 1), args.prompt_len + 1)
-            tokens = rng.randint(0, cfg.vocab_size, (plen,)).astype(np.int32)
+            tokens = np.concatenate([
+                sys_prompt,
+                rng.randint(0, cfg.vocab_size, (plen,)).astype(np.int32),
+            ])
             fe = (
                 rng.randn(cfg.frontend_tokens, cfg.d_model).astype(np.float32)
                 if cfg.frontend is not None else None
@@ -134,6 +163,18 @@ def main() -> None:
             f"{s['tokens_per_s']:.1f} tok/s, mean TTFT {ttft * 1e3:.0f}ms, "
             f"evictions={s.get('evictions', 0)}"
         )
+        if args.prefix_cache and "prefix_lookups" in s:
+            hit_rate = s["prefix_hits"] / max(s["prefix_lookups"], 1)
+            cached_frac = (
+                s["prefix_cached_tokens"] / max(s.get("prompt_tokens", 1), 1)
+            )
+            print(
+                f"  prefix-cache: hit_rate={hit_rate:.2f} "
+                f"({s['prefix_hits']}/{s['prefix_lookups']}), "
+                f"cached_token_fraction={cached_frac:.2f}, "
+                f"prefill_chunks={s.get('prefill_chunks', 0)}, "
+                f"mean_ttft_ms={ttft * 1e3:.1f}"
+            )
         if mesh is not None:
             print(
                 f"  replicas={s.get('replica_requests')} "

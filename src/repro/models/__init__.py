@@ -8,5 +8,6 @@ from repro.models.lm import (  # noqa: F401
     init_params,
     loss_fn,
     prefill,
+    prefill_chunk_paged,
 )
 from repro.models.runtime import Runtime  # noqa: F401

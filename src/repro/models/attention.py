@@ -247,6 +247,75 @@ def init_paged_kv_cache(
     }
 
 
+def attention_prefill_paged(
+    p: Params,
+    x: jax.Array,
+    cache: Dict[str, jax.Array],
+    tables: jax.Array,
+    start: jax.Array,
+    q_len: jax.Array,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    theta: float,
+    window: int = 0,
+    use_kernel: bool = False,
+    mesh=None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One prefill *chunk* per slot against the paged KV pool.
+
+    x: (B, T, d) chunk hidden states; cache: {"kp","vp"} (N, page, Kv, hd);
+    tables: (B, P) int32; start: (B,) absolute position of x[:, 0]; q_len:
+    (B,) valid rows (rows >= q_len are right-padding: their KV goes to the
+    null page and their output is zeroed so downstream per-row compute
+    stays deterministic).
+
+    Write-then-attend: the chunk's roped K/V land in their block-table
+    pages first, then every row attends with the absolute-position causal
+    mask ``kpos <= start + t`` — which covers both the cached prefix (pages
+    adopted from the radix cache or written by earlier chunks) and
+    earlier-in-chunk positions, and never reads allocated-but-unwritten
+    pages. ``attention_decode_paged`` is the T=1 special case of this.
+    """
+    from repro.kernels.paged_attention import paged_prefill_attention
+
+    B, T, _ = x.shape
+    dtype = x.dtype
+    G = n_heads // n_kv
+    page = cache["kp"].shape[1]
+
+    pos = start[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]  # (B, T)
+    q = rope_apply(_split_heads(x @ p["wq"].astype(dtype), n_heads, head_dim),
+                   pos, theta)
+    k_new = rope_apply(_split_heads(x @ p["wk"].astype(dtype), n_kv, head_dim),
+                       pos, theta)
+    v_new = _split_heads(x @ p["wv"].astype(dtype), n_kv, head_dim)
+
+    valid = jnp.arange(T, dtype=jnp.int32)[None, :] < q_len[:, None]
+    page_idx = pos // page
+    ok = valid & (page_idx < tables.shape[1])
+    pid = jnp.where(
+        ok,
+        jnp.take_along_axis(
+            tables, jnp.clip(page_idx, 0, tables.shape[1] - 1), axis=1
+        ),
+        0,
+    )
+    slot = jnp.where(ok, pos % page, 0)
+    k_c = cache["kp"].at[pid, slot].set(k_new)
+    v_c = cache["vp"].at[pid, slot].set(v_new)
+
+    q = q.reshape(B, T, n_kv, G, head_dim) * (head_dim ** -0.5)
+    out = paged_prefill_attention(
+        q, k_c, v_c, tables, start, q_len,
+        window=window, use_kernel=use_kernel, mesh=mesh,
+    )
+    out = jnp.where(valid[:, :, None, None, None], out, 0)
+    out = out.astype(dtype).reshape(B, T, n_heads * head_dim)
+    return out @ p["wo"].astype(dtype), {"kp": k_c, "vp": v_c}
+
+
 def attention_decode_paged(
     p: Params,
     x: jax.Array,

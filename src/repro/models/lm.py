@@ -278,6 +278,43 @@ def init_paged_state(
     return jax.jit(build, out_shardings=shardings)()
 
 
+def prefill_chunk_paged(
+    cfg: ArchConfig,
+    params: Params,
+    caches: List[Any],
+    table_row: jax.Array,
+    tokens: jax.Array,
+    start: jax.Array,
+    q_len: jax.Array,
+    rt: Runtime,
+    max_len: int,
+) -> Tuple[jax.Array, List[Any]]:
+    """Prefill ONE chunk of one request's prompt into the paged pool.
+
+    tokens: (T,) int32 chunk token ids (right-padded past ``q_len``);
+    table_row: (P,) the request's block-table row; start: scalar absolute
+    position of tokens[0]; q_len: scalar valid tokens in this chunk.
+    Returns (logits (V,) at the chunk's last valid position, new caches).
+    The logits only matter on the prompt's final chunk (first-token
+    sampling); computing them every chunk keeps one compiled program.
+
+    With a cached prefix adopted from the radix cache, the first chunk
+    starts at ``start = cached_tokens`` — the shared prefix is never
+    re-computed (zero prefill FLOPs for it), only attended through the
+    block table.
+    """
+    specs = layer_specs(cfg, seq_len=max_len, long_variant=rt.long_variant)
+    x = embed_apply(params["embed"], tokens[None], rt.dtype)      # (1, T, d)
+    x, caches = stack_mod.stack_prefill_paged(
+        cfg, params["stack"], x, caches, table_row[None],
+        start[None], q_len[None], rt, specs,
+    )
+    x = jax.lax.dynamic_slice_in_dim(x, q_len - 1, 1, axis=1)
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = logits_apply(params.get("head"), params["embed"], x, cfg.tie_embeddings)
+    return logits[0, 0], caches
+
+
 def decode_step_paged(
     cfg: ArchConfig,
     params: Params,

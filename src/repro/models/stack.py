@@ -593,6 +593,55 @@ def write_prefill_to_pool(
     return new_pools
 
 
+def stack_prefill_paged(
+    cfg: ArchConfig,
+    stack: Params,
+    x: jax.Array,
+    caches: List[Any],
+    tables: jax.Array,
+    start: jax.Array,
+    q_len: jax.Array,
+    rt: Runtime,
+    specs: Tuple[LayerSpec, ...],
+):
+    """One prefill chunk through the stack, writing KV into pool pages.
+
+    x: (B, T, d) embedded chunk; ``caches`` are page pools (see
+    ``init_stack_pool``); ``tables``/``start``/``q_len`` as in
+    ``attention_prefill_paged``. Returns (x, new_caches). The chunked-
+    prefill sibling of ``stack_decode`` — attention-mixer families only
+    (the same families the paged engine serves).
+    """
+    segments = build_segments(cfg, specs)
+    new_caches: List[Any] = []
+
+    for seg, seg_cache in zip(segments, caches):
+        params_seg = segment_params(stack, seg)
+
+        def unit_body(h, xs, _seg=seg):
+            unit_p, unit_c = xs
+            new_unit_c = {}
+            for j, spec in enumerate(_seg.unit_specs):
+                assert spec.kind in ("attn", "local"), spec.kind
+                bp = unit_p[f"p{j}"]
+                hn = norm_apply(bp["norm1"], h, cfg.norm)
+                out, new_unit_c[f"p{j}"] = attn_mod.attention_prefill_paged(
+                    bp["mixer"], hn, unit_c[f"p{j}"], tables, start, q_len,
+                    n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                    head_dim=cfg.head_dim, theta=cfg.rope_theta,
+                    window=spec.window, use_kernel=rt.use_paged_kernel,
+                    mesh=rt.mesh,
+                )
+                h = h + out
+                h, _ = _ffn_apply(cfg, bp, h, rt)
+            return h, new_unit_c
+
+        x, new_seg_cache = jax.lax.scan(unit_body, x, (params_seg, seg_cache))
+        new_caches.append(new_seg_cache)
+
+    return x, new_caches
+
+
 def stack_decode(
     cfg: ArchConfig,
     stack: Params,

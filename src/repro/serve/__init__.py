@@ -5,5 +5,6 @@ from repro.serve.engine import (  # noqa: F401
     paged_supported,
 )
 from repro.serve.pool import PagePool, PoolExhausted  # noqa: F401
+from repro.serve.prefix import PrefixCache  # noqa: F401
 from repro.serve.sampling import sample_slots, sample_token  # noqa: F401
 from repro.serve.scheduler import ReplicaRouter, Request, Scheduler  # noqa: F401

@@ -19,6 +19,23 @@ Families whose decode state is not a KV cache (SSM / RG-LRU recurrences,
 enc-dec cross caches) fall back to the dense path (``paged=False``), grouped
 into equal-prompt-length batches.
 
+Prefix cache + chunked prefill
+------------------------------
+With ``EngineConfig.prefix_cache`` a radix tree (``serve.prefix``) keeps
+retired prompts' KV pages alive: a new request adopts the longest token-
+exact cached prefix (refcount++ on the shared pages — zero prefill FLOPs
+for the shared part) and only its uncached remainder is computed. With
+``prefill_chunk`` the remainder is split into fixed-size chunks that run
+*inside* the decode step: one jitted program executes a prefill chunk for
+the admitting request AND ``inner_steps`` decode steps for every active
+slot, so long prompts no longer stall in-flight decodes (continuous
+batching stays continuous). Both features keep the batched == alone
+guarantee: the paged-prefill path produces bit-identical logits to the
+dense prefill (asserted in tests), and the per-slot sample streams are
+untouched. Requests with a modality prefix (vision) fall back to the
+legacy whole-prompt prefill — the radix key is token IDs and cannot see
+image content.
+
 Sharded serving
 ---------------
 With ``Runtime.mesh`` set, one engine spans the mesh's ``model`` axis:
@@ -37,6 +54,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -44,11 +62,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.models import Runtime, decode_step_paged, init_paged_state
+from repro.models import (
+    Runtime,
+    decode_step_paged,
+    init_paged_state,
+    prefill_chunk_paged,
+)
 from repro.models.layers import Params
 from repro.models.stack import write_prefill_to_pool
 from repro.serve import dense as dense_mod
 from repro.serve.pool import PagePool, PoolExhausted
+from repro.serve.prefix import PrefixCache
 from repro.serve.sampling import sample_slots, sample_token
 from repro.serve.scheduler import Request, Scheduler
 
@@ -80,10 +104,32 @@ class EngineConfig:
     # causally invisible, the engine prefills with full (un-windowed) caches
     # so no real token is ring-evicted by the padding, and padded KV is
     # either null-paged or overwritten before it can be attended — outputs
-    # are unchanged for dense AND sliding-window attention families. MoE
-    # routing does see pad tokens in its capacity count, which can perturb
-    # token dropping vs an exact-shape run.
+    # are unchanged for every attention head layout (MHA, GQA, and MQA
+    # alike: the causal mask is head-agnostic; asserted across layouts in
+    # tests/test_serve_engine.py). The one exception is MoE routing, which
+    # sees pad tokens in its capacity count and can perturb token dropping
+    # vs an exact-shape run — the engine warns on that combination (same
+    # caveat applies to chunked prefill, whose chunk grid changes the
+    # token population each router call sees).
     prefill_bucket: int = 0
+    # Radix-tree KV prefix reuse: retired prompts' pages stay cached and
+    # new requests adopt their longest token-exact cached prefix (COW/fork
+    # machinery of the pool; LRU eviction under pressure).
+    prefix_cache: bool = False
+    # Split uncached prompt remainders into chunks of this many tokens,
+    # each executed INSIDE a decode step (one jitted program = 1 prefill
+    # chunk + inner_steps decode steps over all slots), bounding the decode
+    # stall a long prompt can cause. 0 with prefix_cache on still routes
+    # through the chunked path using page_size-ish chunks (see
+    # ``chunk_tokens``); 0 with prefix_cache off = legacy whole-prompt
+    # prefill at admission.
+    prefill_chunk: int = 0
+
+    @property
+    def chunk_tokens(self) -> int:
+        """Effective prefill-chunk width for the paged-prefill path (one
+        compiled chunk shape: ragged tails are right-padded to this)."""
+        return self.prefill_chunk or self.prefill_bucket or self.page_size
 
     @classmethod
     def sized_for(
@@ -117,6 +163,9 @@ class _Slot:
     sid: int                  # pool sequence id
     req: Request
     order: int                # admission order (eviction picks the youngest)
+    phase: str = "decode"     # "prefill" while chunks of the prompt remain
+    pf_next: int = 0          # next uncomputed prompt position (chunked path)
+    t_admit: float = 0.0      # admission wall time (TTFT under chunking)
 
 
 # Module-wide compile caches: fresh ServeEngine instances with an identical
@@ -236,6 +285,32 @@ class ServeEngine:
                 _CHUNK_CACHE[ckey] = self._build_chunk_fn()
             self._chunk_fn = _CHUNK_CACHE[ckey]
             self._scatter_fn = _SCATTER
+            if engine.prefix_cache or engine.prefill_chunk:
+                # one fused fn handles any chunk width (jit specializes on
+                # the p_tokens shape; the engine only ever passes one)
+                fkey = ckey + ("fused",)
+                if fkey not in _CHUNK_CACHE:
+                    _CHUNK_CACHE[fkey] = (
+                        self._build_fused_fn(), self._build_prefill_fn()
+                    )
+                self._fused_fn, self._prefill_fn = _CHUNK_CACHE[fkey]
+        self.prefix: Optional[PrefixCache] = (
+            PrefixCache(self.pool)
+            if self.paged and engine.prefix_cache else None
+        )
+        if (
+            self.paged and cfg.ffn_kind == "moe"
+            and (engine.prefill_bucket or engine.prefix_cache
+                 or engine.prefill_chunk)
+        ):
+            warnings.warn(
+                f"{cfg.name}: MoE routing counts pad/chunk tokens in its "
+                "expert capacity, so bucketed or chunked prefill is not "
+                "guaranteed token-exact vs an exact-shape run (attention "
+                "itself is exact for MHA/GQA/MQA; see EngineConfig). "
+                "Identical engine configs remain deterministic.",
+                stacklevel=2,
+            )
 
     # ------------------------------------------------------------- public
     def submit(
@@ -285,7 +360,7 @@ class ServeEngine:
         while len(self.scheduler) or any(self._slots):
             self._admit_free_slots()
             self._topup_or_evict()
-            emits, remaining = self._run_chunk()
+            emits, remaining = self._step()
             decode_tokens += self._collect(emits)
             self._retire(remaining)
         wall = time.perf_counter() - t0
@@ -301,6 +376,8 @@ class ServeEngine:
             decode_tokens - discarded + n_prefill
         ) / max(wall, 1e-9)
         self.stats["pool_high_water_pages"] = self.pool.high_water
+        if self.prefix is not None:
+            self.stats.update(self.prefix.stats())
         return {
             rid: np.asarray(self._outputs[rid], np.int32)
             for rid in sorted(self._completed_run)
@@ -342,7 +419,8 @@ class ServeEngine:
         queued = self.scheduler.queued_tokens(self._prompt_total)
         return queued + self.pool.tokens_in_use
 
-    def _build_chunk_fn(self):
+    def _decode_scan_fn(self):
+        """Traceable body shared by the decode-only and fused chunk fns."""
         cfg, rt, ecfg = self.cfg, self.rt, self.ecfg
 
         def chunk(params, caches, tables, lengths, remaining, tok, keys, steps):
@@ -371,7 +449,58 @@ class ServeEngine:
                 state["caches"], state["lengths"], remaining, tok, steps, emits
             )
 
-        return jax.jit(chunk, donate_argnums=(1,))  # caches update in place
+        return chunk
+
+    def _build_chunk_fn(self):
+        # caches update in place
+        return jax.jit(self._decode_scan_fn(), donate_argnums=(1,))
+
+    def _build_fused_fn(self):
+        """One jitted program = one prefill chunk for the admitting request
+        + ``inner_steps`` decode steps for every active slot (the prefilling
+        slot sits inactive in the decode scan: remaining == 0). Disjoint
+        page sets keep the two halves independent — the chunk writes only
+        its own sequence's pages, decode slots read only theirs, and shared
+        (adopted) prefix pages are read-only for both."""
+        cfg, rt, ecfg = self.cfg, self.rt, self.ecfg
+        decode_scan = self._decode_scan_fn()
+
+        def fused(
+            params, caches, tables, lengths, remaining, tok, keys, steps,
+            p_tokens, p_slot, p_start, p_len,
+        ):
+            row = jax.lax.dynamic_index_in_dim(
+                tables, p_slot, 0, keepdims=False
+            )
+            pf_logits, caches = prefill_chunk_paged(
+                cfg, params, caches, row, p_tokens, p_start, p_len, rt,
+                ecfg.max_len,
+            )
+            caches, lengths, remaining, tok, steps, emits = decode_scan(
+                params, caches, tables, lengths, remaining, tok, keys, steps
+            )
+            return caches, lengths, remaining, tok, steps, emits, pf_logits
+
+        return jax.jit(fused, donate_argnums=(1,))
+
+    def _build_prefill_fn(self):
+        """Prefill-chunk-only step, taken when NO slot is decode-active (an
+        idle engine admitting a request should not pay the decode scan —
+        this is what makes warm-cache TTFT a real reduction rather than a
+        decode-tax trade)."""
+        cfg, rt, ecfg = self.cfg, self.rt, self.ecfg
+
+        def pf_only(params, caches, tables, p_tokens, p_slot, p_start, p_len):
+            row = jax.lax.dynamic_index_in_dim(
+                tables, p_slot, 0, keepdims=False
+            )
+            pf_logits, caches = prefill_chunk_paged(
+                cfg, params, caches, row, p_tokens, p_start, p_len, rt,
+                ecfg.max_len,
+            )
+            return caches, pf_logits
+
+        return jax.jit(pf_only, donate_argnums=(1,))
 
     def _admission_headroom(self) -> int:
         """Extra free pages required beyond a newcomer's reservation under
@@ -387,29 +516,96 @@ class ServeEngine:
         per_slot = self.ecfg.inner_steps // self.ecfg.page_size + 1
         return (n_active + 1) * per_slot
 
+    def _use_chunked(self, req: Request) -> bool:
+        """Paged-prefill (prefix-adopting, chunk-interleaved) admission path.
+        Modality-prefix requests keep the legacy whole-prompt prefill: the
+        radix key is token IDs and cannot see image content, and the chunk
+        embedder has no frontend concat."""
+        return (
+            self.paged
+            and bool(self.ecfg.prefix_cache or self.ecfg.prefill_chunk)
+            and self.cfg.frontend is None
+        )
+
     def _admit_free_slots(self) -> None:
         for slot_id, slot in enumerate(self._slots):
             if slot is not None:
                 continue
-            req = self.scheduler.pop_admissible(
-                self.pool, self._prompt_total,
-                headroom_pages=self._admission_headroom(),
-            )
+            req = self.scheduler.peek()
             if req is None:
                 break
-            self._admit(slot_id, req)
+            cached, sid = 0, None
+            if self.prefix is not None and self._use_chunked(req):
+                cached, pages = self.prefix.match(
+                    req.tokens, max_tokens=req.prompt_len - 1
+                )
+                if cached:
+                    # adopt FIRST: the refcount pins the matched pages so
+                    # the pre-eviction below can never free them
+                    sid = self.pool.adopt(pages, cached)
+            headroom = self._admission_headroom()
+            cached_pages = cached // self.ecfg.page_size
+            if self.prefix is not None:
+                reserve = self.scheduler.reserve_tokens(
+                    req, self._prompt_total(req)
+                )
+                shortfall = (
+                    self.pool.pages_for(reserve) - cached_pages + headroom
+                    - self.pool.free_pages
+                )
+                if shortfall > 0:
+                    self.prefix.evict_until(shortfall)
+            popped = self.scheduler.pop_admissible(
+                self.pool, self._prompt_total, headroom_pages=headroom,
+                cached_pages_of=(
+                    (lambda r: cached_pages) if sid is not None else None
+                ),
+            )
+            if popped is None:
+                if sid is not None:
+                    self.pool.free(sid)
+                break
+            assert popped is req
+            self._admit(slot_id, popped, cached=cached, sid=sid)
         if not any(self._slots) and len(self.scheduler):
             raise RuntimeError(
                 "deadlock: empty engine cannot admit the head request "
                 "(pool too small for it — submit() should have rejected it)"
             )
 
-    def _admit(self, slot_id: int, req: Request) -> None:
+    def _admit(
+        self, slot_id: int, req: Request, cached: int = 0,
+        sid: Optional[int] = None,
+    ) -> None:
         ecfg, cfg = self.ecfg, self.cfg
         prompt_total = self._prompt_total(req)
-        sid = self.pool.alloc(
-            self.scheduler.reserve_tokens(req, prompt_total)
+        reserve = self.scheduler.reserve_tokens(req, prompt_total)
+        self.stats["prompt_tokens"] = (
+            self.stats.get("prompt_tokens", 0) + prompt_total
         )
+        if self._use_chunked(req):
+            if self.prefix is not None:
+                self.prefix.note_lookup(cached)   # once per admission
+            if sid is None:
+                sid = self.pool.alloc(reserve)
+            else:
+                self.pool.ensure(sid, reserve)   # adopted prefix + fresh tail
+            table_row = jnp.asarray(
+                self.pool.table(sid, self._dev["tables"].shape[1]), jnp.int32
+            )
+            self._apply_copies()
+            d = self._dev
+            d["tables"] = d["tables"].at[slot_id].set(table_row)
+            d["lengths"] = d["lengths"].at[slot_id].set(cached)
+            d["remaining"] = d["remaining"].at[slot_id].set(0)  # not decoding yet
+            self._slots[slot_id] = _Slot(
+                req.rid, sid, req, self._admit_count, phase="prefill",
+                pf_next=cached, t_admit=time.perf_counter(),
+            )
+            self._admit_count += 1
+            return
+        assert sid is None and cached == 0
+        sid = self.pool.alloc(reserve)
         t0 = time.perf_counter()
         tokens = req.tokens
         bucket = ecfg.prefill_bucket
@@ -478,6 +674,16 @@ class ServeEngine:
                     self.pool.ensure(slot.sid, need)
                     break
                 except PoolExhausted:
+                    # idle prefix-cache pages go first: evicting cached-but-
+                    # unused KV is free, preempting a request discards work
+                    if self.prefix is not None:
+                        short = (
+                            self.pool.pages_for(need)
+                            - len(self.pool.seq_pages(slot.sid))
+                            - self.pool.free_pages
+                        )
+                        if self.prefix.evict_until(max(short, 1)) > 0:
+                            continue
                     # preempt the youngest active request — possibly the
                     # very slot that needs pages (FIFO fairness: the oldest
                     # admissions keep their pages and finish first)
@@ -501,11 +707,13 @@ class ServeEngine:
         """Recompute-style preemption: free pages, requeue from scratch."""
         self.pool.free(slot.sid)
         # all but the prefill-sampled token were counted as decode output
-        self.stats["discarded_tokens"] = (
-            self.stats.get("discarded_tokens", 0)
-            + len(self._outputs[slot.rid]) - 1
-        )
-        del self._outputs[slot.rid]
+        # (a slot still mid-prefill has no output entry yet)
+        if slot.rid in self._outputs:
+            self.stats["discarded_tokens"] = (
+                self.stats.get("discarded_tokens", 0)
+                + len(self._outputs[slot.rid]) - 1
+            )
+            del self._outputs[slot.rid]
         self.stats["ttft_s"].pop(slot.rid, None)
         self.scheduler.requeue_front(slot.req)
         d = self._dev
@@ -535,11 +743,103 @@ class ServeEngine:
         )
         return np.asarray(emits), np.asarray(remaining)
 
+    def _place(self, arr: jax.Array) -> jax.Array:
+        """Commit a fresh host array replicated onto the mesh (the fused fn
+        mixes it with sharded pools; see ``dense.place_batch``)."""
+        if self.rt.mesh is None:
+            return arr
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        return jax.device_put(
+            arr,
+            NamedSharding(self.rt.mesh, PartitionSpec(*([None] * arr.ndim))),
+        )
+
+    def _step(self):
+        """One engine step: a decode-only chunk, or — when a slot is mid-
+        prefill — the fused program (its next prompt chunk + the same decode
+        chunk). Oldest-admitted prefilling slot goes first (FIFO fairness:
+        one chunk per step keeps decode stalls bounded by one chunk)."""
+        pf = [
+            (i, s) for i, s in enumerate(self._slots)
+            if s is not None and s.phase == "prefill"
+        ]
+        if not pf:
+            return self._run_chunk()
+        slot_id, slot = min(pf, key=lambda kv: kv[1].order)
+        req = slot.req
+        T = self.ecfg.chunk_tokens
+        start = slot.pf_next
+        n = min(T, req.prompt_len - start)
+        chunk = np.zeros(T, np.int32)
+        chunk[:n] = req.tokens[start : start + n]
+        d = self._dev
+        operands = (
+            self._place(jnp.asarray(chunk)), self._place(jnp.int32(slot_id)),
+            self._place(jnp.int32(start)), self._place(jnp.int32(n)),
+        )
+        # decode-phase slots still seated always have remaining > 0 (retire
+        # runs right after every step), so phase alone decides
+        decoding = any(
+            s is not None and s.phase == "decode" for s in self._slots
+        )
+        if decoding:
+            (
+                caches, lengths, remaining, tok, steps, emits, pf_logits
+            ) = self._fused_fn(
+                self.params, d["caches"], d["tables"], d["lengths"],
+                d["remaining"], d["tok"], d["keys"], d["steps"], *operands,
+            )
+            d.update(
+                caches=caches, lengths=lengths, remaining=remaining, tok=tok,
+                steps=steps,
+            )
+        else:
+            caches, pf_logits = self._prefill_fn(
+                self.params, d["caches"], d["tables"], *operands
+            )
+            d["caches"] = caches
+            emits = np.full(
+                (0, self.ecfg.max_slots), -1, np.int32
+            )                                     # nothing decoded this step
+        self.stats["prefill_chunks"] = (
+            self.stats.get("prefill_chunks", 0) + 1
+        )
+        slot.pf_next = start + n
+        if slot.pf_next >= req.prompt_len:
+            self._finish_prefill(slot_id, slot, pf_logits)
+        else:
+            d["lengths"] = d["lengths"].at[slot_id].set(slot.pf_next)
+        return np.asarray(emits), np.asarray(d["remaining"])
+
+    def _finish_prefill(self, slot_id: int, slot: _Slot, pf_logits) -> None:
+        """Last chunk done: sample the first token (the request's TTFT) and
+        flip the slot into the decode phase — same key/step discipline as
+        the legacy at-admission prefill, so the sample stream (and with it
+        the batched == alone guarantee) is untouched."""
+        ecfg, cfg = self.ecfg, self.cfg
+        req = slot.req
+        rkey = jax.random.fold_in(jax.random.PRNGKey(ecfg.seed), req.rid)
+        tok0 = sample_token(
+            pf_logits[None], jax.random.fold_in(rkey, 0), ecfg.temperature,
+            cfg.vocab_size,
+        )
+        tok0.block_until_ready()
+        self.stats["ttft_s"][req.rid] = time.perf_counter() - slot.t_admit
+        d = self._dev
+        d["lengths"] = d["lengths"].at[slot_id].set(req.prompt_len)
+        d["remaining"] = d["remaining"].at[slot_id].set(req.max_new - 1)
+        d["tok"] = d["tok"].at[slot_id].set(tok0[0])
+        d["keys"] = d["keys"].at[slot_id].set(rkey)
+        d["steps"] = d["steps"].at[slot_id].set(1)  # fold 0 used just above
+        slot.phase = "decode"
+        self._outputs[req.rid] = [int(tok0[0])]
+
     def _collect(self, emits: np.ndarray) -> int:
         n = 0
         for slot_id, slot in enumerate(self._slots):
-            if slot is None:
-                continue
+            if slot is None or slot.rid not in self._outputs:
+                continue        # mid-prefill: no first token sampled yet
             toks = emits[:, slot_id]
             toks = toks[toks >= 0]
             self._outputs[slot.rid].extend(int(t) for t in toks)
@@ -548,12 +848,22 @@ class ServeEngine:
 
     def _retire(self, remaining: np.ndarray) -> None:
         for slot_id, slot in enumerate(self._slots):
-            if slot is None or remaining[slot_id] > 0:
+            if slot is None or slot.phase == "prefill" or remaining[slot_id] > 0:
                 continue
             self.stats["kv_bytes"][slot.rid] = (
                 len(self.pool.seq_pages(slot.sid)) * self._kv_bytes_per_page()
             )
             self._completed_run.add(slot.rid)
+            if self.prefix is not None and self._use_chunked(slot.req):
+                # full prompt pages go back into the radix tree (pages
+                # holding generated tokens are not keyed by the prompt and
+                # stay out); freeing the sequence below leaves only the
+                # cache's retains on them
+                n_full = slot.req.prompt_len // self.ecfg.page_size
+                self.prefix.insert(
+                    slot.req.tokens,
+                    self.pool.seq_pages(slot.sid)[:n_full],
+                )
             self.pool.free(slot.sid)
             d = self._dev
             d["tables"] = d["tables"].at[slot_id].set(0)
@@ -709,4 +1019,14 @@ class ReplicatedServeEngine:
                 for e in self.engines
             ),
         }
+        # prefix-cache counters sum across replicas (each replica keys its
+        # own radix tree over its own pool — a cross-replica hit requires
+        # the router to have sent the matching request to the same replica)
+        for key in (
+            "prompt_tokens", "prefix_lookups", "prefix_hits",
+            "prefix_cached_tokens", "prefill_chunks",
+        ):
+            vals = [e.stats[key] for e in self.engines if key in e.stats]
+            if vals:
+                self.stats[key] = sum(vals)
         return merged

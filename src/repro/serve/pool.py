@@ -20,6 +20,11 @@ Semantics
   (src, dst) device copy is queued (``drain_copies``). Full shared pages are
   immutable (appends never rewrite positions below the sequence length), so
   they stay shared for free.
+* The radix prefix cache (``serve.prefix``) holds pages *outside* any
+  sequence via ``retain``/``release`` (tracked separately so ``check`` can
+  still prove every refcount), and turns a matched page run back into a
+  request-owned sequence with ``adopt`` — fork generalized to an arbitrary
+  page list.
 """
 from __future__ import annotations
 
@@ -46,6 +51,7 @@ class PagePool:
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
         self._ref: Dict[int, int] = {}
         self._seqs: Dict[int, _Seq] = {}
+        self._cache_refs: Dict[int, int] = {}   # prefix-cache retains
         self._next_id = 0
         self.high_water = 0
         self._pending_copies: List[Tuple[int, int]] = []
@@ -77,6 +83,10 @@ class PagePool:
 
     def pages_for(self, n_tokens: int) -> int:
         return max(1, -(-n_tokens // self.page_size))
+
+    def refcount(self, page: int) -> int:
+        """Live references (sequence memberships + cache retains) on a page."""
+        return self._ref.get(page, 0)
 
     # -------------------------------------------------------------- verbs
     def _take(self) -> int:
@@ -143,6 +153,41 @@ class PagePool:
         """Grow reserved capacity to at least ``n_tokens`` (idempotent)."""
         self.append(sid, n_tokens - self._seqs[sid].tokens)
 
+    def retain(self, pages: List[int]) -> None:
+        """Cache-side reference on already-live pages (no sequence). The
+        prefix cache retains a retiring request's prompt pages so they
+        survive ``free``; ``release`` is the eviction-side inverse."""
+        for p in pages:
+            assert p in self._ref, f"retain of dead page {p}"
+            self._ref[p] += 1
+            self._cache_refs[p] = self._cache_refs.get(p, 0) + 1
+
+    def release(self, pages: List[int]) -> None:
+        """Drop cache-side references (pages return to the free list at 0)."""
+        for p in pages:
+            assert self._cache_refs.get(p, 0) > 0, f"release of unretained {p}"
+            self._cache_refs[p] -= 1
+            if self._cache_refs[p] == 0:
+                del self._cache_refs[p]
+            self._release(p)
+
+    def adopt(self, pages: List[int], n_tokens: int) -> int:
+        """New sequence referencing an existing page run (refcount++ each) —
+        ``fork`` generalized to an arbitrary page list. The prefix-cache
+        adoption path: a request's matched prefix pages become the head of
+        its own sequence, then ``append``/``ensure`` grow the tail. The
+        caller guarantees ``pages`` covers ``n_tokens`` (page-aligned match,
+        so the shared tail page is always full and appends never COW it)."""
+        assert pages, "adopt of empty page run (use alloc)"
+        assert len(pages) == self.pages_for(n_tokens), (pages, n_tokens)
+        for p in pages:
+            assert p in self._ref, f"adopt of dead page {p}"
+            self._ref[p] += 1
+        sid = self._next_id
+        self._next_id += 1
+        self._seqs[sid] = _Seq(list(pages), max(1, n_tokens))
+        return sid
+
     def fork(self, sid: int) -> int:
         """New sequence sharing every page of ``sid`` (prompt-prefix reuse)."""
         src = self._seqs[sid]
@@ -177,6 +222,9 @@ class PagePool:
             assert len(seq.pages) == len(set(seq.pages)), "dup page in seq"
             for p in seq.pages:
                 held[p] = held.get(p, 0) + 1
+        for p, n in self._cache_refs.items():
+            assert n > 0, (p, n)
+            held[p] = held.get(p, 0) + n
         assert held == self._ref, (held, self._ref)
         assert not (set(held) & set(self._free)), "page both held and free"
         assert 0 not in held, "null page handed out"

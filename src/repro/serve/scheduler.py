@@ -57,6 +57,11 @@ class Scheduler:
         """Unconditional FIFO pop (dense fallback — no page gating)."""
         return self._queue.popleft()
 
+    def peek(self) -> Optional[Request]:
+        """Head request without popping (prefix-cache pre-eviction looks at
+        the head's match before deciding how many cache pages to free)."""
+        return self._queue[0] if self._queue else None
+
     def requeue_front(self, req: Request) -> None:
         """Preempted request goes back to the head (it was admitted first)."""
         self._queue.appendleft(req)
@@ -73,10 +78,16 @@ class Scheduler:
         return prompt_total
 
     def pop_admissible(
-        self, pool: PagePool, prompt_total_of, headroom_pages: int = 0
+        self,
+        pool: PagePool,
+        prompt_total_of,
+        headroom_pages: int = 0,
+        cached_pages_of=None,
     ) -> Optional[Request]:
         """Head request if its reservation (+ the engine's chunk headroom,
         see ``ServeEngine._admission_headroom``) fits the pool's free pages.
+        ``cached_pages_of`` discounts pages the request will adopt from the
+        prefix cache instead of allocating (shared pages are already live).
 
         Strict FIFO: no head-of-line bypass, so admission order (and with it
         per-request output, under per-slot sample streams) is deterministic.
@@ -85,6 +96,8 @@ class Scheduler:
             return None
         req = self._queue[0]
         need = pool.pages_for(self.reserve_tokens(req, prompt_total_of(req)))
+        if cached_pages_of is not None:
+            need -= cached_pages_of(req)
         if need + headroom_pages > pool.free_pages:
             return None
         return self._queue.popleft()

@@ -116,3 +116,82 @@ def test_pages_for_matches_alloc(n_tokens, page_size):
     sid = pool.alloc(n_tokens)
     assert len(pool.seq_pages(sid)) == pool.pages_for(n_tokens)
     assert pool.pages_for(n_tokens) * page_size >= n_tokens
+
+
+# ------------------------------------------------- radix prefix workloads
+@hypothesis.given(
+    st.lists(
+        st.tuples(st.integers(0, 4), st.integers(0, 2 ** 16)),
+        min_size=1, max_size=80,
+    )
+)
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_pool_invariants_under_radix_workload(ops):
+    """Fork-heavy adopt/insert/evict/free interleavings through the prefix
+    cache: no page is ever leaked or double-freed, the cache's retains and
+    the sequences' refs always reconcile (``pool.check``), adopted pages
+    can never be evicted out from under a live sequence, and the high-water
+    mark respects the budget.
+
+    verbs: 0 = match+adopt+extend a prompt, 1 = retire (insert prompt pages
+    into the radix tree, free the sequence), 2 = free without inserting,
+    3 = evict_until(n), 4 = append to a live sequence. Prompts draw from a
+    3-symbol alphabet so shared prefixes (and node splits) are common.
+    """
+    from repro.serve.prefix import PrefixCache
+
+    page = 2
+    pool = PagePool(num_pages=12, page_size=page)   # budget 11: real pressure
+    cache = PrefixCache(pool)
+    live = []   # (sid, prompt)
+
+    def mkprompt(seed):
+        rng = [(seed >> (2 * i)) % 3 for i in range(8)]
+        n = 3 + seed % 6
+        return [1 + r for r in rng[:n]]
+
+    for verb, arg in ops:
+        try:
+            if verb == 0:
+                prompt = mkprompt(arg)
+                C, pages = cache.match(prompt, max_tokens=len(prompt) - 1)
+                sid = pool.adopt(pages, C) if C else pool.alloc(len(prompt))
+                if C:
+                    try:
+                        pool.ensure(sid, len(prompt))
+                    except PoolExhausted:
+                        pool.free(sid)      # all-or-nothing admission
+                        raise
+                live.append((sid, prompt))
+            elif verb == 1 and live:
+                sid, prompt = live.pop(arg % len(live))
+                n_full = len(prompt) // page
+                cache.insert(prompt, pool.seq_pages(sid)[:n_full])
+                pool.free(sid)
+            elif verb == 2 and live:
+                sid, _ = live.pop(arg % len(live))
+                pool.free(sid)
+            elif verb == 3:
+                cache.evict_until(1 + arg % 4)
+            elif verb == 4 and live:
+                sid, _ = live[arg % len(live)]
+                pool.append(sid, 1 + arg % 3)
+        except PoolExhausted:
+            pass                                # refusal must not corrupt
+        pool.check()
+        cache.check()
+        assert pool.high_water <= pool.budget
+        # a page referenced by any live sequence is never on the free list
+        # (checked inside pool.check) and never evictable:
+        for sid, _ in live:
+            for p in pool.seq_pages(sid):
+                assert pool.refcount(p) >= 1
+    for sid, _ in live:
+        pool.free(sid)
+    pool.check()
+    cache.check()
+    cache.evict_until(pool.budget)
+    assert pool.pages_in_use == 0               # nothing leaked
+    full = pool.alloc(pool.budget * pool.page_size)
+    assert len(pool.seq_pages(full)) == pool.budget
+    pool.check()

@@ -1,6 +1,9 @@
 """Paged decode-attention kernel vs the jnp oracle, and the oracle vs a
 dense gather-free computation. Sweeps GQA group sizes, sliding windows,
-non-page-multiple request lengths, and explicit interpret mode."""
+non-page-multiple request lengths, and explicit interpret mode. The
+prefill-kernel sweeps at the bottom cover the chunked-prefill sibling:
+chunk-length queries, ragged valid rows, nonzero start offsets (cached
+prefixes), and the T=1 decode degeneration."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,8 +11,16 @@ import pytest
 
 pytestmark = pytest.mark.kernel
 
-from repro.kernels.paged_attention import paged_attention, paged_attention_ref
-from repro.kernels.paged_attention.kernel import paged_attention_kernel
+from repro.kernels.paged_attention import (
+    paged_attention,
+    paged_attention_ref,
+    paged_prefill_attention,
+    paged_prefill_attention_ref,
+)
+from repro.kernels.paged_attention.kernel import (
+    paged_attention_kernel,
+    paged_prefill_attention_kernel,
+)
 
 
 def make_case(B, Kv, G, hd, page, N, P, lengths, seed=0):
@@ -100,3 +111,103 @@ def test_window_equals_full_when_covering():
     wide = paged_attention_ref(q, kp, vp, tables, lens, window=64)
     np.testing.assert_allclose(np.asarray(full), np.asarray(wide),
                                atol=1e-6, rtol=1e-6)
+
+
+# -------------------------------------------------- chunked prefill kernel
+def make_prefill_case(B, T, Kv, G, hd, page, N, P, starts, qlens, seed=0):
+    """Pool + block tables covering each request's start + T positions."""
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(B, T, Kv, G, hd), jnp.float32) * (hd ** -0.5)
+    kp = jnp.asarray(rng.randn(N, page, Kv, hd), jnp.float32)
+    vp = jnp.asarray(rng.randn(N, page, Kv, hd), jnp.float32)
+    tables = np.zeros((B, P), np.int32)
+    nxt = 1
+    for b in range(B):
+        n = -(-(starts[b] + T) // page)
+        assert nxt + n <= N and n <= P
+        tables[b, :n] = np.arange(nxt, nxt + n)
+        nxt += n
+    return (
+        q, kp, vp, jnp.asarray(tables),
+        jnp.asarray(starts, jnp.int32), jnp.asarray(qlens, jnp.int32),
+    )
+
+
+PREFILL_CASES = [
+    # (B, T, Kv, G, hd, page, N, P, starts, qlens)
+    (1, 8, 1, 4, 32, 4, 24, 12, [0], [8]),       # MQA, cold chunk
+    (2, 4, 2, 2, 32, 8, 16, 4, [0, 5], [4, 3]),  # GQA, offset + ragged
+    (1, 8, 1, 4, 32, 4, 24, 12, [13], [6]),      # mid-prompt chunk
+    (3, 4, 2, 4, 16, 8, 32, 4, [0, 9, 17], [4, 2, 1]),  # mixed depths
+]
+
+
+@pytest.mark.parametrize(
+    "case", PREFILL_CASES, ids=[str(c[:4]) for c in PREFILL_CASES]
+)
+@pytest.mark.parametrize("window", [0, 6])
+def test_prefill_kernel_matches_ref(case, window):
+    B, T, Kv, G, hd, page, N, P, starts, qlens = case
+    q, kp, vp, tbl, st, ln = make_prefill_case(
+        B, T, Kv, G, hd, page, N, P, starts, qlens
+    )
+    out = paged_prefill_attention(
+        q, kp, vp, tbl, st, ln, window=window, use_kernel=True
+    )
+    ref = paged_prefill_attention_ref(q, kp, vp, tbl, st, ln, window=window)
+    for b in range(B):   # padded rows (t >= q_len) are garbage by contract
+        np.testing.assert_allclose(
+            np.asarray(out)[b, : qlens[b]], np.asarray(ref)[b, : qlens[b]],
+            atol=2e-5, rtol=2e-5,
+        )
+
+
+def test_prefill_kernel_interpret_mode_explicit():
+    q, kp, vp, tbl, st, ln = make_prefill_case(
+        2, 4, 2, 2, 32, 8, 16, 4, [3, 11], [4, 2], seed=3
+    )
+    out = paged_prefill_attention_kernel(q, kp, vp, tbl, st, ln,
+                                         interpret=True)
+    ref = paged_prefill_attention_ref(q, kp, vp, tbl, st, ln)
+    for b, L in enumerate([4, 2]):
+        np.testing.assert_allclose(
+            np.asarray(out)[b, :L], np.asarray(ref)[b, :L],
+            atol=2e-5, rtol=2e-5,
+        )
+
+
+def test_prefill_t1_degenerates_to_decode():
+    """A one-row chunk at position p is exactly a decode step at length
+    p + 1 — the two oracles (and thus both kernels) must agree."""
+    q, kp, vp, tbl, st, ln = make_prefill_case(
+        2, 1, 2, 2, 16, 8, 16, 4, [6, 11], [1, 1], seed=7
+    )
+    pre = paged_prefill_attention_ref(q, kp, vp, tbl, st, ln)
+    dec = paged_attention_ref(q[:, 0], kp, vp, tbl, st + 1)
+    np.testing.assert_allclose(
+        np.asarray(pre[:, 0]), np.asarray(dec), atol=1e-6, rtol=1e-6
+    )
+
+
+def test_prefill_causality_ignores_future_garbage():
+    """Keys beyond each row's own position — including stale garbage in
+    allocated-but-unwritten page slots — must not leak into any valid row."""
+    q, kp, vp, tbl, st, ln = make_prefill_case(
+        1, 4, 2, 2, 16, 8, 16, 4, [2], [4], seed=5
+    )
+    ref = paged_prefill_attention_ref(q, kp, vp, tbl, st, ln)
+    # poison every pool position at kpos > last query position
+    last = 2 + 4 - 1
+    kp2, vp2 = np.asarray(kp).copy(), np.asarray(vp).copy()
+    for j in range(np.asarray(tbl).shape[1]):
+        pid = int(np.asarray(tbl)[0, j])
+        for s in range(kp2.shape[1]):
+            if j * kp2.shape[1] + s > last and pid != 0:
+                kp2[pid, s] = 1e3
+                vp2[pid, s] = -1e3
+    out = paged_prefill_attention(
+        q, jnp.asarray(kp2), jnp.asarray(vp2), tbl, st, ln, use_kernel=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(out)[0], np.asarray(ref)[0], atol=2e-5, rtol=2e-5
+    )

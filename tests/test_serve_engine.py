@@ -211,6 +211,61 @@ def test_engine_bucketed_prefill_exact_and_bounded_compiles(arch_state):
         np.testing.assert_array_equal(out[rid], _run_alone(cfg, params, p, 5))
 
 
+@pytest.mark.parametrize("n_kv", [1, 2, 4])
+def test_engine_bucketed_prefill_exact_across_head_layouts(n_kv):
+    """Bucketed-prefill exactness is head-layout-agnostic: the causal mask
+    hides pad positions identically for MQA (kv=1), GQA (kv=2, groups of
+    2), and MHA (kv=4). Each layout's bucketed engine output must equal its
+    exact-shape alone run."""
+    cfg = get_reduced("granite-8b", n_kv_heads=n_kv)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(9)
+    prompts = [rng.randint(0, cfg.vocab_size, (s,)).astype(np.int32)
+               for s in (3, 6, 5)]
+    eng = ServeEngine(
+        cfg, params, RT,
+        EngineConfig(max_slots=2, page_size=8, num_pages=33, max_len=64,
+                     inner_steps=4, prefill_bucket=8),
+    )
+    rids = [eng.submit(p, 5) for p in prompts]
+    out = eng.run()
+    for rid, p in zip(rids, prompts):
+        tokens, _ = generate(
+            cfg, params, {"tokens": jnp.asarray(p[None])}, RT, 5
+        )
+        np.testing.assert_array_equal(
+            out[rid], np.asarray(tokens[0]), err_msg=f"n_kv={n_kv}"
+        )
+
+
+def test_engine_warns_on_moe_bucketed_or_chunked_prefill(arch_state):
+    """The documented fallback: MoE expert capacity counts pad/chunk
+    tokens, so bucketed / chunked prefill is not guaranteed token-exact
+    for MoE families — the engine says so instead of silently differing."""
+    cfg, params = arch_state("qwen3-moe-30b-a3b")
+    with pytest.warns(UserWarning, match="expert capacity"):
+        ServeEngine(
+            cfg, params, RT,
+            EngineConfig(max_slots=1, page_size=8, num_pages=17, max_len=32,
+                         prefill_bucket=8),
+        )
+    with pytest.warns(UserWarning, match="expert capacity"):
+        ServeEngine(
+            cfg, params, RT,
+            EngineConfig(max_slots=1, page_size=8, num_pages=17, max_len=32,
+                         prefill_chunk=4),
+        )
+    # no warning for exact-shape non-chunked serving
+    import warnings as _w
+
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        ServeEngine(
+            cfg, params, RT,
+            EngineConfig(max_slots=1, page_size=8, num_pages=17, max_len=32),
+        )
+
+
 def test_engine_bucketed_prefill_exact_past_sliding_window(arch_state):
     """Regression: right-padding a prompt past a local layer's window must
     not ring-evict real in-window tokens from the prefill cache — the

@@ -1,0 +1,296 @@
+"""Prefix-cache subsystem: radix tree over the page pool + chunked prefill.
+
+* Radix structure: page-aligned edges, node splitting on divergence, LRU
+  eviction of idle leaves only (adopted pages are pinned by refcount).
+* Engine correctness: with caching on, every request's output is token-
+  identical to a cold-cache run and to running alone — the paged-prefill
+  path computes bit-identical logits for a given row regardless of chunk
+  offsets or what else is cached (fixed-width pool gathers, per-row
+  reductions), so reuse can never change tokens.
+* Chunked prefill: prompt chunks interleave with the decode batch in one
+  jitted step (decode keeps advancing while a long prompt prefills) and
+  an idle engine takes the prefill-only step (no decode-scan tax on TTFT).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import Runtime, init_params
+from repro.serve import EngineConfig, PrefixCache, PagePool, ServeEngine
+from repro.train.serve import generate
+
+RT = Runtime(dtype=jnp.float32, chunk_q=32)
+
+
+@pytest.fixture(scope="module")
+def arch_state():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = get_reduced(name)
+            cache[name] = (cfg, init_params(cfg, jax.random.PRNGKey(0)))
+        return cache[name]
+
+    return get
+
+
+# ------------------------------------------------------------- radix unit
+def test_radix_match_insert_split_roundtrip():
+    pool = PagePool(num_pages=33, page_size=4)
+    cache = PrefixCache(pool)
+    toks = list(range(12))
+    sid = pool.alloc(12)
+    assert cache.insert(toks, pool.seq_pages(sid)) == 3
+    pool.free(sid)
+    pool.check(), cache.check()
+
+    # full-prefix match, capped below the prompt end
+    C, pages = cache.match(toks + [99], max_tokens=12)
+    assert C == 12 and len(pages) == 3
+    # cap leaves the last token uncached
+    C, _ = cache.match(toks, max_tokens=11)
+    assert C == 8
+
+    # divergence inside the second page -> only the first page matches
+    C, pages = cache.match(list(range(4)) + [77, 78], max_tokens=6)
+    assert C == 4 and len(pages) == 1
+
+    # insert a diverging prompt: the shared first page gets its own node
+    # (split), the tail a sibling — pages of the shared page are NOT
+    # duplicated
+    div = list(range(4)) + [50, 51, 52, 53]
+    sid2 = pool.alloc(8)
+    new = cache.insert(div, pool.seq_pages(sid2))
+    assert new == 1                      # only the diverging page is new
+    pool.free(sid2)
+    cache.check(), pool.check()
+    C, _ = cache.match(div, max_tokens=8)
+    assert C == 8
+
+
+def test_radix_adoption_pins_pages_against_eviction():
+    pool = PagePool(num_pages=9, page_size=4)
+    cache = PrefixCache(pool)
+    sid = pool.alloc(8)
+    cache.insert(list(range(8)), pool.seq_pages(sid))
+    pool.free(sid)
+    C, pages = cache.match(list(range(8)), max_tokens=8)
+    adopted = pool.adopt(pages, C)
+    # everything is pinned by the adopter: nothing evictable
+    assert cache.evictable_pages() == 0
+    assert cache.evict_until(2) == 0
+    pool.free(adopted)
+    assert cache.evictable_pages() == 2
+    assert cache.evict_until(2) == 2
+    pool.check(), cache.check()
+    assert pool.pages_in_use == 0
+
+
+def test_radix_lru_evicts_least_recently_used_leaf():
+    pool = PagePool(num_pages=17, page_size=2)
+    cache = PrefixCache(pool)
+    prompts = [[1, 2, 10, 11], [1, 2, 20, 21], [1, 2, 30, 31]]
+    for p in prompts:
+        sid = pool.alloc(4)
+        cache.insert(p, pool.seq_pages(sid))
+        pool.free(sid)
+    cache.check()
+    # touch the first two; the third leaf is now LRU
+    cache.match(prompts[0], max_tokens=4)
+    cache.match(prompts[1], max_tokens=4)
+    cache.evict_until(1)
+    assert cache.match(prompts[2], max_tokens=4)[0] == 2  # tail gone
+    assert cache.match(prompts[0], max_tokens=4)[0] == 4  # survivors intact
+    assert cache.match(prompts[1], max_tokens=4)[0] == 4
+    pool.check(), cache.check()
+
+
+# ------------------------------------------ engine: cold == warm == alone
+def _engine_alone(cfg, params, ecfg, prompt, max_new):
+    eng = ServeEngine(cfg, params, RT, ecfg)
+    rid = eng.submit(prompt, max_new)
+    return eng.run()[rid]
+
+
+def _dense_alone(cfg, params, prompt, max_new):
+    out, _ = generate(
+        cfg, params, {"tokens": jnp.asarray(prompt[None])}, RT, max_new
+    )
+    return np.asarray(out[0])
+
+
+FAMILIES = [
+    "granite-8b",           # dense full attention (paged + prefix path)
+    "gemma3-1b",            # sliding-window (paged + prefix path)
+    "falcon-mamba-7b",      # SSM -> dense fallback, cache bypassed
+    "recurrentgemma-2b",    # RG-LRU -> dense fallback, cache bypassed
+    "seamless-m4t-medium",  # enc-dec -> dense fallback, cache bypassed
+    "phi-3-vision-4.2b",    # vision prefix -> legacy prefill, cache bypassed
+]
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_prefix_cache_on_is_token_identical_all_families(arch_state, name):
+    """Acceptance: caching on => outputs identical to a cold-cache run and
+    to running alone, for every family. Paged attention families exercise
+    real hits; fallback/vision families must bypass the cache unchanged."""
+    cfg, params = arch_state(name)
+    rng = np.random.RandomState(7)
+    shared = rng.randint(0, cfg.vocab_size, (16,)).astype(np.int32)
+    prompts = [
+        np.concatenate(
+            [shared, rng.randint(0, cfg.vocab_size, (s,)).astype(np.int32)]
+        )
+        for s in (5, 9, 3)
+    ]
+    max_news = [6, 4, 5]
+    fes = [
+        rng.randn(cfg.frontend_tokens, cfg.d_model).astype(np.float32)
+        if cfg.frontend is not None else None
+        for _ in prompts
+    ]
+    ecfg = EngineConfig(max_slots=2, page_size=8, num_pages=33, max_len=64,
+                        inner_steps=4, prefix_cache=True, prefill_chunk=4)
+    eng = ServeEngine(cfg, params, RT, paged=None, engine=ecfg)
+    rids = [
+        eng.submit(p, m, frontend_embeds=fe)
+        for p, m, fe in zip(prompts, max_news, fes)
+    ]
+    cold = eng.run()
+    # warm: identical resubmission must reproduce the cold outputs exactly
+    rids2 = [
+        eng.submit(p, m, frontend_embeds=fe)
+        for p, m, fe in zip(prompts, max_news, fes)
+    ]
+    warm = eng.run()
+    for r1, r2, p, m, fe in zip(rids, rids2, prompts, max_news, fes):
+        np.testing.assert_array_equal(cold[r1], warm[r2], err_msg=name)
+        if fe is None:
+            alone = _engine_alone(cfg, params, ecfg, p, m)
+            np.testing.assert_array_equal(cold[r1], alone, err_msg=name)
+    if eng.paged and cfg.frontend is None:
+        assert eng.stats["prefix_hits"] >= len(prompts)   # warm pass hits
+        eng.pool.check()
+        eng.prefix.check()
+        eng.prefix.clear()
+        assert eng.pool.pages_in_use == 0
+    else:
+        # fallback/vision: the radix path must not have engaged
+        assert eng.stats.get("prefix_lookups", 0) == 0
+
+
+def test_prefix_cache_matches_dense_generate(arch_state):
+    """Cross-path anchor: on these shapes the paged-prefill path is bit-
+    identical to the dense prefill, so cache-on engine output == the dense
+    generate used by every other serving test."""
+    cfg, params = arch_state("granite-8b")
+    rng = np.random.RandomState(0)
+    shared = rng.randint(0, cfg.vocab_size, (16,)).astype(np.int32)
+    prompts = [
+        np.concatenate(
+            [shared, rng.randint(0, cfg.vocab_size, (s,)).astype(np.int32)]
+        )
+        for s in (5, 9, 3, 7)
+    ]
+    max_news = [6, 4, 8, 5]
+    ecfg = EngineConfig(max_slots=2, page_size=8, num_pages=33, max_len=64,
+                        inner_steps=4, prefix_cache=True, prefill_chunk=4)
+    eng = ServeEngine(cfg, params, RT, ecfg)
+    for _ in range(2):                      # cold pass, then all-hit pass
+        rids = [eng.submit(p, m) for p, m in zip(prompts, max_news)]
+        out = eng.run()
+        for rid, p, m in zip(rids, prompts, max_news):
+            np.testing.assert_array_equal(
+                out[rid], _dense_alone(cfg, params, p, m), err_msg=f"{rid}"
+            )
+    assert eng.stats["prefix_hits"] >= len(prompts)
+
+
+def test_chunked_prefill_without_cache_is_exact(arch_state):
+    """prefill_chunk alone (no radix tree): chunk-interleaved prefill must
+    not change any output token, and the engine reports its chunk count."""
+    cfg, params = arch_state("granite-8b")
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(0, cfg.vocab_size, (s,)).astype(np.int32)
+               for s in (17, 11, 23)]
+    ecfg = EngineConfig(max_slots=2, page_size=8, num_pages=33, max_len=64,
+                        inner_steps=4, prefill_chunk=8)
+    eng = ServeEngine(cfg, params, RT, ecfg)
+    rids = [eng.submit(p, 5) for p in prompts]
+    out = eng.run()
+    for rid, p in zip(rids, prompts):
+        np.testing.assert_array_equal(out[rid], _dense_alone(cfg, params, p, 5))
+    assert eng.prefix is None
+    assert eng.stats["prefill_chunks"] == sum(-(-len(p) // 8) for p in prompts)
+    assert eng.pool.pages_in_use == 0
+
+
+def test_decode_advances_while_long_prompt_prefills(arch_state):
+    """The fused step's point: a decoding slot keeps emitting while another
+    slot's long prompt goes through chunk-by-chunk."""
+    cfg, params = arch_state("granite-8b")
+    rng = np.random.RandomState(11)
+    short = rng.randint(0, cfg.vocab_size, (4,)).astype(np.int32)
+    long = rng.randint(0, cfg.vocab_size, (40,)).astype(np.int32)
+    ecfg = EngineConfig(max_slots=2, page_size=8, num_pages=33, max_len=64,
+                        inner_steps=2, prefill_chunk=8)
+    eng = ServeEngine(cfg, params, RT, ecfg)
+    r_short = eng.submit(short, 20)
+    r_long = eng.submit(long, 4)
+    out = eng.run()
+    np.testing.assert_array_equal(out[r_short], _dense_alone(cfg, params, short, 20))
+    np.testing.assert_array_equal(out[r_long], _dense_alone(cfg, params, long, 4))
+    # the long prompt needed 5 chunks; the short request was decoding the
+    # whole time, so its tokens landed across multiple fused steps
+    assert eng.stats["prefill_chunks"] >= 5
+
+
+def test_prefix_cache_under_eviction_pressure(arch_state):
+    """Optimistic admission + a pool too small for everything: engine
+    preemption and cache LRU eviction interleave, outputs stay exact, and
+    nothing leaks."""
+    cfg, params = arch_state("granite-8b")
+    rng = np.random.RandomState(4)
+    shared = rng.randint(0, cfg.vocab_size, (8,)).astype(np.int32)
+    prompts = [
+        np.concatenate(
+            [shared, rng.randint(0, cfg.vocab_size, (2,)).astype(np.int32)]
+        )
+        for _ in range(3)
+    ]
+    max_news = [24, 16, 12]
+    ecfg = EngineConfig(max_slots=2, page_size=4, num_pages=14, max_len=48,
+                        inner_steps=4, policy="optimistic",
+                        prefix_cache=True, prefill_chunk=4)
+    eng = ServeEngine(cfg, params, RT, ecfg)
+    rids = [eng.submit(p, m) for p, m in zip(prompts, max_news)]
+    out = eng.run()
+    for rid, p, m in zip(rids, prompts, max_news):
+        np.testing.assert_array_equal(
+            out[rid], _dense_alone(cfg, params, p, m), err_msg=f"rid={rid}"
+        )
+    eng.pool.check()
+    eng.prefix.check()
+    eng.prefix.clear()
+    assert eng.pool.pages_in_use == 0
+
+
+def test_engine_reuse_and_stats_accumulate(arch_state):
+    cfg, params = arch_state("granite-8b")
+    rng = np.random.RandomState(9)
+    p = rng.randint(0, cfg.vocab_size, (18,)).astype(np.int32)
+    ecfg = EngineConfig(max_slots=1, page_size=8, num_pages=17, max_len=32,
+                        inner_steps=2, prefix_cache=True)
+    eng = ServeEngine(cfg, params, RT, ecfg)
+    r0 = eng.submit(p, 4)
+    o0 = eng.run()
+    assert eng.stats["prefix_lookups"] == 1 and eng.stats["prefix_hits"] == 0
+    r1 = eng.submit(p, 4)
+    o1 = eng.run()
+    np.testing.assert_array_equal(o0[r0], o1[r1])
+    assert eng.stats["prefix_hits"] == 1
+    assert eng.stats["prefix_cached_tokens"] == 16   # 2 full pages
+    assert eng.stats["ttft_s"][r1] < 10.0            # sanity: recorded

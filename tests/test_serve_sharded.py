@@ -102,6 +102,42 @@ REPLICA_SCRIPT = HEADER.format(arch="moonshot-v1-16b-a3b") + textwrap.dedent(
     """
 )
 
+PREFIX_SCRIPT = HEADER.format(arch="moonshot-v1-16b-a3b") + textwrap.dedent(
+    """
+    # radix prefix cache + chunked prefill under TP: cache hits and chunk
+    # scheduling are host-side and topology-blind, so TP=2 must be token-
+    # identical to TP=1 on both the cold and the all-hit warm pass
+    shared = rng.randint(0, cfg.vocab_size, (16,)).astype(np.int32)
+    prompts = [np.concatenate([shared, t]) for t in (
+        rng.randint(0, cfg.vocab_size, (5,)).astype(np.int32),
+        rng.randint(0, cfg.vocab_size, (9,)).astype(np.int32),
+        rng.randint(0, cfg.vocab_size, (3,)).astype(np.int32),
+    )]
+    max_news = [6, 4, 7]
+    ecfg = EngineConfig(max_slots=2, page_size=8, num_pages=33, max_len=64,
+                        inner_steps=4, prefix_cache=True, prefill_chunk=4)
+
+    def run_prefix(mesh):
+        eng = ServeEngine(cfg, params, rt.replace(mesh=mesh), ecfg)
+        rids = [eng.submit(p, m) for p, m in zip(prompts, max_news)]
+        cold = eng.run()
+        rids2 = [eng.submit(p, m) for p, m in zip(prompts, max_news)]
+        warm = eng.run()
+        eng.pool.check(); eng.prefix.check()
+        return eng, [cold[r] for r in rids], [warm[r] for r in rids2]
+
+    e1, cold1, warm1 = run_prefix(None)
+    e2, cold2, warm2 = run_prefix(make_serve_mesh(1, 2))
+    for a, b, c, d in zip(cold1, warm1, cold2, warm2):
+        np.testing.assert_array_equal(a, b)   # cold == warm (reuse exact)
+        np.testing.assert_array_equal(a, c)   # TP=1 == TP=2 cold
+        np.testing.assert_array_equal(a, d)   # TP=1 == TP=2 warm
+    assert e1.stats["prefix_hits"] >= 4 and e2.stats["prefix_hits"] >= 4
+    assert e1.stats["prefix_hits"] == e2.stats["prefix_hits"]
+    print("PREFIX_SHARDED_OK", e2.stats["prefix_hits"])
+    """
+)
+
 MQA_SCRIPT = HEADER.format(arch="granite-8b") + textwrap.dedent(
     """
     assert cfg.n_kv_heads == 1                # MQA: heads can't divide TP=2
@@ -141,3 +177,7 @@ def test_replicated_engine_routes_and_matches_single():
 
 def test_mqa_family_falls_back_to_replicated_pool():
     _run(MQA_SCRIPT, "MQA_FALLBACK_OK")
+
+
+def test_prefix_cache_and_chunked_prefill_token_identical_under_tp():
+    _run(PREFIX_SCRIPT, "PREFIX_SHARDED_OK")
