@@ -1,0 +1,135 @@
+"""Executable pipeline training bench: single vs GPipe vs 1F1B.
+
+Accounting rows (us = 0.0, exact — gated by check_regression):
+  * simulator-vs-executable bubble fraction per schedule: the tick table IS
+    the simulator schedule, so these must agree exactly.
+  * per-device activation-slot budgets and peak live activation bytes —
+    the survey's 1F1B memory argument as a hard number: O(P) slots vs
+    GPipe's O(M), strictly smaller at M >= 2P (asserted, not just printed).
+
+Timed rows (subprocess on 4 forced host devices): measured step time for
+the single-device step and the executable GPipe / 1F1B plans at equal
+microbatch count on the same reduced model.
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import emit, header, subprocess_env
+from repro.core.pipeline import simulate, tick_table
+
+P, M = 4, 8          # M = 2P: the memory-gap regime the acceptance bar names
+ACT_BYTES = 8 * 64 * 128 * 4   # bench microbatch activation (B, S, d) f32
+
+
+def _accounting() -> None:
+    for sched in ("gpipe", "1f1b"):
+        t = tick_table(sched, P, M)
+        sim = simulate(sched, P, M, t_fwd=1.0, t_bwd=1.0)
+        assert abs(t.bubble_fraction - sim.bubble_fraction) < 1e-12
+        emit(
+            f"train_pipe/bubble@{sched}_P{P}M{M}", 0.0,
+            f"sim={sim.bubble_fraction:.4f} exec={t.bubble_fraction:.4f} "
+            "exact_match=True",
+        )
+        emit(
+            f"train_pipe/act_slots@{sched}_P{P}M{M}", 0.0,
+            f"act={t.n_act_slots} cot={t.n_cot_slots} "
+            f"peak_bytes={t.peak_activation_bytes(ACT_BYTES)}",
+        )
+    f, g = tick_table("1f1b", P, M), tick_table("gpipe", P, M)
+    assert f.peak_activation_bytes(ACT_BYTES) < g.peak_activation_bytes(ACT_BYTES)
+    emit(
+        f"train_pipe/memory_factor@P{P}M{M}", 0.0,
+        f"gpipe_slots={g.n_act_slots} 1f1b_slots={f.n_act_slots} "
+        f"factor={g.n_act_slots / f.n_act_slots:.2f}x "
+        f"(1f1b strictly below gpipe at M>=2P)",
+    )
+
+
+SCRIPT = textwrap.dedent(
+    """
+    import os, time
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import SURVEY_DEMO, ShapeSpec, reduced
+    import repro.configs.registry as registry
+    from repro.core.partitioner import ParallelPlan
+    from repro.data import DataPipeline
+    from repro.launch.mesh import make_train_mesh
+    from repro.launch.train import build_train_pipeline
+    from repro.optim import get as get_opt
+    from repro.train import TrainConfig, make_state, make_train_step
+
+    TINY = reduced(SURVEY_DEMO, n_layers=4, d_model=128, n_heads=4,
+                   n_kv_heads=2, d_ff=256, vocab_size=512)
+    registry.ARCHITECTURES[TINY.name] = TINY
+    B, SEQ, P, M = 8, 64, 4, 8
+    tc = TrainConfig(precision="f32", log_every=1)
+    opt = get_opt(tc.optimizer, tc.lr)
+    data = DataPipeline(TINY, batch_size=B, seq_len=SEQ, seed=0)
+    batch_np = {k: np.asarray(v) for k, v in dict(next(data)).items()}
+    data.close()
+
+    def time_step(fn, state, batch, iters=5):
+        state, m = fn(state, batch)          # compile + warm
+        jax.block_until_ready(m)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            state, m = fn(state, batch)
+            jax.block_until_ready(m)
+        return (time.perf_counter() - t0) / iters * 1e6, float(m["loss"])
+
+    step1 = make_train_step(TINY, opt, tc)
+    us, loss1 = time_step(
+        step1, make_state(TINY, opt, tc),
+        {k: jnp.asarray(v) for k, v in batch_np.items()})
+    print(f"ROW single {us:.1f} loss={loss1:.4f}")
+
+    for sched in ("gpipe", "1f1b"):
+        plan = ParallelPlan(dp=1, tp=1, pp=P, microbatches=M,
+                            schedule=sched).validate(TINY)
+        mesh = make_train_mesh(1, 1, P)
+        jitted, (s_struct, b_struct) = build_train_pipeline(
+            TINY.name, mesh, plan, tc, ShapeSpec("t", SEQ, B, "train"))
+        state = jax.tree.map(
+            lambda x, st: jax.device_put(x, st.sharding),
+            make_state(TINY, opt, tc), s_struct)
+        batch = jax.tree.map(
+            lambda v, st: jax.device_put(jnp.asarray(v), st.sharding),
+            batch_np, b_struct)
+        us, loss = time_step(jitted, state, batch)
+        print(f"ROW {sched} {us:.1f} loss={loss:.4f}")
+    """
+)
+
+
+def _executable() -> None:
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        timeout=900, env=subprocess_env(),
+    )
+    rows = {}
+    for ln in r.stdout.splitlines():
+        if ln.startswith("ROW "):
+            _, name, us, extra = ln.split(maxsplit=3)
+            rows[name] = (float(us), extra)
+    for name in ("single", "gpipe", "1f1b"):
+        us, extra = rows.get(name, (0.0, f"FAILED rc={r.returncode}"))
+        emit(
+            f"train_pipe/step@{name}_P{P}M{M}", us,
+            f"{extra} B=8 seq=64 4-layer tiny",
+        )
+    assert r.returncode == 0, r.stderr[-2000:]
+
+
+def main() -> None:
+    header("Train pipeline: executable 1F1B vs GPipe vs single device")
+    _accounting()
+    _executable()
+
+
+if __name__ == "__main__":
+    main()

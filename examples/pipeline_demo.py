@@ -2,8 +2,12 @@
 
 1. Partition granite-8b's 36 layers into 4 stages (dyn-prog vs heuristic).
 2. Simulate every Table-4 schedule on that partition.
-3. Execute a real GPipe pipeline on 4 simulated devices (subprocess) and
-   check it against the sequential model.
+3. Run ``dp_pp_search`` (batch-capped, uniform stages) to pick an
+   executable ParallelPlan for 4 devices.
+4. Execute that plan end-to-end as a REAL 1F1B pipeline on 4 simulated
+   devices (subprocess): `build_train_pipeline` streams microbatches
+   through the tick-table runner and the loss matches the single-device
+   step on the same batch.
 
     PYTHONPATH=src python examples/pipeline_demo.py
 """
@@ -12,11 +16,12 @@ import subprocess
 import sys
 import textwrap
 
-from repro.configs import get_config
+from repro.configs import get_config, get_reduced
 from repro.core.partitioner import (
-    dp_pp_search, dynprog_partition, heuristic_partition, layer_costs_from_config,
+    auto_plan, dp_pp_search, dynprog_partition, heuristic_partition,
+    layer_costs_from_config,
 )
-from repro.core.pipeline import SCHEDULES, simulate
+from repro.core.pipeline import SCHEDULES, simulate, tick_table
 
 def _subprocess_env():
     """Inherit the environment (JAX_PLATFORMS etc. — a bare env hangs jax
@@ -48,9 +53,20 @@ def main() -> None:
         print(f"  {name:14s} bubble={r.bubble_fraction:.3f} "
               f"peak_act={r.peak_activations:3d} wcopies={r.weight_versions} {sync}")
 
-    print("\nexecutable GPipe on 4 simulated devices:")
+    # planner -> executable plan for the 4 simulated devices below; the
+    # batch cap (dp <= batch/microbatches) is what pushes devices into pp
+    tiny = get_reduced("granite-8b")
+    plan = auto_plan(tiny, 4, microbatches=4, schedule="1f1b", max_dp=2)
+    tt = tick_table(plan.schedule, plan.pp, plan.microbatches)
+    print(f"\nauto plan for 4 devices (batch-capped dp<=2): {plan.describe()}")
+    print(f"  1f1b act slots/device: {tt.n_act_slots} "
+          f"(gpipe would hold {plan.microbatches})")
+
+    print("\nexecutable 1F1B on 4 simulated devices (plan above):")
     r = subprocess.run(
-        [sys.executable, "-c", _RUNNER], text=True, timeout=900,
+        [sys.executable, "-c", _RUNNER.format(
+            dp=plan.dp, tp=plan.tp, pp=plan.pp, M=plan.microbatches)],
+        text=True, timeout=900,
         env=_subprocess_env(),
     )
     assert r.returncode == 0
@@ -62,19 +78,43 @@ _RUNNER = textwrap.dedent(
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp, numpy as np
-    from repro.core.pipeline import pipeline_apply
-    P, M, D, B = 4, 8, 64, 4
-    mesh = jax.make_mesh((P,), ("pipe",))
-    rng = np.random.RandomState(0)
-    sp = {"w": jnp.asarray(rng.randn(P, D, D) * 0.2, jnp.float32)}
-    mbs = jnp.asarray(rng.randn(M, B, D), jnp.float32)
-    fn = lambda p, x: jnp.tanh(x @ p["w"])
-    out = pipeline_apply(fn, sp, mbs, mesh=mesh)
-    ref = mbs
-    for s in range(P):
-        ref = jax.vmap(lambda x: fn({"w": sp["w"][s]}, x))(ref)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
-    print("  pipelined output == sequential reference (8 microbatches, 4 stages)")
+    from repro.configs import ShapeSpec, get_reduced
+    import repro.configs.registry as registry
+    from repro.core.partitioner import ParallelPlan
+    from repro.data import DataPipeline
+    from repro.launch.mesh import make_train_mesh
+    from repro.launch.train import build_train_pipeline
+    from repro.optim import get as get_opt
+    from repro.train import TrainConfig, make_state, make_train_step
+
+    cfg = get_reduced("granite-8b")
+    registry.ARCHITECTURES[cfg.name] = cfg
+    B, SEQ = 8, 64
+    plan = ParallelPlan(dp={dp}, tp={tp}, pp={pp}, microbatches={M},
+                        schedule="1f1b").validate(cfg)
+    tc = TrainConfig(precision="f32", log_every=1)
+    opt = get_opt(tc.optimizer, tc.lr)
+    data = DataPipeline(cfg, batch_size=B, seq_len=SEQ, seed=0)
+    batch_np = {{k: np.asarray(v) for k, v in dict(next(data)).items()}}
+    data.close()
+
+    mesh = make_train_mesh(plan.dp, plan.tp, plan.pp)
+    jitted, (s_struct, b_struct) = build_train_pipeline(
+        cfg.name, mesh, plan, tc, ShapeSpec("t", SEQ, B, "train"))
+    state = jax.tree.map(lambda x, st: jax.device_put(x, st.sharding),
+                         make_state(cfg, opt, tc), s_struct)
+    batch = jax.tree.map(
+        lambda v, st: jax.device_put(jnp.asarray(v), st.sharding),
+        batch_np, b_struct)
+    _, m3d = jitted(state, batch)
+
+    step1 = make_train_step(cfg, opt, tc)
+    _, m1 = step1(make_state(cfg, opt, tc),
+                  {{k: jnp.asarray(v) for k, v in batch_np.items()}})
+    l3d, l1 = float(m3d["loss"]), float(m1["loss"])
+    assert abs(l3d - l1) < 2e-3 * abs(l1), (l3d, l1)
+    print(f"  1F1B on {{plan.describe()}}: loss={{l3d:.4f}} "
+          f"(single-device: {{l1:.4f}})")
     """
 )
 

@@ -1,2 +1,7 @@
 from repro.checkpoint import ckpt  # noqa: F401
-from repro.checkpoint.ckpt import latest_step, restore, save  # noqa: F401
+from repro.checkpoint.ckpt import (  # noqa: F401
+    latest_step,
+    restore,
+    restore_resharded,
+    save,
+)

@@ -61,17 +61,7 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def restore(
-    directory: str,
-    template: Any,
-    step: Optional[int] = None,
-    subset: str = "",
-) -> Any:
-    """Restore into the structure of ``template`` (shape/dtype checked).
-
-    ``subset``: only leaves whose key starts with this prefix are loaded;
-    others keep the template value (partial restore).
-    """
+def _load_step(directory: str, step: Optional[int]) -> Dict[str, np.ndarray]:
     if step is None:
         step = latest_step(directory)
         assert step is not None, f"no checkpoints under {directory}"
@@ -83,7 +73,21 @@ def restore(
         with np.load(os.path.join(d, shard)) as z:
             for k in z.files:
                 data[k] = z[k]
+    return data
 
+
+def restore(
+    directory: str,
+    template: Any,
+    step: Optional[int] = None,
+    subset: str = "",
+) -> Any:
+    """Restore into the structure of ``template`` (shape/dtype checked).
+
+    ``subset``: only leaves whose key starts with this prefix are loaded;
+    others keep the template value (partial restore).
+    """
+    data = _load_step(directory, step)
     leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
     out: List[Any] = []
     for path, leaf in leaves:
@@ -94,4 +98,40 @@ def restore(
             out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
         else:
             out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def restore_resharded(
+    directory: str,
+    target: Any,
+    step: Optional[int] = None,
+) -> Any:
+    """Restore a checkpoint into a DIFFERENT (dp, tp, pp) layout.
+
+    ``target`` is a pytree of ``jax.ShapeDtypeStruct`` with shardings
+    attached — e.g. the state struct returned by ``launch.train.build_train``
+    or ``build_train_pipeline`` for the new mesh/plan. Checkpoints store
+    full (host-gathered) arrays keyed by tree path and the state tree is
+    layout-invariant across plans (same pytree, different PartitionSpecs),
+    so reshard-on-load is: load every leaf, ``device_put`` straight to the
+    target sharding. Every target leaf must exist in the checkpoint —
+    unlike ``restore`` there is no template value to silently keep.
+    """
+    data = _load_step(directory, step)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(target)
+    out: List[Any] = []
+    for path, leaf in leaves:
+        key = "/".join(_path_str(p) for p in path)
+        assert key in data, f"checkpoint is missing {key!r}"
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is not None:
+            # device_put straight from host numpy: each device receives only
+            # its shard — never stage the full array on one device (a ZeRO-3
+            # / 3D leaf need not fit there)
+            val = jax.device_put(np.asarray(arr, dtype=leaf.dtype), sharding)
+        else:
+            val = jax.numpy.asarray(arr, dtype=leaf.dtype)
+        out.append(val)
     return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,4 +1,4 @@
-"""Pipeline-stage partitioners (survey Table 4, "Partition Optimization").
+"""Pipeline partitioners + the executable ParallelPlan (survey Table 4).
 
 Given per-layer costs, split L layers into P contiguous stages:
 
@@ -10,6 +10,15 @@ Given per-layer costs, split L layers into P contiguous stages:
   budget (PipeDream's outer loop / Varuna's brute force): for each (dp, pp)
   with dp*pp == N, partition with the DP and score throughput under the
   1F1B bubble model from repro.core.pipeline; returns the argmax.
+  ``uniform=True`` restricts to equal-count stages, the executable-runner
+  constraint (SPMD stages share one program, so stage param blocks must be
+  shape-uniform).
+
+The planner output is no longer score-only: ``ParallelPlan`` is the object
+the 3D trainer executes — (dp, tp, pp) degrees over the (data, model, pipe)
+mesh, microbatch count, executable schedule, stage boundaries, and the
+per-stage remat policy. ``auto_plan`` runs the search on a real device
+count and returns a validated plan (``launch.train --plan auto``).
 
 Costs can come from anywhere; ``layer_costs_from_config`` derives analytic
 per-layer FLOP weights from an ArchConfig (MoE/dense/mixer aware), which is
@@ -135,18 +144,132 @@ class DPPPChoice:
 
 
 def dp_pp_search(
-    costs: Sequence[float], n_devices: int, microbatches: int
+    costs: Sequence[float],
+    n_devices: int,
+    microbatches: int,
+    *,
+    uniform: bool = False,
+    max_dp: Optional[int] = None,
 ) -> DPPPChoice:
-    """Joint (dp, pp) degree search (PipeDream / Varuna outer loop)."""
+    """Joint (dp, pp) degree search (PipeDream / Varuna outer loop).
+
+    ``uniform=True`` restricts candidates to equal-layer-count stages
+    (pp | L, heuristic split) — the executable runner's constraint.
+    ``max_dp`` caps the data-parallel degree (Varuna's batch-size limit:
+    dp beyond global_batch / microbatch_size replicates idle work); under
+    the cap, extra devices go to the pipeline instead.
+    """
     best: Optional[DPPPChoice] = None
     for pp in range(1, min(n_devices, len(costs)) + 1):
         if n_devices % pp:
             continue
+        if uniform and len(costs) % pp:
+            continue
         dp = n_devices // pp
-        part = dynprog_partition(costs, pp)
+        if max_dp is not None and dp > max_dp:
+            continue
+        part = (
+            heuristic_partition(costs, pp) if uniform
+            else dynprog_partition(costs, pp)
+        )
         t = part.bottleneck * (microbatches + pp - 1) / (microbatches * dp)
         cand = DPPPChoice(dp, pp, part, t)
         if best is None or t < best.est_step_time:
             best = cand
-    assert best is not None
+    assert best is not None, "no feasible (dp, pp) split (max_dp too tight?)"
     return best
+
+
+# --------------------------------------------------------- executable plans
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    """One plan object from planner to hardware (the 3D trainer executes it).
+
+    dp/tp/pp are the (data, model, pipe) mesh degrees; ``microbatches`` and
+    ``schedule`` drive the executable pipeline (repro.core.pipeline
+    tick tables); ``boundaries`` are the contiguous stage cut points over
+    layers (must be equal-count — SPMD stages share one compiled program);
+    ``remat`` is the remat policy applied inside every stage's layer scan
+    (the per-stage knob of the §2.1 plans — the runner itself already
+    recomputes each stage forward from its stored input, so this controls
+    the *within-stage* transient only).
+    """
+    dp: int = 1
+    tp: int = 1
+    pp: int = 1
+    microbatches: int = 1
+    schedule: str = "1f1b"
+    boundaries: Tuple[int, ...] = ()
+    remat: str = "none"
+
+    @property
+    def n_devices(self) -> int:
+        return self.dp * self.tp * self.pp
+
+    def stage_boundaries(self, n_layers: int) -> Tuple[int, ...]:
+        if self.boundaries:
+            return self.boundaries
+        step = n_layers // self.pp
+        return tuple(range(0, n_layers + 1, step))
+
+    def validate(self, cfg: ArchConfig) -> "ParallelPlan":
+        """Check executability against ``cfg``; returns self (chainable)."""
+        from repro.core.pipeline import EXECUTABLE_SCHEDULES
+        from repro.models.stack import pipeline_incompatibility
+
+        if self.schedule not in EXECUTABLE_SCHEDULES:
+            raise ValueError(
+                f"schedule {self.schedule!r} is simulator-only; executable: "
+                f"{EXECUTABLE_SCHEDULES} (async rows need weight versioning "
+                "that SPMD JAX does not express)"
+            )
+        if min(self.dp, self.tp, self.pp, self.microbatches) < 1:
+            raise ValueError(f"degenerate plan {self}")
+        if cfg.n_layers % self.pp:
+            raise ValueError(
+                f"{cfg.n_layers} layers not divisible into pp={self.pp} stages"
+            )
+        b = self.stage_boundaries(cfg.n_layers)
+        sizes = {b[i + 1] - b[i] for i in range(len(b) - 1)}
+        if len(b) != self.pp + 1 or len(sizes) != 1:
+            raise ValueError(f"non-uniform stage boundaries {b} for pp={self.pp}")
+        why = pipeline_incompatibility(cfg, self.tp)
+        if why is not None:
+            raise ValueError(f"plan incompatible with {cfg.name}: {why}")
+        return self
+
+    def describe(self) -> str:
+        return (
+            f"dp={self.dp} tp={self.tp} pp={self.pp} "
+            f"M={self.microbatches} schedule={self.schedule} remat={self.remat}"
+        )
+
+
+def auto_plan(
+    cfg: ArchConfig,
+    n_devices: int,
+    *,
+    microbatches: int = 8,
+    tp: int = 1,
+    schedule: str = "1f1b",
+    remat: str = "none",
+    max_dp: Optional[int] = None,
+) -> ParallelPlan:
+    """Search (dp, pp) for ``n_devices`` and return an executable plan.
+
+    tp is fixed by the caller (head-divisibility is a model property, not a
+    search dimension); the remaining budget goes through ``dp_pp_search``
+    with the uniform-stage constraint. ``max_dp`` typically comes from the
+    global batch: dp <= batch / microbatches.
+    """
+    if n_devices % tp:
+        raise ValueError(f"{n_devices} devices not divisible by tp={tp}")
+    costs = layer_costs_from_config(cfg)
+    choice = dp_pp_search(
+        costs, n_devices // tp, microbatches, uniform=True, max_dp=max_dp
+    )
+    return ParallelPlan(
+        dp=choice.dp, tp=tp, pp=choice.pp, microbatches=microbatches,
+        schedule=schedule, boundaries=choice.partition.boundaries,
+        remat=remat,
+    ).validate(cfg)

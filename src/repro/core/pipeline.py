@@ -1,6 +1,6 @@
-"""Pipeline parallelism: Table-4 schedules + executable shard_map runner.
+"""Pipeline parallelism: Table-4 schedules + executable 1F1B/GPipe runners.
 
-Two halves:
+Three parts:
 
 1. **Schedule generators + event-driven simulator** (pure Python) covering
    the survey's Table 4 rows: GPipe, 1F1B (DAPPLE/Megatron), interleaved
@@ -11,16 +11,32 @@ Two halves:
    schedules also report weight staleness. Interleaved/Chimera use a greedy
    ready-op scheduler over virtual stages (documented approximation).
 
-2. **Executable GPipe** on a ``pipe`` mesh axis: microbatch stream scanned
-   over ticks, stage-to-stage transfer via ``ppermute``, stage params
-   sharded P('pipe', ...). The backward pipeline comes from AD through the
-   ppermutes (synchronous GPipe semantics). Correctness is tested against
-   the equivalent sequential model (tests/test_pipeline.py).
+2. **Executable GPipe via AD** (``pipeline_apply``) on a ``pipe`` mesh axis:
+   microbatch stream scanned over ticks, stage transfer via ``ppermute``,
+   backward from AD through the ppermutes. Simple, but AD stores every
+   microbatch's activations — O(M) live memory per device.
+
+3. **Executable manual-backward runner** (``tick_table`` +
+   ``pipeline_grads``): the same event-driven simulator, run at unit op
+   cost, is compiled into integer *tick tables* — per (tick, stage): which
+   microbatch to forward/backward, which activation slot to read/write, and
+   where arriving ppermute traffic lands. The runner streams those tables
+   through one ``lax.scan`` inside a fully-manual ``shard_map`` over a
+   (data, model, pipe) mesh and computes the backward itself (``jax.vjp``
+   per microbatch inside the schedule, gradients accumulated as-you-go), so
+   live activations are exactly the schedule's slot count: O(P) for 1F1B vs
+   O(M) for GPipe at identical math. Backward recomputes each stage forward
+   from its stored stage *input* — per-stage rematerialization (Chen'16,
+   1604.06174) composed with the schedule by construction. GPipe and 1F1B
+   run the identical per-microbatch code in the identical per-stage
+   accumulation order, so their gradients are bitwise equal — asserted in
+   tests/benchmarks.
 
 TPU adaptation (DESIGN.md §3): asynchronous weight versioning (PipeDream)
 does not exist in SPMD-synchronous JAX; async rows are simulator +
-convergence-model only, and the executable path is the synchronous family
-(GPipe now, 1F1B being a scheduling/memory variant of the same math).
+convergence-model only. The executable family is synchronous: GPipe and
+1F1B, which share the same math and differ only in op order and peak
+memory.
 """
 from __future__ import annotations
 
@@ -175,7 +191,7 @@ def _virtual_1f1b_times(V: int, M: int, tf: float = 1.0, tb: float = 2.0):
     return times
 
 
-def simulate(
+def _execute_schedule(
     name: str,
     P: int,
     M: int,
@@ -184,9 +200,10 @@ def simulate(
     t_fwd: float = 1.0,
     t_bwd: float = 2.0,
     t_comm: float = 0.0,
-) -> SimResult:
-    """Event-driven simulation of a pipeline schedule."""
-    asynchronous = name in ("pipedream", "pipedream_2bw", "varuna")
+):
+    """Run the event-driven scheduler; returns (executed, dev_time, placement,
+    V, chunks, t_fwd, t_bwd) where ``executed[d]`` is the per-device list of
+    (start, end, Op). Shared engine behind ``simulate`` and ``tick_table``."""
     orders, placement, V = _op_order(name, P, M, v)
     chunks = V // P if placement != "plain" else 1
     if placement == "interleaved":
@@ -263,6 +280,25 @@ def simulate(
                 raise RuntimeError(f"schedule {name} deadlocked")
         else:
             stall_guard = 0
+
+    return executed, dev_time, placement, V, chunks, t_fwd, t_bwd
+
+
+def simulate(
+    name: str,
+    P: int,
+    M: int,
+    *,
+    v: int = 2,
+    t_fwd: float = 1.0,
+    t_bwd: float = 2.0,
+    t_comm: float = 0.0,
+) -> SimResult:
+    """Event-driven simulation of a pipeline schedule."""
+    asynchronous = name in ("pipedream", "pipedream_2bw", "varuna")
+    executed, dev_time, placement, V, chunks, t_fwd, t_bwd = _execute_schedule(
+        name, P, M, v=v, t_fwd=t_fwd, t_bwd=t_bwd, t_comm=t_comm
+    )
 
     makespan = float(dev_time.max())
     work = M * (t_fwd + t_bwd) * chunks
@@ -392,3 +428,334 @@ def pipeline_apply(
         check_vma=False,
     )
     return fn(stage_params, microbatches)
+
+
+# =====================================================================
+# Part 3: tick tables + manual-backward runner (1F1B and GPipe)
+# =====================================================================
+EXECUTABLE_SCHEDULES = ("gpipe", "1f1b")
+
+
+@dataclasses.dataclass(frozen=True)
+class TickTable:
+    """Integer-tick execution tables compiled from the event simulator.
+
+    The simulator is run at unit op cost (t_fwd = t_bwd = 1, t_comm = 0), so
+    op start times are a global integer tick clock on which every device
+    executes at most one op per tick and a value ppermuted at the end of
+    tick ``t`` is available at tick ``t + 1``. Tables are (n_ticks, P)
+    int32, entry -1 = nothing this tick:
+
+      f_mb / b_mb    microbatch to forward / backward
+      f_slot         activation-buffer slot holding (or to hold) the stage
+                     INPUT of that microbatch
+      b_slot         activation slot to read for the backward (same slot
+                     its forward stored; freed afterwards)
+      b_cot          cotangent slot carrying the arriving upstream gradient
+                     (-1 on the last stage, which seeds from the loss)
+      arr_f / arr_b  slot into which this tick's arriving ppermute traffic
+                     (activation / cotangent) must be stored
+
+    ``n_act_slots`` is the greedy-allocated per-device activation buffer
+    depth — the executable form of Table 4's "peak in-flight activations":
+    O(M) for GPipe, O(P) for 1F1B. ``bubble_fraction`` is exact for the
+    executable schedule (each device computes 2M of n_ticks op slots) and
+    must agree with ``simulate(name, P, M, t_fwd=1, t_bwd=1)`` — the bench
+    asserts this simulator-vs-executable accounting row.
+    """
+    schedule: str
+    n_stages: int
+    n_microbatches: int
+    n_ticks: int
+    n_act_slots: int
+    n_cot_slots: int
+    f_mb: np.ndarray
+    f_slot: np.ndarray
+    b_mb: np.ndarray
+    b_slot: np.ndarray
+    b_cot: np.ndarray
+    arr_f: np.ndarray
+    arr_b: np.ndarray
+
+    @property
+    def bubble_fraction(self) -> float:
+        return 1.0 - 2.0 * self.n_microbatches / self.n_ticks
+
+    def peak_activation_bytes(self, act_bytes: int) -> int:
+        """Live pipeline-state bytes per device for one microbatch size."""
+        return (self.n_act_slots + self.n_cot_slots) * act_bytes
+
+
+def _alloc_slots(avail: Dict, last_use: Dict) -> Tuple[Dict, int]:
+    """Greedy per-stage interval slot allocation: a slot is live from its
+    value's arrival tick through its last-use tick (inclusive; arrivals at a
+    tick are stored before that tick's op reads, so reuse needs end < start)."""
+    slots: Dict = {}
+    depth = 0
+    by_stage: Dict[int, List] = {}
+    for key in avail:
+        by_stage.setdefault(key[0], []).append(key)
+    for s, keys in by_stage.items():
+        keys.sort(key=lambda k: (avail[k], k[1]))
+        busy: List[Tuple[int, int]] = []   # (last_use, slot)
+        free: List[int] = []
+        used = 0
+        for k in keys:
+            t0 = avail[k]
+            free += [sl for end, sl in busy if end < t0]
+            busy = [(end, sl) for end, sl in busy if end >= t0]
+            free.sort()
+            if free:
+                sl = free.pop(0)
+            else:
+                sl = used
+                used += 1
+            slots[k] = sl
+            busy.append((last_use[k], sl))
+        depth = max(depth, used)
+    return slots, depth
+
+
+def tick_table(schedule: str, P: int, M: int) -> TickTable:
+    """Compile ``schedule`` into integer tick tables (see TickTable)."""
+    if schedule not in EXECUTABLE_SCHEDULES:
+        raise ValueError(
+            f"executable schedules are {EXECUTABLE_SCHEDULES}, got {schedule!r}"
+        )
+    executed, _, _, _, _, _, _ = _execute_schedule(
+        schedule, P, M, v=1, t_fwd=1.0, t_bwd=1.0, t_comm=0.0
+    )
+    f_tick: Dict[Tuple[int, int], int] = {}
+    b_tick: Dict[Tuple[int, int], int] = {}
+    for evs in executed:
+        for (s0, e0, op) in evs:
+            t = int(round(s0))
+            assert abs(s0 - t) < 1e-9 and abs(e0 - t - 1) < 1e-9, (s0, e0, op)
+            (f_tick if op.kind == F else b_tick)[(op.stage, op.mb)] = t
+    T = 1 + max(b_tick.values())
+
+    # availability: when the stage input / upstream cotangent lands locally
+    avail_f = {
+        (s, m): (t if s == 0 else f_tick[(s - 1, m)] + 1)
+        for (s, m), t in f_tick.items()
+    }
+    avail_b = {
+        (s, m): b_tick[(s + 1, m)] + 1 for (s, m) in b_tick if s < P - 1
+    }
+    for k, t in f_tick.items():
+        assert avail_f[k] <= t, ("fwd before input available", k)
+        if k in avail_b:
+            assert avail_b[k] <= b_tick[k], ("bwd before cotangent", k)
+
+    act_slot, n_act = _alloc_slots(avail_f, b_tick)
+    cot_slot, n_cot = _alloc_slots(avail_b, {k: b_tick[k] for k in avail_b})
+    n_cot = max(n_cot, 1)
+
+    tables = {
+        name: np.full((T, P), -1, np.int32)
+        for name in ("f_mb", "f_slot", "b_mb", "b_slot", "b_cot",
+                     "arr_f", "arr_b")
+    }
+    for (s, m), t in f_tick.items():
+        tables["f_mb"][t, s] = m
+        tables["f_slot"][t, s] = act_slot[(s, m)]
+        if s > 0:
+            ta = avail_f[(s, m)]
+            assert tables["arr_f"][ta, s] == -1, "two fwd arrivals in one tick"
+            tables["arr_f"][ta, s] = act_slot[(s, m)]
+    for (s, m), t in b_tick.items():
+        tables["b_mb"][t, s] = m
+        tables["b_slot"][t, s] = act_slot[(s, m)]
+        if s < P - 1:
+            tables["b_cot"][t, s] = cot_slot[(s, m)]
+            ta = avail_b[(s, m)]
+            assert tables["arr_b"][ta, s] == -1, "two bwd arrivals in one tick"
+            tables["arr_b"][ta, s] = cot_slot[(s, m)]
+    return TickTable(
+        schedule=schedule, n_stages=P, n_microbatches=M, n_ticks=T,
+        n_act_slots=n_act, n_cot_slots=n_cot, **tables,
+    )
+
+
+def pipeline_grads(
+    first_fn: Callable,
+    stage_fn: Callable,
+    last_fn: Callable,
+    stage_params: Any,
+    shared_params: Any,
+    microbatches: Any,
+    *,
+    mesh,
+    table: TickTable,
+    x_struct,
+    metrics_struct: Any,
+    stage_specs: Any,
+    mb_specs: Any,
+    seed=None,
+    axis: str = "pipe",
+    data_axis: Optional[str] = None,
+):
+    """Run one pipelined forward+backward; returns (loss, metrics, grads).
+
+    The schedule in ``table`` is executed tick-by-tick inside a fully-manual
+    ``shard_map`` over ``mesh``; the backward is computed by this runner
+    (``jax.vjp`` per microbatch, recomputing the stage forward from the
+    stored stage input — per-stage remat by construction), NOT by AD through
+    the scan, so live state is exactly the table's slot buffers.
+
+    Callables (all executed per device, per microbatch):
+      first_fn(shared, mb)    -> x            stage-0 input (e.g. embedding)
+      stage_fn(stage_p, x)    -> (y, aux)     this stage's layers; ``aux`` is
+                                              a scalar loss term (router aux)
+                                              seeded on EVERY stage
+      last_fn(shared, y, mb)  -> (loss, metrics)  head + loss on stage P-1
+
+    ``stage_params`` is the canonical stacked-layer tree whose leading layer
+    axis is sharded over ``axis`` per ``stage_specs`` (each device sees its
+    stage's layer slice); ``shared_params`` (embedding/head/final norm) are
+    replicated over ``axis`` — their grads are psum'd over it, which also
+    resolves tied embeddings used at both ends. ``microbatches`` leaves are
+    (M, B, ...) with specs ``mb_specs`` (batch dim over ``data_axis``).
+    ``x_struct`` is the per-device inter-stage activation
+    ShapeDtypeStruct; ``seed`` the loss cotangent (loss scaling /
+    microbatch normalization — caller bakes in 1/(M*dp)).
+
+    Mesh-collective safety: the per-tick op branches contain collectives
+    over the ``model`` axis only (manual tensor parallelism inside
+    ``stage_fn``). All devices sharing a pipe coordinate run the SAME branch
+    every tick (tables depend only on (tick, stage)), so model-axis groups
+    never diverge across a collective. ``ppermute`` transfers sit outside
+    the branches and run every tick.
+
+    Returns (loss_sum, metrics_sums, stage_grads, shared_grads) as global
+    arrays: loss/metrics are summed over microbatches and data shards
+    (caller normalizes by M*dp); grads are psum'd over ``data_axis`` (and
+    ``axis`` for shared) but NOT over model — model-sharded leaves carry
+    distinct shards, replicated leaves identical values.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as Pspec
+
+    from repro.compat import shard_map
+
+    P_count = table.n_stages
+    assert mesh.shape[axis] == P_count, (mesh.shape, P_count)
+    fwd_perm = [(i, (i + 1) % P_count) for i in range(P_count)]
+    bwd_perm = [(i, (i - 1) % P_count) for i in range(P_count)]
+    Wa, Wc = table.n_act_slots, table.n_cot_slots
+    rows = {
+        k: jnp.asarray(getattr(table, k))
+        for k in ("f_mb", "f_slot", "b_mb", "b_slot", "b_cot", "arr_f", "arr_b")
+    }
+    zero_metrics = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), metrics_struct
+    )
+    if seed is None:
+        seed = jnp.ones((), jnp.float32)
+
+    def inner(sid, sp, shared, mbs, seed_):
+        stage = sid[0]
+        is_first = stage == 0
+        is_last = stage == P_count - 1
+        x_zero = jnp.zeros(x_struct.shape, x_struct.dtype)
+
+        def mb_slice(m):
+            return jax.tree.map(lambda a: a[m], mbs)
+
+        def full_fn(sp_, sh_, xs_, m):
+            mb = mb_slice(m)
+            x = jax.lax.cond(
+                is_first,
+                lambda: first_fn(sh_, mb).astype(x_struct.dtype),
+                lambda: xs_,
+            )
+            y, aux = stage_fn(sp_, x)
+            tail, metrics = jax.lax.cond(
+                is_last,
+                lambda: last_fn(sh_, y, mb),
+                lambda: (jnp.zeros((), jnp.float32), zero_metrics),
+            )
+            return (y, aux.astype(jnp.float32) + tail), metrics
+
+        def tick(carry, row):
+            act, cot, gacc, sacc, lacc, macc, fwd_in, bwd_in = carry
+            g = {k: row[k][stage] for k in rows}
+            # arrivals land before this tick's op reads the buffers
+            act = act.at[jnp.where(g["arr_f"] >= 0, g["arr_f"], Wa)].set(fwd_in)
+            cot = cot.at[jnp.where(g["arr_b"] >= 0, g["arr_b"], Wc)].set(bwd_in)
+            opk = jnp.where(g["f_mb"] >= 0, 1, jnp.where(g["b_mb"] >= 0, 2, 0))
+
+            def idle_op(act, cot, gacc, sacc, lacc, macc):
+                return act, cot, gacc, sacc, lacc, macc, x_zero, x_zero
+
+            def f_op(act, cot, gacc, sacc, lacc, macc):
+                m = g["f_mb"]
+                slot = jnp.where(g["f_slot"] >= 0, g["f_slot"], Wa)
+                x_in = jax.lax.cond(
+                    is_first,
+                    lambda: first_fn(shared, mb_slice(m)).astype(x_struct.dtype),
+                    lambda: act[slot],
+                )
+                y, _ = stage_fn(sp, x_in)
+                act = act.at[slot].set(x_in)
+                return act, cot, gacc, sacc, lacc, macc, y, x_zero
+
+            def b_op(act, cot, gacc, sacc, lacc, macc):
+                m = g["b_mb"]
+                x_saved = act[jnp.where(g["b_slot"] >= 0, g["b_slot"], Wa)]
+                cot_in = cot[jnp.where(g["b_cot"] >= 0, g["b_cot"], Wc)]
+                (y, loss), vjp_fn, metrics = jax.vjp(
+                    lambda sp_, sh_, xs_: full_fn(sp_, sh_, xs_, m),
+                    sp, shared, x_saved, has_aux=True,
+                )
+                y_cot = jnp.where(is_last, jnp.zeros_like(y), cot_in)
+                d_sp, d_sh, dx = vjp_fn((y_cot, seed_))
+                gacc = jax.tree.map(jnp.add, gacc, d_sp)
+                sacc = jax.tree.map(jnp.add, sacc, d_sh)
+                macc = jax.tree.map(jnp.add, macc, metrics)
+                return act, cot, gacc, sacc, lacc + loss, macc, x_zero, dx
+
+            act, cot, gacc, sacc, lacc, macc, y_send, dx_send = jax.lax.switch(
+                opk, (idle_op, f_op, b_op), act, cot, gacc, sacc, lacc, macc
+            )
+            fwd_nxt = jax.lax.ppermute(y_send, axis, fwd_perm)
+            bwd_nxt = jax.lax.ppermute(dx_send, axis, bwd_perm)
+            return (act, cot, gacc, sacc, lacc, macc, fwd_nxt, bwd_nxt), None
+
+        zeros_like_tree = lambda t: jax.tree.map(
+            lambda a: jnp.zeros(a.shape, a.dtype), t
+        )
+        carry0 = (
+            jnp.zeros((Wa + 1,) + x_struct.shape, x_struct.dtype),
+            jnp.zeros((Wc + 1,) + x_struct.shape, x_struct.dtype),
+            zeros_like_tree(sp),
+            zeros_like_tree(shared),
+            jnp.zeros((), jnp.float32),
+            zero_metrics,
+            x_zero,
+            x_zero,
+        )
+        carry, _ = jax.lax.scan(tick, carry0, rows)
+        _, _, gacc, sacc, lacc, macc, _, _ = carry
+
+        red = (axis,) + ((data_axis,) if data_axis else ())
+        sacc = jax.tree.map(lambda a: jax.lax.psum(a, red), sacc)
+        lacc = jax.lax.psum(lacc, red)
+        macc = jax.tree.map(lambda a: jax.lax.psum(a, red), macc)
+        if data_axis:
+            gacc = jax.tree.map(lambda a: jax.lax.psum(a, data_axis), gacc)
+        return lacc, macc, gacc, sacc
+
+    repl = lambda t: jax.tree.map(lambda _: Pspec(), t)
+    sid = jnp.arange(P_count, dtype=jnp.int32)
+    fn = shard_map(
+        inner,
+        mesh=mesh,
+        in_specs=(Pspec(axis), stage_specs, repl(shared_params), mb_specs,
+                  Pspec()),
+        out_specs=(Pspec(), repl(metrics_struct), stage_specs,
+                   repl(shared_params)),
+        check_vma=False,
+    )
+    return fn(sid, stage_params, shared_params, microbatches, seed)

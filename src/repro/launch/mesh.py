@@ -26,6 +26,24 @@ def make_test_mesh(data: int = 2, model: int = 2):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_train_mesh(data: int = 1, model: int = 1, pipe: int = 1):
+    """3D training mesh (data, model, pipe) for the executable pipeline.
+
+    ``pipe`` spans the 1F1B/GPipe stages (slowest-varying so stage
+    neighbours sit on contiguous device spans), ``model`` the Megatron TP
+    shards within each stage, ``data`` the ZeRO/data-parallel replicas.
+    With pipe=1 this degenerates to the classic (data, model) layout plus a
+    size-1 axis, so one code path serves 1D/2D/3D runs.
+    """
+    n = len(jax.devices())
+    if data * model * pipe > n:
+        raise ValueError(
+            f"mesh {data}x{model}x{pipe} needs {data * model * pipe} "
+            f"devices, have {n}"
+        )
+    return jax.make_mesh((data, model, pipe), ("data", "model", "pipe"))
+
+
 def make_serve_mesh(data: int = 1, model: int = 1):
     """Serving mesh: `model` shards one engine (TP), `data` counts replicas.
 

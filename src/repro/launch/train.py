@@ -3,11 +3,17 @@
 ``build_train`` / ``build_prefill`` / ``build_decode`` return
 (step_fn_jitted, input ShapeDtypeStructs with shardings attached) — used by
 the multi-pod dry-run (lower+compile only) and by the real trainer entry
-point (``main``) on whatever devices exist.
+point (``main``) on whatever devices exist. ``build_train_pipeline`` is the
+3D sibling: it executes a ``core.partitioner.ParallelPlan`` — an
+(data, model, pipe) mesh whose pipe axis streams the executable 1F1B/GPipe
+schedule (repro.core.pipeline tick tables) while TP follows the same
+Megatron specs sliced per stage and ZeRO overlays shard optimizer state
+over ``data`` within each stage.
 
 Sharding recipe (DESIGN.md §4):
   batch        over ("pod", "data")        [whichever axes divide it]
-  params       TP over "model" (sharding/specs.py) + ZeRO-3 adds "data"
+  params       TP over "model" (sharding/specs.py) + ZeRO-3 adds "data";
+               stacked layer params add "pipe" on the layer axis (3D mesh)
   grads        ZeRO-2+ adds "data"
   opt state    ZeRO-1+ adds "data"
   kv caches    kv-heads over "model", else sequence-parallel over "model"
@@ -145,6 +151,118 @@ def build_train(
     )
 
 
+def make_pipeline_step(cfg: ArchConfig, mesh, plan, tc: TrainConfig, opt):
+    """Unjitted (state, batch) -> (state, metrics) executing ``plan``.
+
+    The gradient computation runs through the manual-backward pipeline
+    runner (repro.core.pipeline.pipeline_grads): the batch splits into
+    ``plan.microbatches`` microbatches, the stacked layer params are already
+    pipe-sharded by ``sharding.specs.param_specs`` (stage slices land on
+    their devices with no relayout), shared params ride in replicated, and
+    the returned grads re-enter the standard step tail
+    (``train.loop.finish_step``: unscale, clip, ZeRO-sharded optimizer
+    update). State layout is IDENTICAL to the 2D trainer's — only shardings
+    differ — which is what makes checkpoint reshard-on-load trivial
+    (checkpoint.ckpt.restore_resharded).
+    """
+    from repro.core.pipeline import tick_table
+    from repro.core.precision import PrecisionPolicy
+    from repro.models.lm import pipeline_fns
+    from repro.train.loop import finish_step
+
+    plan.validate(cfg)
+    if tc.compression is not None:
+        raise ValueError("pipeline mode composes with ZeRO, not compressed DP")
+    if tc.fused_backward:
+        raise ValueError(
+            "pipeline mode does not route the fused Pallas backward / "
+            "chunked-CE head (the runner owns the backward); drop "
+            "fused_backward"
+        )
+    policy = getattr(PrecisionPolicy, tc.precision)()
+    rt = RuntimeT(dtype=policy.compute_dtype, remat=plan.remat)
+    table = tick_table(plan.schedule, plan.pp, plan.microbatches)
+    first_fn, stage_fn, last_fn = pipeline_fns(cfg, rt, plan.tp)
+    M = plan.microbatches
+    dp_full = mesh.shape["data"]
+
+    from repro.core.pipeline import pipeline_grads
+
+    def step(state, batch):
+        params = state["params"]
+        stack = params["stack"]
+        shared = {k: v for k, v in params.items() if k != "stack"}
+        B, seq = batch["tokens"].shape
+        assert B % M == 0, f"batch {B} not divisible into {M} microbatches"
+        mbs = jax.tree.map(
+            lambda a: a.reshape((M, B // M) + a.shape[1:]), batch
+        )
+        mb_specs = S.microbatch_specs(mbs, mesh, B // M)
+        ba = S.batch_axes(mesh, B // M)
+        b_local = (B // M) // S._size(mesh, ba)
+        x_struct = jax.ShapeDtypeStruct((b_local, seq, cfg.d_model), rt.dtype)
+        metrics_struct = {
+            "xent": jax.ShapeDtypeStruct((), jnp.float32),
+            "z_loss": jax.ShapeDtypeStruct((), jnp.float32),
+        }
+        stage_specs = S.param_specs(cfg, params, mesh)["stack"]
+        norm = M * dp_full
+        seed = state["scale"]["scale"] / norm
+        loss_sum, msum, stack_g, shared_g = pipeline_grads(
+            first_fn, stage_fn, last_fn, stack, shared, mbs,
+            mesh=mesh, table=table, x_struct=x_struct,
+            metrics_struct=metrics_struct, stage_specs=stage_specs,
+            mb_specs=mb_specs, seed=seed, data_axis="data",
+        )
+        grads = dict(shared_g, stack=stack_g)
+        loss = loss_sum / norm
+        xent = msum["xent"] / norm
+        zl = msum["z_loss"] / norm
+        aux = (
+            (loss - xent - zl) / cfg.router_aux_coef
+            if cfg.router_aux_coef else jnp.zeros((), jnp.float32)
+        )
+        metrics = {"loss": loss, "xent": xent, "z_loss": zl, "aux": aux}
+        return finish_step(state, grads, metrics, tc, policy, opt)
+
+    return step
+
+
+def build_train_pipeline(
+    arch: str, mesh, plan, tc: Optional[TrainConfig] = None,
+    shape: Optional[ShapeSpec] = None,
+) -> Tuple[Callable, Tuple[Any, Any]]:
+    """3D pipelined twin of ``build_train``: same state/batch structs and
+    sharding plumbing, step from ``make_pipeline_step``. ``mesh`` must carry
+    (data, model, pipe) axes matching ``plan``'s degrees."""
+    cfg = get_config(arch)
+    tc = tc or TrainConfig(precision="bf16")
+    shape = shape or get_shape("train_4k")
+    for ax, deg in (("data", plan.dp), ("model", plan.tp), ("pipe", plan.pp)):
+        if mesh.shape.get(ax) != deg:
+            raise ValueError(f"mesh {dict(mesh.shape)} != plan {plan.describe()}")
+    opt = get_opt(tc.optimizer, tc.lr)
+
+    state_struct = jax.eval_shape(lambda: make_state(cfg, opt, tc))
+    batch_struct = _batch_struct(cfg, shape)
+
+    sspecs = state_specs(cfg, state_struct, mesh, tc.zero_stage)
+    bspecs = S.batch_specs(batch_struct, mesh, shape.global_batch)
+    s_shard, b_shard = _ns(mesh, sspecs), _ns(mesh, bspecs)
+
+    step = make_pipeline_step(cfg, mesh, plan, tc, opt)
+    jitted = jax.jit(
+        step,
+        in_shardings=(s_shard, b_shard),
+        out_shardings=(s_shard, _ns(mesh, METRIC_SPECS)),
+        donate_argnums=(0,),
+    )
+    return jitted, (
+        _struct_with(s_shard, state_struct),
+        _struct_with(b_shard, batch_struct),
+    )
+
+
 def _params_struct_and_shard(cfg: ArchConfig, mesh, zero3: bool = False):
     from repro.models import init_params
 
@@ -186,10 +304,15 @@ def main() -> None:
         PYTHONPATH=src python -m repro.launch.train --arch granite-8b \
             --reduced --steps 20 --batch 16 --seq 128 --zero 2
 
-    Builds the pjit step via build_train on a (data x model) mesh spanning
-    the local devices (multi-host wiring: set jax.distributed + per-host
-    DataPipeline shard, see repro.data). ``--reduced`` instantiates the
-    smoke-size family variant so the driver runs on CPU containers.
+    2D (default): pjit step via build_train on a (data x model) mesh.
+    3D pipelined: ``--pipe P --microbatches M --schedule {gpipe,1f1b}``
+    executes the plan through build_train_pipeline on a
+    (data, model, pipe) mesh; ``--plan auto`` instead runs
+    ``core.partitioner.dp_pp_search`` over the real device count (at the
+    given ``--tp``) and executes the winning (dp, pp) split. Multi-host
+    wiring: set jax.distributed + per-host DataPipeline shard (repro.data).
+    ``--reduced`` instantiates the smoke-size family variant so the driver
+    runs on CPU containers.
     """
     import argparse
 
@@ -197,7 +320,9 @@ def main() -> None:
 
     from repro.configs import ASSIGNED, get_reduced
     import repro.configs.registry as registry
+    from repro.core.partitioner import ParallelPlan, auto_plan
     from repro.data import DataPipeline
+    from repro.launch.mesh import make_train_mesh
     from repro.optim import get as get_opt
     from repro.train import make_state
 
@@ -212,25 +337,107 @@ def main() -> None:
     ap.add_argument("--remat", default="none")
     ap.add_argument("--fused-backward", action="store_true",
                     help="fused Pallas backwards + chunked-CE head")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="model-axis size (0 = auto: largest of 4/2/1 that "
+                         "divides the devices — and, in pipeline mode, that "
+                         "the arch supports under manual TP)")
+    ap.add_argument("--pipe", type=int, default=1,
+                    help="pipeline stages; > 1 selects the 3D trainer")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="microbatches per step (default 2*pipe)")
+    ap.add_argument("--schedule", default="1f1b", choices=("1f1b", "gpipe"))
+    ap.add_argument("--plan", default="", choices=("", "auto"),
+                    help="'auto': dp_pp_search picks (dp, pp) for the "
+                         "device count")
     args = ap.parse_args()
 
     n = len(jax.devices())
-    model_ax = 1
-    for cand in (4, 2, 1):
-        if n % cand == 0 and cand <= n:
-            model_ax = cand
-            break
-    mesh = jax.make_mesh((n // model_ax, model_ax), ("data", "model"))
-    print(f"devices={n} mesh=({n//model_ax} data x {model_ax} model)")
-
     cfg = get_reduced(args.arch) if args.reduced else None
     assert cfg is not None, "--full training requires a TPU fleet"
     registry.ARCHITECTURES[cfg.name] = cfg
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+
+    def tp_auto(budget: int) -> int:
+        """Largest of 4/2/1 that divides the budget AND that the arch can
+        actually run under manual pipeline TP (head divisibility etc.)."""
+        from repro.models.stack import pipeline_incompatibility
+
+        for cand in (4, 2, 1):
+            if budget % cand == 0 and pipeline_incompatibility(cfg, cand) is None:
+                return cand
+        return 1
+
+    plan = None
+    if args.plan == "auto":
+        if args.pipe > 1:
+            raise SystemExit(
+                "--plan auto searches (dp, pp) itself; drop --pipe (or set "
+                "--pipe without --plan to fix the degrees by hand)"
+            )
+        tp = args.tp or tp_auto(n)
+        # microbatch count is a free knob: if the requested (or default)
+        # count leaves no feasible (dp, pp) under the batch cap
+        # dp <= batch/M — or a plan the batch can't divide into — halve it
+        mb = args.microbatches or 8
+        while plan is None:
+            try:
+                plan = auto_plan(
+                    cfg, n, microbatches=mb, tp=tp,
+                    schedule=args.schedule, remat=args.remat,
+                    max_dp=max(args.batch // mb, 1),
+                )
+            except AssertionError:
+                plan = None
+            if plan is not None and args.batch % (mb * plan.dp):
+                plan = None
+            if plan is None:
+                if mb == 1:
+                    raise SystemExit(
+                        f"no feasible plan for {n} devices at batch "
+                        f"{args.batch} (try a larger --batch)"
+                    )
+                mb //= 2
+    elif args.pipe > 1:
+        tp = args.tp or tp_auto(n // args.pipe)
+        if n % (tp * args.pipe):
+            raise SystemExit(
+                f"{n} devices don't factor into tp={tp} x pipe={args.pipe}"
+            )
+        plan = ParallelPlan(
+            dp=n // (tp * args.pipe), tp=tp, pp=args.pipe,
+            microbatches=args.microbatches or 2 * args.pipe,
+            schedule=args.schedule, remat=args.remat,
+        ).validate(cfg)
+
     tc = TrainConfig(precision=args.precision, remat=args.remat,
                      zero_stage=args.zero,
-                     fused_backward=args.fused_backward)
-    shape = ShapeSpec("cli", args.seq, args.batch, "train")
-    jitted, (s_struct, b_struct) = build_train(cfg.name, mesh, tc, shape)
+                     fused_backward=args.fused_backward,
+                     pipe=plan.pp if plan else 1,
+                     schedule=args.schedule,
+                     microbatches=plan.microbatches if plan else 1)
+
+    if plan is not None:
+        if args.batch % (plan.microbatches * plan.dp):
+            raise SystemExit(
+                f"--batch {args.batch} must divide into "
+                f"microbatches*dp = {plan.microbatches}x{plan.dp}"
+            )
+        mesh = make_train_mesh(plan.dp, plan.tp, plan.pp)
+        print(f"devices={n} mesh=({plan.dp} data x {plan.tp} model x "
+              f"{plan.pp} pipe) plan: {plan.describe()}")
+        jitted, (s_struct, b_struct) = build_train_pipeline(
+            cfg.name, mesh, plan, tc, shape
+        )
+    else:
+        model_ax = args.tp or 1
+        if not args.tp:
+            for cand in (4, 2, 1):
+                if n % cand == 0 and cand <= n:
+                    model_ax = cand
+                    break
+        mesh = jax.make_mesh((n // model_ax, model_ax), ("data", "model"))
+        print(f"devices={n} mesh=({n//model_ax} data x {model_ax} model)")
+        jitted, (s_struct, b_struct) = build_train(cfg.name, mesh, tc, shape)
 
     state = make_state(cfg, get_opt(tc.optimizer, tc.lr), tc)
     state = jax.tree.map(

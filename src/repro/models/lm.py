@@ -127,12 +127,32 @@ def forward(
     return logits, aux
 
 
+Z_LOSS_DEFAULT = 1e-4
+
+
+def masked_token_ce(
+    ll: jax.Array, logz: jax.Array, labels: jax.Array,
+    z_loss: float = Z_LOSS_DEFAULT,
+) -> Tuple[jax.Array, jax.Array]:
+    """(xent, z_loss) from per-token (label log-lik, logZ); labels -1 masked.
+
+    The one definition of the token loss — shared by ``loss_fn`` (dense and
+    chunked-CE heads) and the pipeline trainer's last stage, so the 2D and
+    3D paths cannot drift apart.
+    """
+    mask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    xent = -(ll * mask).sum() / denom
+    zl = z_loss * ((logz**2) * mask).sum() / denom
+    return xent, zl
+
+
 def loss_fn(
     cfg: ArchConfig,
     params: Params,
     batch: Dict[str, jax.Array],
     rt: Runtime,
-    z_loss: float = 1e-4,
+    z_loss: float = Z_LOSS_DEFAULT,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Next-token cross entropy (+ router aux + z-loss). labels -1 are masked.
 
@@ -145,7 +165,6 @@ def loss_fn(
     if cfg.frontend == "vision":  # image prefix positions carry no loss
         n_prefix = batch["frontend_embeds"].shape[1]
         h = h[:, n_prefix:]
-    mask = (labels >= 0).astype(jnp.float32)
     safe = jnp.maximum(labels, 0)
     if rt.fused_backward:
         from repro.kernels.chunked_ce import chunked_ce
@@ -163,12 +182,67 @@ def loss_fn(
         )
         logz = jax.nn.logsumexp(logits, axis=-1)
         ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0] - logz
-    denom = jnp.maximum(mask.sum(), 1.0)
-    xent = -(ll * mask).sum() / denom
-    zl = z_loss * ((logz**2) * mask).sum() / denom
+    xent, zl = masked_token_ce(ll, logz, labels, z_loss)
     total = xent + zl + cfg.router_aux_coef * aux
     metrics = {"loss": total, "xent": xent, "aux": aux, "z_loss": zl}
     return total, metrics
+
+
+# ------------------------------------------------------------- 3D training
+def pipeline_fns(cfg: ArchConfig, rt: Runtime, tp: int = 1):
+    """(first_fn, stage_fn, last_fn) for ``repro.core.pipeline.pipeline_grads``.
+
+    Splits the training forward at the plan's stage boundaries: stage 0
+    embeds (first_fn), every stage applies its layer slice via the manual-TP
+    ``stack_stage_apply`` (stage_fn — returns the router-aux loss term so
+    MoE aux gradients flow from every stage), and the last stage runs final
+    norm + head + masked cross-entropy with z-loss (last_fn), numerically
+    identical to ``loss_fn``'s dense path per microbatch. Shared params
+    (embed / final_norm / head) are replicated over the pipe axis; tied
+    embeddings get their two contributions summed by the runner's psum.
+
+    Loss normalization caveat: the step loss is the uniform mean of
+    per-(microbatch, data-shard) masked means. With -1-masked labels whose
+    valid-token counts differ across microbatches this weights microbatches
+    equally rather than tokens (the microbatched-training standard; a
+    global token mean would need the total valid count before any backward
+    seeds, i.e. a second pass). Identical across schedules either way — it
+    only differs from the 2D single-mean trainer on unevenly-masked
+    batches.
+    """
+    from repro.models.stack import (
+        pipeline_incompatibility, stack_stage_apply, stage_layer_params,
+    )
+
+    why = pipeline_incompatibility(cfg, tp)
+    if why is not None:
+        raise ValueError(f"{cfg.name}: {why}")
+    kind = cfg.pattern[0]
+    window = cfg.sliding_window if kind == "local" else 0
+    spec = LayerSpec(kind, window, 0)
+
+    def first_fn(shared: Params, mb: Dict[str, jax.Array]) -> jax.Array:
+        return embed_apply(shared["embed"], mb["tokens"], rt.dtype)
+
+    def stage_fn(sp: Params, x: jax.Array):
+        y, aux = stack_stage_apply(
+            cfg, stage_layer_params(sp), x, rt, spec, tp=tp
+        )
+        return y, cfg.router_aux_coef * aux
+
+    def last_fn(shared: Params, y: jax.Array, mb: Dict[str, jax.Array]):
+        h = norm_apply(shared["final_norm"], y, cfg.norm)
+        logits = logits_apply(
+            shared.get("head"), shared["embed"], h, cfg.tie_embeddings
+        )
+        labels = mb["labels"]
+        safe = jnp.maximum(labels, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0] - logz
+        xent, zl = masked_token_ce(ll, logz, labels)
+        return xent + zl, {"xent": xent, "z_loss": zl}
+
+    return first_fn, stage_fn, last_fn
 
 
 # ------------------------------------------------------------------- serving

@@ -14,10 +14,17 @@ Parameters are stored grouped by the *param pattern* (mixer kinds modulo
 attn==local, which share parameters); at apply time they are re-grouped to
 the *runtime pattern* (which also fixes windows/cache sizes) by strided
 slicing — a pure-layout transform.
+
+For 3D pipelined training, ``stack_stage_apply`` applies one pipeline
+stage's contiguous layer slice of a homogeneous stack (the canonical
+stacked layout sharded over ``pipe`` IS the stage split) with manual
+Megatron tensor parallelism (``tp_region_start/end``); see the
+"pipeline stage apply" section below and repro.core.pipeline.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
@@ -710,6 +717,184 @@ def stack_decode(
         new_caches.append(new_seg_cache)
 
     return x, new_caches
+
+
+# ------------------------------------------------- pipeline stage apply
+# Megatron's f/g operators as explicit custom-vjp pairs, for MANUAL tensor
+# parallelism inside the fully-manual pipeline shard_map (where XLA's auto
+# SPMD is unavailable). A TP region runs on per-device parameter shards
+# between the two markers; activations outside the region are replicated
+# over the model axis:
+#
+#   tp_region_start ("f"): identity forward, psum backward — the replicated
+#       activation fans out to tp shard-local computations, so its cotangent
+#       is the SUM of the per-shard partials.
+#   tp_region_end ("g"): psum forward, identity backward — shard-local
+#       partial outputs (row-parallel wo / w_down) combine to the replicated
+#       value; the replicated cotangent passes through to every shard.
+#
+# Skip-connection paths never enter a region, so their cotangents are
+# counted exactly once — the invariant that makes per-layer "psum at the
+# end" schemes wrong and this pairing right.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _tp_start(axis_name, x):
+    return x
+
+
+def _tp_start_fwd(axis_name, x):
+    return x, None
+
+
+def _tp_start_bwd(axis_name, _, ct):
+    return (jax.lax.psum(ct, axis_name),)
+
+
+_tp_start.defvjp(_tp_start_fwd, _tp_start_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _tp_end(axis_name, x):
+    return jax.lax.psum(x, axis_name)
+
+
+def _tp_end_fwd(axis_name, x):
+    return jax.lax.psum(x, axis_name), None
+
+
+def _tp_end_bwd(axis_name, _, ct):
+    return (ct,)
+
+
+_tp_end.defvjp(_tp_end_fwd, _tp_end_bwd)
+
+
+def tp_region_start(x: jax.Array, axis_name: str = "model") -> jax.Array:
+    return _tp_start(axis_name, x)
+
+
+def tp_region_end(x: jax.Array, axis_name: str = "model") -> jax.Array:
+    return _tp_end(axis_name, x)
+
+
+def pipeline_incompatibility(cfg: ArchConfig, tp: int = 1) -> Optional[str]:
+    """Why ``cfg`` cannot run the executable pipeline path (None = it can).
+
+    The 1F1B/GPipe runner slices the layer stack at plan boundaries, which
+    requires homogeneous param storage (one param group, single-kind
+    pattern) and — for tp > 1 — Megatron-divisible attention/dense shapes
+    (the manual-TP stage body computes on true shards; the auto-SPMD paths'
+    silent replication fallback has no manual equivalent).
+    """
+    groups = param_groups(cfg)
+    if len(groups) != 1 or len(groups[0][0]) != 1:
+        return "patterned parameter storage (multi-kind layer unit)"
+    if len(set(cfg.pattern)) != 1:
+        return "mixed mixer kinds in the layer pattern"
+    if cfg.is_encdec or cfg.frontend is not None:
+        return "encoder-decoder / frontend architectures"
+    if tp > 1:
+        kind = param_kind(cfg.pattern[0])
+        if kind != "attn":
+            return f"tensor parallelism over {kind!r} mixers (attention only)"
+        if cfg.n_heads % tp or cfg.n_kv_heads % tp:
+            return (
+                f"heads ({cfg.n_heads}/{cfg.n_kv_heads}) not divisible by tp={tp}"
+            )
+        if cfg.ffn_kind == "dense" and cfg.d_ff % tp:
+            return f"d_ff={cfg.d_ff} not divisible by tp={tp}"
+        if cfg.ffn_kind == "moe":
+            return "MoE with tp > 1 (expert parallelism stays on the 2D path)"
+    return None
+
+
+def stage_layer_params(stack: Params) -> Params:
+    """Per-layer param tree of a homogeneous stack ({'g0': {'p0': ...}})."""
+    assert set(stack) == {"g0"} and set(stack["g0"]) == {"p0"}, (
+        "pipeline stages require homogeneous param storage"
+    )
+    return stack["g0"]["p0"]
+
+
+def stack_stage_apply(
+    cfg: ArchConfig,
+    layers: Params,
+    x: jax.Array,
+    rt: Runtime,
+    spec: LayerSpec,
+    *,
+    tp: int = 1,
+    tp_axis: str = "model",
+) -> Tuple[jax.Array, jax.Array]:
+    """Apply one pipeline stage's contiguous layer slice. Returns (y, aux).
+
+    Runs inside the fully-manual pipeline ``shard_map``: ``layers`` leaves
+    are the LOCAL (layers_per_stage, tp-shard) slices of the canonical
+    stacked params. Tensor parallelism is manual Megatron — shard-local
+    attention heads / MLP columns bracketed by tp_region_start/end (see
+    above); the residual stream stays replicated over ``tp_axis``. The
+    stage's remat policy (``rt.remat``, from the ParallelPlan) wraps each
+    layer; the pipeline runner additionally recomputes the whole stage
+    forward from its stored input during backward, so a stage's live
+    activations never outlast its tick.
+
+    ``block`` below deliberately mirrors the manual-TP subset of
+    ``_mixer_apply``/``_ffn_apply`` (attention + dense/MoE FFN, no caches,
+    no fused-kernel routing, no shard_map-based EP — those assume auto-SPMD
+    and cannot run in this manual context; make_pipeline_step rejects the
+    corresponding TrainConfig flags loudly). A structural change to the
+    canonical block must be mirrored here — tests/test_train_3d.py's
+    losses-match-single-device check is the tripwire.
+    """
+    from repro.core.remat import policy_for
+
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.tile(jnp.arange(S, dtype=jnp.int32)[None, :], (B, 1))
+
+    def block(h, p):
+        hn = norm_apply(p["norm1"], h, cfg.norm)
+        if spec.kind in ("attn", "local"):
+            if tp > 1:
+                hn = tp_region_start(hn, tp_axis)
+            out, _ = attn_mod.attention_apply(
+                p["mixer"], hn,
+                n_heads=cfg.n_heads // tp, n_kv=cfg.n_kv_heads // tp,
+                head_dim=cfg.head_dim, theta=cfg.rope_theta,
+                window=spec.window, positions=positions, chunk_q=rt.chunk_q,
+            )
+            if tp > 1:
+                out = tp_region_end(out, tp_axis)
+        elif spec.kind == "mamba":
+            assert tp == 1, "mamba stages run at tp=1 (see pipeline_incompatibility)"
+            out = ssm_mod.mamba_apply(
+                p["mixer"], hn, scan_mode=rt.scan_mode, chunk=rt.ssm_chunk
+            )
+        else:
+            assert tp == 1, "rglru stages run at tp=1"
+            out = rglru_mod.rglru_apply(p["mixer"], hn)
+        h = h + out
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.ffn_kind != "none":
+            h2 = norm_apply(p["norm2"], h, cfg.norm)
+            if cfg.ffn_kind == "dense":
+                if tp > 1:
+                    h2 = tp_region_start(h2, tp_axis)
+                o = mlp_apply(p["ffn"], h2, cfg.mlp_gated)
+                if tp > 1:
+                    o = tp_region_end(o, tp_axis)
+            else:
+                o, aux = moe_mod.moe_apply(
+                    p["ffn"], h2, top_k=cfg.experts_top_k,
+                    capacity_factor=cfg.capacity_factor, gated=cfg.mlp_gated,
+                )
+                if "extra_mlp" in p:
+                    o = o + mlp_apply(p["extra_mlp"], h2, cfg.mlp_gated)
+            h = h + o
+        return h, aux
+
+    pol = policy_for(rt.remat)
+    body = block if pol is None else pol(block)
+    y, auxs = jax.lax.scan(body, x, layers)
+    return y, jnp.sum(auxs)
 
 
 def _cross_decode(cfg: ArchConfig, p: Params, x: jax.Array, ck, cv):

@@ -90,15 +90,31 @@ def leaf_param_spec(
 
 
 def param_specs(cfg: ArchConfig, params_shape: Any, mesh) -> Any:
-    """Spec tree for a params(-shaped) pytree."""
+    """Spec tree for a params(-shaped) pytree.
+
+    On a 3D training mesh (one with a ``pipe`` axis), stacked layer params
+    additionally shard their leading layer axis over ``pipe`` — contiguous
+    equal-count stages, exactly the executable ParallelPlan layout: each
+    pipe shard holds its stage's layer slice, TP dims unchanged.
+    """
     tp = mesh.shape["model"] if "model" in mesh.shape else 1
+    pp = mesh.shape["pipe"] if "pipe" in mesh.shape else 1
 
     def one(path, leaf):
         keys = tuple(
             str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
             for p in path
         )
-        return leaf_param_spec(keys, tuple(leaf.shape), cfg, tp)
+        spec = leaf_param_spec(keys, tuple(leaf.shape), cfg, tp)
+        if (
+            pp > 1 and "stack" in keys and leaf.shape
+            and _div(leaf.shape[0], pp)
+        ):
+            dims = list(spec) + [None] * (len(leaf.shape) - len(spec))
+            assert dims[0] is None, (keys, spec)
+            dims[0] = "pipe"
+            spec = P(*dims)
+        return spec
 
     return jax.tree_util.tree_map_with_path(one, params_shape)
 
@@ -124,6 +140,19 @@ def batch_specs(batch_shape: Any, mesh, global_batch: int) -> Any:
         return P(*dims)
 
     return jax.tree.map(one, batch_shape)
+
+
+def microbatch_specs(mb_shape: Any, mesh, mb_batch: int) -> Any:
+    """Specs for microbatched arrays (M, B, ...): leading M replicated,
+    per-microbatch batch dim over the data axes when divisible."""
+    ba = batch_axes(mesh, mb_batch)
+    bspec = tuple(ba) if ba else None
+
+    def one(leaf):
+        dims = [None, bspec] + [None] * (len(leaf.shape) - 2)
+        return P(*dims)
+
+    return jax.tree.map(one, mb_shape)
 
 
 def cache_specs(cfg: ArchConfig, cache_shape: Any, mesh, global_batch: int) -> Any:

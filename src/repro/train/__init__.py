@@ -1,2 +1,8 @@
-from repro.train.loop import TrainConfig, fit, make_state, make_train_step  # noqa: F401
+from repro.train.loop import (  # noqa: F401
+    TrainConfig,
+    finish_step,
+    fit,
+    make_state,
+    make_train_step,
+)
 from repro.train.serve import generate, sample_token  # noqa: F401

@@ -49,6 +49,13 @@ class TrainConfig:
     seq_shard: str = ""               # activation sharding: "" | "seq" | "hidden"
     scan_mode: str = "assoc"          # mamba scan: assoc | chunked
     ssm_seqpar: bool = False          # distributed selective scan over 'model'
+    # 3D pipeline training (repro.launch.train.build_train_pipeline):
+    # pipe > 1 runs the executable 1F1B/GPipe schedule over a `pipe` mesh
+    # axis, streaming `microbatches` per step (the degrees become a
+    # core.partitioner.ParallelPlan).
+    pipe: int = 1                     # pipeline stages (pp degree)
+    microbatches: int = 1             # microbatches per step (pipeline mode)
+    schedule: str = "1f1b"            # executable schedule: 1f1b | gpipe
     log_every: int = 10
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 0
@@ -76,6 +83,62 @@ def _runtime(cfg: ArchConfig, tc: TrainConfig) -> Runtime:
                    use_flash_kernel=tc.fused_backward)
 
 
+def finish_step(
+    state: Dict[str, Any],
+    grads: Any,
+    metrics: Dict[str, jax.Array],
+    tc: TrainConfig,
+    policy,
+    opt: Optimizer,
+    axis_name: Optional[str] = None,
+) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
+    """Shared train-step tail: unscale/check grads, sync (pmean or
+    compressed), clip, optimizer update with the non-finite guard, rebuild
+    state, finalize metrics. Used by ``core_step`` here and by the 3D
+    pipeline step (repro.launch.train), whose grads arrive pre-reduced."""
+    grads, scale_state, finite = unscale_and_check(grads, state["scale"], policy)
+
+    if axis_name is not None and tc.compression is None:
+        grads = jax.tree.map(lambda g: jax.lax.pmean(g, axis_name), grads)
+        comp_state = state["comp"]
+        wire = jnp.asarray(comp_mod.wire_bytes_dense(grads), jnp.float32)
+    elif tc.compression is not None:
+        grads, comp_state, wire = comp_mod.sync(
+            tc.compression, grads, state["comp"], axis_name
+        )
+    else:
+        comp_state = state["comp"]
+        wire = jnp.zeros((), jnp.float32)
+
+    if tc.grad_clip:
+        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    else:
+        gnorm = jnp.zeros((), jnp.float32)
+
+    updates, opt_state = opt.update(grads, state["opt"], state["params"])
+    # skip the update on non-finite grads (fp16 loss-scaling path)
+    new_params = apply_updates(state["params"], updates)
+    new_params = jax.tree.map(
+        lambda n, o: jnp.where(finite, n, o), new_params, state["params"]
+    )
+    opt_state = jax.tree.map(
+        lambda n, o: jnp.where(finite, n, o) if n.shape == o.shape else n,
+        opt_state, state["opt"],
+    )
+    new_state = {
+        "params": new_params,
+        "opt": opt_state,
+        "scale": scale_state,
+        "comp": comp_state,
+        "step": state["step"] + 1,
+    }
+    metrics = dict(metrics, grad_norm=gnorm, wire_bytes=wire,
+                   loss_scale=scale_state["scale"])
+    if axis_name is not None:
+        metrics = {k: jax.lax.pmean(v, axis_name) for k, v in metrics.items()}
+    return new_state, metrics
+
+
 def make_train_step(
     cfg: ArchConfig,
     opt: Optimizer,
@@ -96,47 +159,7 @@ def make_train_step(
         (loss_s, metrics), grads = jax.value_and_grad(scaled_loss, has_aux=True)(
             state["params"]
         )
-        grads, scale_state, finite = unscale_and_check(grads, state["scale"], policy)
-
-        if axis_name is not None and tc.compression is None:
-            grads = jax.tree.map(lambda g: jax.lax.pmean(g, axis_name), grads)
-            comp_state = state["comp"]
-            wire = jnp.asarray(comp_mod.wire_bytes_dense(grads), jnp.float32)
-        elif tc.compression is not None:
-            grads, comp_state, wire = comp_mod.sync(
-                tc.compression, grads, state["comp"], axis_name
-            )
-        else:
-            comp_state = state["comp"]
-            wire = jnp.zeros((), jnp.float32)
-
-        if tc.grad_clip:
-            grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
-        else:
-            gnorm = jnp.zeros((), jnp.float32)
-
-        updates, opt_state = opt.update(grads, state["opt"], state["params"])
-        # skip the update on non-finite grads (fp16 loss-scaling path)
-        new_params = apply_updates(state["params"], updates)
-        new_params = jax.tree.map(
-            lambda n, o: jnp.where(finite, n, o), new_params, state["params"]
-        )
-        opt_state = jax.tree.map(
-            lambda n, o: jnp.where(finite, n, o) if n.shape == o.shape else n,
-            opt_state, state["opt"],
-        )
-        new_state = {
-            "params": new_params,
-            "opt": opt_state,
-            "scale": scale_state,
-            "comp": comp_state,
-            "step": state["step"] + 1,
-        }
-        metrics = dict(metrics, grad_norm=gnorm, wire_bytes=wire,
-                       loss_scale=scale_state["scale"])
-        if axis_name is not None:
-            metrics = {k: jax.lax.pmean(v, axis_name) for k, v in metrics.items()}
-        return new_state, metrics
+        return finish_step(state, grads, metrics, tc, policy, opt, axis_name)
 
     if mode == "single":
         return jax.jit(lambda state, batch: core_step(state, batch, None))

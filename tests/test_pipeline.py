@@ -1,4 +1,5 @@
-"""Pipeline schedules: simulator invariants (Table 4) + executable GPipe."""
+"""Pipeline schedules: simulator invariants (Table 4), executable GPipe,
+tick tables for the manual-backward runner, and ParallelPlan validation."""
 import os
 import subprocess
 import sys
@@ -8,7 +9,7 @@ from _subproc import REPO_ROOT, subprocess_env
 
 import pytest
 
-from repro.core.pipeline import SCHEDULES, simulate
+from repro.core.pipeline import SCHEDULES, simulate, tick_table
 
 
 
@@ -61,6 +62,75 @@ def test_more_microbatches_shrink_bubble():
     b8 = simulate("gpipe", 4, 8).bubble_fraction
     b32 = simulate("gpipe", 4, 32).bubble_fraction
     assert b32 < b8
+
+
+# ---------------------------------------------------------------- tick tables
+@pytest.mark.parametrize("sched", ["gpipe", "1f1b"])
+@pytest.mark.parametrize("P,M", [(2, 4), (2, 8), (4, 4), (4, 16), (3, 5), (1, 4)])
+def test_tick_table_matches_simulator(sched, P, M):
+    """The executable table IS the simulator schedule: same bubble, and the
+    greedy slot allocation reproduces Table 4's peak-activation column."""
+    t = tick_table(sched, P, M)
+    sim = simulate(sched, P, M, t_fwd=1.0, t_bwd=1.0)
+    assert t.bubble_fraction == pytest.approx(sim.bubble_fraction, abs=1e-9)
+    assert t.n_act_slots == sim.peak_activations
+    # every microbatch appears exactly once as F and once as B per stage
+    for s in range(P):
+        assert sorted(m for m in t.f_mb[:, s] if m >= 0) == list(range(M))
+        assert sorted(m for m in t.b_mb[:, s] if m >= 0) == list(range(M))
+
+
+def test_tick_table_1f1b_memory_bound():
+    """1F1B buffers are O(P); GPipe's are O(M) — strict gap at M >= 2P."""
+    for P in (2, 4):
+        M = 2 * P
+        f, g = tick_table("1f1b", P, M), tick_table("gpipe", P, M)
+        assert f.n_act_slots == min(P, M)
+        assert g.n_act_slots == M
+        assert f.peak_activation_bytes(1) < g.peak_activation_bytes(1)
+        # same schedule length -> same bubble, less memory
+        assert f.bubble_fraction == pytest.approx(g.bubble_fraction, abs=1e-9)
+
+
+def test_tick_table_rejects_simulator_only_schedules():
+    with pytest.raises(ValueError):
+        tick_table("pipedream", 4, 8)
+
+
+# --------------------------------------------------------------- ParallelPlan
+def test_parallel_plan_validation():
+    from repro.configs import SURVEY_DEMO, reduced
+    from repro.core.partitioner import ParallelPlan, auto_plan
+
+    cfg = reduced(SURVEY_DEMO, n_layers=4, n_heads=4, n_kv_heads=2, d_ff=256)
+    ParallelPlan(dp=2, tp=2, pp=2, microbatches=4).validate(cfg)
+    with pytest.raises(ValueError):  # async rows are simulator-only
+        ParallelPlan(pp=2, schedule="pipedream").validate(cfg)
+    with pytest.raises(ValueError):  # 4 layers don't split into 3 stages
+        ParallelPlan(pp=3, microbatches=2).validate(cfg)
+    with pytest.raises(ValueError):  # kv heads not divisible by tp
+        ParallelPlan(tp=4, microbatches=2).validate(cfg)
+    with pytest.raises(ValueError):  # MoE composes with EP, not manual TP
+        moe = reduced(SURVEY_DEMO, n_layers=4, n_heads=4, n_kv_heads=2,
+                      d_ff=256, ffn_kind="moe", n_experts=4, experts_top_k=2)
+        ParallelPlan(tp=2, microbatches=2).validate(moe)
+
+
+def test_auto_plan_respects_batch_cap():
+    """With dp capped by the batch, spare devices go to the pipeline."""
+    from repro.configs import SURVEY_DEMO, reduced
+    from repro.core.partitioner import auto_plan
+
+    cfg = reduced(SURVEY_DEMO, n_layers=8, n_heads=4, n_kv_heads=2, d_ff=256)
+    free = auto_plan(cfg, 8, microbatches=4)
+    assert (free.dp, free.pp) == (8, 1)      # perfect-DP model: dp wins
+    capped = auto_plan(cfg, 8, microbatches=4, max_dp=4)
+    assert capped.pp > 1 and capped.dp <= 4
+    assert capped.n_devices == 8
+    # boundaries are uniform (executable constraint)
+    b = capped.stage_boundaries(cfg.n_layers)
+    sizes = {b[i + 1] - b[i] for i in range(len(b) - 1)}
+    assert len(sizes) == 1
 
 
 RUNNER_SCRIPT = textwrap.dedent(
