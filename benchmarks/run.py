@@ -23,6 +23,7 @@ MODULES = [
     "benchmarks.kernels_bench",
     "benchmarks.serve_bench",
     "benchmarks.serve_prefix_bench",
+    "benchmarks.serve_quant_bench",
     "benchmarks.train_pipeline_bench",
     "benchmarks.roofline_report",
 ]

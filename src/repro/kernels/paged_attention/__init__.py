@@ -1,3 +1,4 @@
+from repro.kernels.paged_attention import quant  # noqa: F401
 from repro.kernels.paged_attention.ops import (  # noqa: F401
     paged_attention,
     paged_prefill_attention,

@@ -23,6 +23,13 @@ score tile) attend to the same block-table pages with per-row causal
 masking by absolute position — decode is its T=1 special case. The chunk's
 own KV is written to the pool before the kernel runs, so in-chunk causality
 needs no separate path.
+
+Quantized pools (``kv_dtype`` int8/fp8): per-(page-slot, kv-head) f32
+scales (N, page, Kv) enter as two extra gathered operands whose BlockSpec
+index_map is the same ``tables[b, j]`` page select, so each (page,) scale
+tile is DMA'd alongside its page and the dequant multiply happens on the
+f32 tile right before the score matmul — no dequantized pool is ever
+materialized in HBM (kernels/paged_attention/quant.py has the write side).
 """
 from __future__ import annotations
 
@@ -45,10 +52,13 @@ def _pa_kernel(
     q_ref,        # (1, 1, G, hd)
     k_ref,        # (1, page, 1, hd) — pool page selected by index_map
     v_ref,
-    o_ref,        # (1, 1, G, hd)
-    m_scr, l_scr, acc_scr,
-    *, page: int, n_pages: int, window: int,
+    *rest,        # [ks_ref, vs_ref (1, page, 1) f32,] o_ref, m/l/acc scratch
+    page: int, n_pages: int, window: int, quantized: bool,
 ):
+    if quantized:
+        ks_ref, vs_ref = rest[0], rest[1]
+        rest = rest[2:]
+    o_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -66,6 +76,12 @@ def _pa_kernel(
         q = q_ref[0, 0].astype(jnp.float32)              # (G, hd)
         k = k_ref[0, :, 0].astype(jnp.float32)           # (page, hd)
         v = v_ref[0, :, 0].astype(jnp.float32)
+        if quantized:
+            # fused in-gather dequant: the per-(slot, head) scale tile rides
+            # the same block-table index_map as its page, so score tiles
+            # compute in f32 with no materialized dequantized pool
+            k = k * ks_ref[0, :, 0][:, None]
+            v = v * vs_ref[0, :, 0][:, None]
 
         scores = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
@@ -102,15 +118,18 @@ def _pp_kernel(
     q_ref,        # (1, T, 1, G, hd)
     k_ref,        # (1, page, 1, hd) — pool page selected by index_map
     v_ref,
-    o_ref,        # (1, T, 1, G, hd)
-    m_scr, l_scr, acc_scr,
-    *, page: int, n_pages: int, window: int, T: int,
+    *rest,        # [ks_ref, vs_ref (1, page, 1) f32,] o_ref, m/l/acc scratch
+    page: int, n_pages: int, window: int, T: int, quantized: bool,
 ):
     """Chunked-prefill sibling of ``_pa_kernel``: T query rows per request
     instead of one. The T*G (row, group) pairs are flattened into a single
     score tile per page — one (T*G, page) MXU matmul — and the causal /
     sliding-window masks become per-row absolute-position comparisons
     (row t sits at ``start + t``). Decode is the T=1 special case."""
+    if quantized:
+        ks_ref, vs_ref = rest[0], rest[1]
+        rest = rest[2:]
+    o_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -134,6 +153,9 @@ def _pp_kernel(
         q = q_ref[0, :, 0].astype(jnp.float32).reshape(T * G, hd)
         k = k_ref[0, :, 0].astype(jnp.float32)           # (page, hd)
         v = v_ref[0, :, 0].astype(jnp.float32)
+        if quantized:
+            k = k * ks_ref[0, :, 0][:, None]
+            v = v * vs_ref[0, :, 0][:, None]
 
         scores = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
@@ -180,32 +202,42 @@ def paged_prefill_attention_kernel(
     *,
     window: int = 0,
     interpret=None,
+    k_scale=None,        # (N, page, Kv) f32 when the pool is quantized
+    v_scale=None,
 ) -> jax.Array:
     """Returns (B, T, Kv, G, hd); see ``_pp_kernel`` for the tiling."""
     interpret = resolve_interpret(interpret)
     B, T, Kv, G, hd = q.shape
     page = k_pages.shape[1]
     P = tables.shape[1]
+    quantized = k_scale is not None
 
     kernel = functools.partial(
-        _pp_kernel, page=page, n_pages=P, window=window, T=T
+        _pp_kernel, page=page, n_pages=P, window=window, T=T,
+        quantized=quantized,
     )
+    pool_spec = pl.BlockSpec(
+        (1, page, 1, hd), lambda b, k, j, tbl, st, ln: (tbl[b, j], 0, k, 0)
+    )
+    in_specs = [
+        pl.BlockSpec(
+            (1, T, 1, G, hd), lambda b, k, j, tbl, st, ln: (b, 0, k, 0, 0)
+        ),
+        pool_spec,
+        pool_spec,
+    ]
+    operands = [q, k_pages, v_pages]
+    if quantized:
+        # scale tiles ride the same block-table index_map as their pages
+        scale_spec = pl.BlockSpec(
+            (1, page, 1), lambda b, k, j, tbl, st, ln: (tbl[b, j], 0, k)
+        )
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B, Kv, P),
-        in_specs=[
-            pl.BlockSpec(
-                (1, T, 1, G, hd), lambda b, k, j, tbl, st, ln: (b, 0, k, 0, 0)
-            ),
-            pl.BlockSpec(
-                (1, page, 1, hd),
-                lambda b, k, j, tbl, st, ln: (tbl[b, j], 0, k, 0),
-            ),
-            pl.BlockSpec(
-                (1, page, 1, hd),
-                lambda b, k, j, tbl, st, ln: (tbl[b, j], 0, k, 0),
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, T, 1, G, hd), lambda b, k, j, tbl, st, ln: (b, 0, k, 0, 0)
         ),
@@ -222,7 +254,7 @@ def paged_prefill_attention_kernel(
         interpret=interpret,
     )(
         tables.astype(jnp.int32), start.astype(jnp.int32),
-        q_len.astype(jnp.int32), q, k_pages, v_pages,
+        q_len.astype(jnp.int32), *operands,
     )
 
 
@@ -236,28 +268,38 @@ def paged_attention_kernel(
     *,
     window: int = 0,
     interpret=None,
+    k_scale=None,        # (N, page, Kv) f32 when the pool is quantized
+    v_scale=None,
 ) -> jax.Array:
     """Returns (B, Kv, G, hd); see module docstring for the tiling."""
     interpret = resolve_interpret(interpret)
     B, Kv, G, hd = q.shape
     page = k_pages.shape[1]
     P = tables.shape[1]
+    quantized = k_scale is not None
 
     kernel = functools.partial(
-        _pa_kernel, page=page, n_pages=P, window=window
+        _pa_kernel, page=page, n_pages=P, window=window, quantized=quantized
     )
+    pool_spec = pl.BlockSpec(
+        (1, page, 1, hd), lambda b, k, j, tbl, ln: (tbl[b, j], 0, k, 0)
+    )
+    in_specs = [
+        pl.BlockSpec((1, 1, G, hd), lambda b, k, j, tbl, ln: (b, k, 0, 0)),
+        pool_spec,
+        pool_spec,
+    ]
+    operands = [q, k_pages, v_pages]
+    if quantized:
+        scale_spec = pl.BlockSpec(
+            (1, page, 1), lambda b, k, j, tbl, ln: (tbl[b, j], 0, k)
+        )
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, Kv, P),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd), lambda b, k, j, tbl, ln: (b, k, 0, 0)),
-            pl.BlockSpec(
-                (1, page, 1, hd), lambda b, k, j, tbl, ln: (tbl[b, j], 0, k, 0)
-            ),
-            pl.BlockSpec(
-                (1, page, 1, hd), lambda b, k, j, tbl, ln: (tbl[b, j], 0, k, 0)
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, G, hd), lambda b, k, j, tbl, ln: (b, k, 0, 0)
         ),
@@ -272,4 +314,6 @@ def paged_attention_kernel(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Kv, G, hd), q.dtype),
         interpret=interpret,
-    )(tables.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pages, v_pages)
+    )(
+        tables.astype(jnp.int32), lengths.astype(jnp.int32), *operands
+    )

@@ -6,6 +6,10 @@ as the fast CPU path (interpret-mode Pallas inside a decode scan is far
 slower than one gather + einsum). Both share the exact layout contract
 documented in ``ref.py``.
 
+Quantized pools: pass ``k_scale``/``v_scale`` (N, page, Kv) f32 and both
+backends dequantize inside the page gather (see ``quant.py``); the scale
+operands shard over the same ``model`` kv-head axis as their pools.
+
 Tensor parallelism: with ``mesh`` set and a divisible KV-head count, the op
 runs inside ``shard_map`` over the ``model`` axis — each shard holds
 ``Kv / tp`` heads of the page pools (``sharding.specs.pool_kv_spec``) and
@@ -45,31 +49,45 @@ def paged_attention(
     use_kernel: bool = True,
     interpret=None,
     mesh=None,
+    k_scale=None,
+    v_scale=None,
 ) -> jax.Array:
     """q: (B, Kv, G, hd) pre-scaled; pools (N, page, Kv, hd) -> (B, Kv, G, hd)."""
+    quantized = k_scale is not None
 
-    def attend(q_, kp_, vp_, tbl_, ln_):
+    def attend(q_, kp_, vp_, tbl_, ln_, *sc_):
+        ks_, vs_ = sc_ if quantized else (None, None)
         if use_kernel:
             return paged_attention_kernel(
                 q_, kp_, vp_, tbl_, ln_, window=window, interpret=interpret,
+                k_scale=ks_, v_scale=vs_,
             )
-        return paged_attention_ref(q_, kp_, vp_, tbl_, ln_, window=window)
+        return paged_attention_ref(
+            q_, kp_, vp_, tbl_, ln_, window=window, k_scale=ks_, v_scale=vs_
+        )
 
+    args = (q, k_pages, v_pages, tables, lengths)
+    if quantized:
+        args = args + (k_scale, v_scale)
     tp = tp_size(mesh)
     if tp > 1 and q.shape[1] % tp == 0:
         # per-shard head slices: the kernel grid sees Kv/tp program rows,
         # gathering from a pool that only stores those heads' pages
         head = P(None, "model", None, None)
         pool = P(None, None, "model", None)
+        in_specs = (head, pool, pool, P(None, None), P(None))
+        if quantized:
+            scale = P(None, None, "model")
+            in_specs = in_specs + (scale, scale)
         fn = shard_map(
             attend,
             mesh=mesh,
-            in_specs=(head, pool, pool, P(None, None), P(None)),
+            in_specs=in_specs,
             out_specs=head,
             check_vma=False,
         )
-        return fn(q, k_pages, v_pages, tables, lengths)
-    return attend(q, k_pages, v_pages, tables, lengths)
+        return fn(*args)
+    return attend(*args)
 
 
 def paged_prefill_attention(
@@ -84,6 +102,8 @@ def paged_prefill_attention(
     use_kernel: bool = True,
     interpret=None,
     mesh=None,
+    k_scale=None,
+    v_scale=None,
 ) -> jax.Array:
     """Chunked-prefill attention over pool pages.
 
@@ -95,27 +115,37 @@ def paged_prefill_attention(
     axis shards over ``model`` (q axis 2 here), tables / positions stay
     replicated, and no collective runs inside attention.
     """
+    quantized = k_scale is not None
 
-    def attend(q_, kp_, vp_, tbl_, st_, ln_):
+    def attend(q_, kp_, vp_, tbl_, st_, ln_, *sc_):
+        ks_, vs_ = sc_ if quantized else (None, None)
         if use_kernel:
             return paged_prefill_attention_kernel(
                 q_, kp_, vp_, tbl_, st_, ln_, window=window,
-                interpret=interpret,
+                interpret=interpret, k_scale=ks_, v_scale=vs_,
             )
         return paged_prefill_attention_ref(
-            q_, kp_, vp_, tbl_, st_, ln_, window=window
+            q_, kp_, vp_, tbl_, st_, ln_, window=window,
+            k_scale=ks_, v_scale=vs_,
         )
 
+    args = (q, k_pages, v_pages, tables, start, q_len)
+    if quantized:
+        args = args + (k_scale, v_scale)
     tp = tp_size(mesh)
     if tp > 1 and q.shape[2] % tp == 0:
         head = P(None, None, "model", None, None)
         pool = P(None, None, "model", None)
+        in_specs = (head, pool, pool, P(None, None), P(None), P(None))
+        if quantized:
+            scale = P(None, None, "model")
+            in_specs = in_specs + (scale, scale)
         fn = shard_map(
             attend,
             mesh=mesh,
-            in_specs=(head, pool, pool, P(None, None), P(None), P(None)),
+            in_specs=in_specs,
             out_specs=head,
             check_vma=False,
         )
-        return fn(q, k_pages, v_pages, tables, start, q_len)
-    return attend(q, k_pages, v_pages, tables, start, q_len)
+        return fn(*args)
+    return attend(*args)

@@ -14,13 +14,32 @@ Layouts (match ``repro.models.attention`` conventions):
 
 The oracle gathers the full (B, P*page) key band and masks by absolute
 position, so it is exact for non-page-multiple lengths and sliding windows.
+
+Quantized pools (``kv_dtype`` int8/fp8): ``k_scale``/``v_scale``
+(N, page, Kv) f32 ride along and are gathered through the same block
+table, dequantizing the band in f32 right at the gather — the oracle
+counterpart of the kernels' fused in-gather dequant (no dequantized pool
+is materialized beyond the gathered band this oracle builds anyway).
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 NEG_INF = -1e30
+
+
+def _gather_band(pages, tables, S, scale):
+    """(N, page, Kv, hd) pool -> (B, S, Kv, hd) f32 band via the block
+    table, dequantized when ``scale`` (N, page, Kv) is present."""
+    B = tables.shape[0]
+    Kv, hd = pages.shape[2], pages.shape[3]
+    band = pages[tables].reshape(B, S, Kv, hd).astype(jnp.float32)
+    if scale is not None:
+        band = band * scale[tables].reshape(B, S, Kv, 1).astype(jnp.float32)
+    return band
 
 
 def paged_attention_ref(
@@ -31,17 +50,19 @@ def paged_attention_ref(
     lengths: jax.Array,
     *,
     window: int = 0,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Returns (B, Kv, G, hd). Query position is ``lengths - 1`` per slot."""
     B, Kv, G, hd = q.shape
     page = k_pages.shape[1]
     P = tables.shape[1]
 
-    k = k_pages[tables].reshape(B, P * page, Kv, hd)   # gather via block table
-    v = v_pages[tables].reshape(B, P * page, Kv, hd)
+    k = _gather_band(k_pages, tables, P * page, k_scale)
+    v = _gather_band(v_pages, tables, P * page, v_scale)
 
     scores = jnp.einsum(
-        "bkgh,bskh->bkgs", q.astype(jnp.float32), k.astype(jnp.float32),
+        "bkgh,bskh->bkgs", q.astype(jnp.float32), k,
         preferred_element_type=jnp.float32,
     )
     kpos = jnp.arange(P * page, dtype=jnp.int32)[None, :]          # (1, S)
@@ -64,6 +85,8 @@ def paged_prefill_attention_ref(
     q_len: jax.Array,
     *,
     window: int = 0,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Chunked-prefill sibling of :func:`paged_attention_ref`.
 
@@ -86,10 +109,10 @@ def paged_prefill_attention_ref(
     page = k_pages.shape[1]
     P = tables.shape[1]
 
-    k = k_pages[tables].reshape(B, P * page, Kv, hd)
-    v = v_pages[tables].reshape(B, P * page, Kv, hd)
+    k = _gather_band(k_pages, tables, P * page, k_scale)
+    v = _gather_band(v_pages, tables, P * page, v_scale)
     scores = jnp.einsum(
-        "btkgh,bskh->bkgts", q.astype(jnp.float32), k.astype(jnp.float32),
+        "btkgh,bskh->bkgts", q.astype(jnp.float32), k,
         preferred_element_type=jnp.float32,
     )                                                     # (B, Kv, G, T, S)
     kpos = jnp.arange(P * page, dtype=jnp.int32)[None, None, :]    # (1,1,S)

@@ -65,6 +65,11 @@ def main() -> None:
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--kernel", action="store_true",
                     help="route decode through the Pallas paged kernel")
+    ap.add_argument("--kv-dtype", default="bf16",
+                    choices=("bf16", "int8", "fp8"),
+                    help="KV pool storage dtype: quantized pages are "
+                         "dequantized inside the paged kernels (~2x "
+                         "resident requests per device at int8)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="radix-tree KV prefix reuse across requests")
     ap.add_argument("--prefill-chunk", type=int, default=0,
@@ -131,6 +136,7 @@ def main() -> None:
             prefill_bucket=args.page_size,  # random lengths: bound compiles
             prefix_cache=args.prefix_cache,
             prefill_chunk=args.prefill_chunk,
+            kv_dtype=args.kv_dtype,
         )
         if mesh is not None:
             eng = ReplicatedServeEngine(
@@ -162,6 +168,22 @@ def main() -> None:
             + f": {sum(len(v) for v in out.values())} tokens, "
             f"{s['tokens_per_s']:.1f} tok/s, mean TTFT {ttft * 1e3:.0f}ms, "
             f"evictions={s.get('evictions', 0)}"
+        )
+        from repro.kernels.paged_attention.quant import kv_token_bytes
+
+        kv_maps = (
+            [e.stats.get("kv_bytes", {}) for e in eng.engines]
+            if mesh is not None else [s.get("kv_bytes", {})]
+        )
+        per_req = [b for m in kv_maps for b in m.values()]
+        cap_factor = (
+            kv_token_bytes(cfg.n_kv_heads, cfg.head_dim, "bf16")
+            / kv_token_bytes(cfg.n_kv_heads, cfg.head_dim, args.kv_dtype)
+        )
+        print(
+            f"  kv-pool: dtype={args.kv_dtype}, "
+            f"bytes/request={np.mean(per_req):.0f} (mean over {len(per_req)}), "
+            f"capacity_factor_vs_bf16={cap_factor:.2f}x"
         )
         if args.prefix_cache and "prefix_lookups" in s:
             hit_rate = s["prefix_hits"] / max(s["prefix_lookups"], 1)

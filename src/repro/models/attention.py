@@ -236,15 +236,28 @@ def attention_decode(
 
 # ------------------------------------------------------------- paged caching
 def init_paged_kv_cache(
-    num_pages: int, page_size: int, n_kv: int, head_dim: int, dtype
+    num_pages: int, page_size: int, n_kv: int, head_dim: int, dtype,
+    kv_dtype: str = "",
 ) -> Dict[str, jax.Array]:
     """Per-layer KV page pool. Page 0 is the reserved null/trash page: block
     table padding and inactive-slot writes are routed there, and reads of it
-    are always masked (or discarded with the slot's output)."""
-    return {
-        "kp": jnp.zeros((num_pages, page_size, n_kv, head_dim), dtype),
-        "vp": jnp.zeros((num_pages, page_size, n_kv, head_dim), dtype),
+    are always masked (or discarded with the slot's output).
+
+    A quantized ``kv_dtype`` ("int8"/"fp8") stores the pools in the storage
+    dtype and adds per-(page-slot, kv-head) f32 scale buffers ``ksc``/``vsc``
+    (see ``kernels.paged_attention.quant``); the zero-initialized scales
+    dequantize the null page to exact zeros."""
+    from repro.kernels.paged_attention import quant
+
+    store = quant.kv_storage_dtype(kv_dtype, dtype)
+    pool = {
+        "kp": jnp.zeros((num_pages, page_size, n_kv, head_dim), store),
+        "vp": jnp.zeros((num_pages, page_size, n_kv, head_dim), store),
     }
+    if quant.is_quantized(kv_dtype):
+        pool["ksc"] = jnp.zeros((num_pages, page_size, n_kv), jnp.float32)
+        pool["vsc"] = jnp.zeros((num_pages, page_size, n_kv), jnp.float32)
+    return pool
 
 
 def attention_prefill_paged(
@@ -303,17 +316,32 @@ def attention_prefill_paged(
         0,
     )
     slot = jnp.where(ok, pos % page, 0)
-    k_c = cache["kp"].at[pid, slot].set(k_new)
-    v_c = cache["vp"].at[pid, slot].set(v_new)
+    new_cache = dict(cache)
+    if "ksc" in cache:
+        # quantize-once at write time: each token row's codes + scale depend
+        # only on its own values, so pool bytes are batch-independent
+        from repro.kernels.paged_attention import quant
+
+        k_codes, k_sc = quant.kv_quantize(k_new, cache["kp"].dtype)
+        v_codes, v_sc = quant.kv_quantize(v_new, cache["vp"].dtype)
+        new_cache["kp"] = cache["kp"].at[pid, slot].set(k_codes)
+        new_cache["vp"] = cache["vp"].at[pid, slot].set(v_codes)
+        new_cache["ksc"] = cache["ksc"].at[pid, slot].set(k_sc)
+        new_cache["vsc"] = cache["vsc"].at[pid, slot].set(v_sc)
+        scales = {"k_scale": new_cache["ksc"], "v_scale": new_cache["vsc"]}
+    else:
+        new_cache["kp"] = cache["kp"].at[pid, slot].set(k_new)
+        new_cache["vp"] = cache["vp"].at[pid, slot].set(v_new)
+        scales = {}
 
     q = q.reshape(B, T, n_kv, G, head_dim) * (head_dim ** -0.5)
     out = paged_prefill_attention(
-        q, k_c, v_c, tables, start, q_len,
-        window=window, use_kernel=use_kernel, mesh=mesh,
+        q, new_cache["kp"], new_cache["vp"], tables, start, q_len,
+        window=window, use_kernel=use_kernel, mesh=mesh, **scales,
     )
     out = jnp.where(valid[:, :, None, None, None], out, 0)
     out = out.astype(dtype).reshape(B, T, n_heads * head_dim)
-    return out @ p["wo"].astype(dtype), {"kp": k_c, "vp": v_c}
+    return out @ p["wo"].astype(dtype), new_cache
 
 
 def attention_decode_paged(
@@ -366,13 +394,26 @@ def attention_decode_paged(
     )[:, 0]
     page_ids = jnp.where(active & in_range, page_ids, 0)
     slot = jnp.where(active & in_range, lengths % page, 0)
-    k_c = cache["kp"].at[page_ids, slot].set(k_new[:, 0])
-    v_c = cache["vp"].at[page_ids, slot].set(v_new[:, 0])
+    new_cache = dict(cache)
+    if "ksc" in cache:
+        from repro.kernels.paged_attention import quant
+
+        k_codes, k_sc = quant.kv_quantize(k_new[:, 0], cache["kp"].dtype)
+        v_codes, v_sc = quant.kv_quantize(v_new[:, 0], cache["vp"].dtype)
+        new_cache["kp"] = cache["kp"].at[page_ids, slot].set(k_codes)
+        new_cache["vp"] = cache["vp"].at[page_ids, slot].set(v_codes)
+        new_cache["ksc"] = cache["ksc"].at[page_ids, slot].set(k_sc)
+        new_cache["vsc"] = cache["vsc"].at[page_ids, slot].set(v_sc)
+        scales = {"k_scale": new_cache["ksc"], "v_scale": new_cache["vsc"]}
+    else:
+        new_cache["kp"] = cache["kp"].at[page_ids, slot].set(k_new[:, 0])
+        new_cache["vp"] = cache["vp"].at[page_ids, slot].set(v_new[:, 0])
+        scales = {}
 
     q = q.reshape(B, n_kv, G, head_dim) * (head_dim ** -0.5)
     out = paged_attention(
-        q, k_c, v_c, tables, lengths + 1,
-        window=window, use_kernel=use_kernel, mesh=mesh,
+        q, new_cache["kp"], new_cache["vp"], tables, lengths + 1,
+        window=window, use_kernel=use_kernel, mesh=mesh, **scales,
     )
     out = out.astype(dtype).reshape(B, 1, n_heads * head_dim)
-    return out @ p["wo"].astype(dtype), {"kp": k_c, "vp": v_c}
+    return out @ p["wo"].astype(dtype), new_cache

@@ -52,6 +52,13 @@ class Runtime:
     # attention through the Pallas paged kernel (block-table page gathers)
     # instead of the pure-jnp oracle. The oracle is the faster CPU path.
     use_paged_kernel: bool = False
+    # Paged KV pool storage dtype: "" = native (pools stored at ``dtype``),
+    # "int8" / "fp8" = quantized pages + per-(page-slot, head) f32 scales,
+    # dequantized inside the paged kernels' page gather
+    # (kernels.paged_attention.quant). Write paths quantize each token row
+    # exactly once at write time, preserving batched==alone determinism at
+    # a fixed kv_dtype.
+    kv_dtype: str = ""
 
     def replace(self, **kw) -> "Runtime":
         return dataclasses.replace(self, **kw)

@@ -553,7 +553,8 @@ def init_stack_pool(
                 f"paged decode supports attention mixers only, got {spec.kind}"
             )
             unit[f"p{j}"] = attn_mod.init_paged_kv_cache(
-                num_pages, page_size, cfg.n_kv_heads, cfg.head_dim, rt.dtype
+                num_pages, page_size, cfg.n_kv_heads, cfg.head_dim, rt.dtype,
+                kv_dtype=rt.kv_dtype,
             )
         pools.append(
             jax.tree.map(
@@ -574,8 +575,14 @@ def write_prefill_to_pool(
     token position), so ring-truncated local-layer caches land exactly on
     their surviving window band and invalid entries fall into null page 0.
     ``table``: (P,) int32 page ids for this request.
+
+    Quantized pools (``ksc`` present): each cache row is quantized here,
+    exactly once, before landing in its page — same codes + scales the
+    chunked/decode write paths would have produced for the same values.
     """
-    def scatter(kp, vp, k, v, pos):
+    from repro.kernels.paged_attention import quant
+
+    def scatter(pool, k, v, pos):
         # entries that are invalid OR beyond the table's coverage go to the
         # null page (a clip would clobber the last real page instead)
         valid = (pos >= 0) & (pos // page_size < table.shape[0])
@@ -585,17 +592,25 @@ def write_prefill_to_pool(
             0,
         )
         slot = jnp.where(valid, pos % page_size, 0)
-        return kp.at[pid, slot].set(k[0]), vp.at[pid, slot].set(v[0])
+        new = dict(pool)
+        if "ksc" in pool:
+            k_codes, k_sc = quant.kv_quantize(k[0], pool["kp"].dtype)
+            v_codes, v_sc = quant.kv_quantize(v[0], pool["vp"].dtype)
+            new["kp"] = pool["kp"].at[pid, slot].set(k_codes)
+            new["vp"] = pool["vp"].at[pid, slot].set(v_codes)
+            new["ksc"] = pool["ksc"].at[pid, slot].set(k_sc)
+            new["vsc"] = pool["vsc"].at[pid, slot].set(v_sc)
+        else:
+            new["kp"] = pool["kp"].at[pid, slot].set(k[0])
+            new["vp"] = pool["vp"].at[pid, slot].set(v[0])
+        return new
 
     new_pools: List[Any] = []
     for seg_pool, seg_cache in zip(pools, caches):
         unit: Dict[str, Any] = {}
         for key, pool in seg_pool.items():
             c = seg_cache[key]
-            kp, vp = jax.vmap(scatter)(
-                pool["kp"], pool["vp"], c["k"], c["v"], c["pos"]
-            )
-            unit[key] = {"kp": kp, "vp": vp}
+            unit[key] = jax.vmap(scatter)(pool, c["k"], c["v"], c["pos"])
         new_pools.append(unit)
     return new_pools
 

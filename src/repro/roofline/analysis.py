@@ -305,6 +305,36 @@ def collective_bytes(
     return CollectiveStats(bytes_by_kind, count_by_kind)
 
 
+def decode_kv_read_bytes(
+    n_kv: int, head_dim: int, n_layers: int, tokens: int,
+    kv_dtype: str = "", native_itemsize: int = 2,
+) -> int:
+    """Bytes ONE decode step streams from the KV pool for one request at
+    depth ``tokens`` — the dominant decode working set (weights amortize
+    over the batch, KV does not). Dtype-aware: a quantized pool reads int8/
+    fp8 codes plus the per-(slot, head) f32 scales instead of native-width
+    K/V, which is where the paged int8 decode speedup comes from on a
+    memory-bound roofline."""
+    from repro.kernels.paged_attention.quant import kv_token_bytes
+
+    return tokens * n_layers * kv_token_bytes(
+        n_kv, head_dim, kv_dtype, native_itemsize
+    )
+
+
+def predicted_decode_kv_speedup(
+    n_kv: int, head_dim: int, kv_dtype: str, native_itemsize: int = 2,
+) -> float:
+    """KV-read byte ratio native : ``kv_dtype`` — the decode speedup a
+    perfectly memory-bound paged-attention roofline predicts (compute and
+    non-KV bytes are batch-amortized; the bench reports predicted vs
+    measured)."""
+    return (
+        decode_kv_read_bytes(n_kv, head_dim, 1, 1, "", native_itemsize)
+        / decode_kv_read_bytes(n_kv, head_dim, 1, 1, kv_dtype, native_itemsize)
+    )
+
+
 def derive_terms(rec: Dict) -> Dict[str, float]:
     """Report-side roofline terms from a dry-run JSON record.
 

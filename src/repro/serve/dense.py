@@ -36,6 +36,13 @@ def batch_shape_key(batch: Dict[str, jax.Array]) -> Tuple:
     )
 
 
+def _dense_rt(rt: Runtime) -> Runtime:
+    """Dense caches are contiguous native-dtype rings — the pool dtype never
+    enters the trace — so strip ``kv_dtype`` before keying/tracing: engines
+    that differ only in pool dtype share one compiled prefill/loop."""
+    return rt.replace(kv_dtype="") if rt.kv_dtype else rt
+
+
 def place_batch(batch: Dict[str, jax.Array], rt: Runtime) -> Dict[str, jax.Array]:
     """Commit batch arrays replicated onto ``rt.mesh`` (no-op without one).
 
@@ -69,6 +76,7 @@ def compiled_prefill(
     the first-token logits at the true prompt end. ``full_cache`` collects
     un-windowed caches (see ``repro.models.lm.prefill``) for the page pool.
     """
+    rt = _dense_rt(rt)
     key = ("prefill", cfg, rt, batch_key, total, dynamic_gather, full_cache)
     if key not in _CACHE:
         global CACHE_BUILDS
@@ -100,6 +108,7 @@ def compiled_decode_loop(
     where ``tok0`` is the prefill-sampled first token and step ``i`` samples
     with ``fold_in(key, i)``.
     """
+    rt = _dense_rt(rt)
     key = ("loop", cfg, rt, batch_key, total, max_new, temperature)
     if key not in _CACHE:
         global CACHE_BUILDS

@@ -124,6 +124,13 @@ class EngineConfig:
     # ``chunk_tokens``); 0 with prefix_cache off = legacy whole-prompt
     # prefill at admission.
     prefill_chunk: int = 0
+    # KV pool storage dtype: "bf16" (native — pages stored at the runtime
+    # compute dtype), "int8", or "fp8". Quantized pools store ~0.5x the
+    # bytes per token (codes + per-(slot, head) f32 scales), dequantized
+    # inside the paged kernels' page gather; each token row is quantized
+    # exactly once at write time, so batched==alone determinism holds at
+    # any fixed kv_dtype (see kernels.paged_attention.quant).
+    kv_dtype: str = "bf16"
 
     @property
     def chunk_tokens(self) -> int:
@@ -154,6 +161,43 @@ class EngineConfig:
         return cls(
             max_slots=slots, page_size=page_size, num_pages=num_pages,
             max_len=max_len, **kw,
+        )
+
+    @classmethod
+    def sized_for_budget(
+        cls,
+        cfg,
+        max_prompt_total: int,
+        max_new: int,
+        *,
+        pool_bytes: int,
+        page_size: int = 16,
+        headroom: float = 1.0,
+        kv_dtype: str = "bf16",
+        native_itemsize: int = 2,
+        **kw,
+    ) -> "EngineConfig":
+        """Inverse of :meth:`sized_for`: size the SLOT count to an HBM pool
+        budget. Given ``pool_bytes`` per device, derive how many worst-case
+        requests fit at ``kv_dtype`` page pricing (``pool.kv_page_bytes``,
+        incl. scale buffers) — the resident-request capacity that quantized
+        pools multiply (~2x at int8 vs a bf16 pool of equal bytes)."""
+        from repro.serve.pool import kv_page_bytes
+
+        horizon = max_prompt_total + max_new
+        max_len = -(-horizon // page_size) * page_size
+        pages_per_req = max_len // page_size
+        page_bytes = kv_page_bytes(
+            page_size, cfg.n_kv_heads, cfg.head_dim, cfg.n_layers,
+            kv_dtype, native_itemsize,
+        )
+        budget_pages = pool_bytes // page_bytes            # excl. null page
+        per_slot = math.ceil(pages_per_req * headroom)
+        slots = max(1, int(budget_pages) // per_slot)
+        num_pages = 1 + slots * per_slot
+        return cls(
+            max_slots=slots, page_size=page_size, num_pages=num_pages,
+            max_len=max_len, kv_dtype=kv_dtype, **kw,
         )
 
 
@@ -211,12 +255,15 @@ class ServeEngine:
         engine: EngineConfig = EngineConfig(),
         paged: Optional[bool] = None,
     ):
+        from repro.kernels.paged_attention import quant
+
         self.cfg = cfg
         self.params = params
         self.ecfg = engine
         rt = rt if rt is not None else Runtime()
         self.rt = rt.replace(
-            use_paged_kernel=engine.use_kernel or rt.use_paged_kernel
+            use_paged_kernel=engine.use_kernel or rt.use_paged_kernel,
+            kv_dtype=quant.normalize_kv_dtype(engine.kv_dtype or rt.kv_dtype),
         )
         if paged is None:
             paged = paged_supported(cfg)
@@ -391,12 +438,13 @@ class ServeEngine:
         return req.prompt_len + extra
 
     def _kv_bytes_per_page(self) -> int:
-        itemsize = jnp.dtype(self.rt.dtype).itemsize
-        per_layer = (
-            self.ecfg.page_size * self.cfg.n_kv_heads * self.cfg.head_dim
-            * 2 * itemsize
+        from repro.serve.pool import kv_page_bytes
+
+        return kv_page_bytes(
+            self.ecfg.page_size, self.cfg.n_kv_heads, self.cfg.head_dim,
+            self.cfg.n_layers, self.rt.kv_dtype,
+            jnp.dtype(self.rt.dtype).itemsize,
         )
-        return per_layer * self.cfg.n_layers
 
     def kv_pool_bytes_per_device(self) -> int:
         """Bytes of KV pool resident on ONE device — the capacity bound the

@@ -25,6 +25,12 @@ Semantics
   still prove every refcount), and turns a matched page run back into a
   request-owned sequence with ``adopt`` — fork generalized to an arbitrary
   page list.
+* Quantized pools (``EngineConfig.kv_dtype`` int8/fp8) change nothing here:
+  scale buffers are extra leaves of the same device pool tree, indexed by
+  the same page ids, so freeing a page frees its scales, COW copies move
+  codes + scales together, and adoption stays zero-FLOP (the bytes were
+  quantized once at write time). ``kv_page_bytes`` is the one byte-pricing
+  rule for both layouts.
 """
 from __future__ import annotations
 
@@ -34,6 +40,22 @@ from typing import Dict, List, Tuple
 
 class PoolExhausted(RuntimeError):
     """Raised when an alloc/append cannot be served from the free list."""
+
+
+def kv_page_bytes(
+    page_size: int, n_kv: int, head_dim: int, n_layers: int,
+    kv_dtype: str = "", native_itemsize: int = 2,
+) -> int:
+    """Device bytes one pool page costs across all layers (K + V codes, plus
+    the per-(slot, head) f32 scale buffers under a quantized ``kv_dtype``).
+    The single byte-accounting rule shared by the engine's per-request
+    stats, ``EngineConfig.sized_for_budget``, the serve CLI, and the
+    quantized-pool bench — page metadata here is host-side and free."""
+    from repro.kernels.paged_attention.quant import kv_token_bytes
+
+    return page_size * n_layers * kv_token_bytes(
+        n_kv, head_dim, kv_dtype, native_itemsize
+    )
 
 
 @dataclasses.dataclass

@@ -230,12 +230,28 @@ def pool_kv_spec(cfg: ArchConfig, ndim: int, tp: int) -> P:
     return P(*dims)
 
 
+def pool_scale_spec(cfg: ArchConfig, ndim: int, tp: int) -> P:
+    """Spec for a quantized pool's scale leaf ``(..., num_pages, page, Kv)``.
+
+    Scales carry no head_dim axis, so the KV-head axis is the LAST dim;
+    it shards over ``model`` under the same divisibility guard as
+    :func:`pool_kv_spec` — each chip stores the scales for exactly the
+    head slice of pages it holds.
+    """
+    dims: list = [None] * ndim
+    if _div(cfg.n_kv_heads, tp) and tp > 1:
+        dims[-1] = "model"
+    return P(*dims)
+
+
 def paged_state_specs(cfg: ArchConfig, state_shape: Any, mesh) -> Any:
     """Spec tree for the paged decode state (``models.lm.init_paged_state``).
 
-    ``caches`` leaves are page pools (head-sharded, see ``pool_kv_spec``);
-    ``tables``/``lengths`` (and any other host-updated slot arrays) are
-    replicated — every chip addresses the same page ids.
+    ``caches`` leaves are page pools (head-sharded, see ``pool_kv_spec``)
+    plus, under a quantized ``kv_dtype``, their scale buffers (``ksc`` /
+    ``vsc``, head-sharded on the last dim); ``tables``/``lengths`` (and any
+    other host-updated slot arrays) are replicated — every chip addresses
+    the same page ids.
     """
     tp = mesh.shape["model"] if "model" in mesh.shape else 1
 
@@ -245,6 +261,8 @@ def paged_state_specs(cfg: ArchConfig, state_shape: Any, mesh) -> Any:
         )
         if keys[-1] in ("kp", "vp"):
             return pool_kv_spec(cfg, len(leaf.shape), tp)
+        if keys[-1] in ("ksc", "vsc"):
+            return pool_scale_spec(cfg, len(leaf.shape), tp)
         return P(*([None] * len(leaf.shape)))
 
     return jax.tree_util.tree_map_with_path(one, state_shape)

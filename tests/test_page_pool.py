@@ -3,7 +3,14 @@
 Invariants under arbitrary admit/append/fork/evict sequences: no page is
 leaked or double-assigned, the null page is never handed out, the high-water
 mark respects the budget (the pool raises instead of overcommitting), and
-freed pages are reusable."""
+freed pages are reusable.
+
+Quantized pools add a device-side invariant: the per-(page-slot, head) f32
+scale buffers share the page id with their codes, so COW copies must move
+codes + scales together and freeing a page frees its scales (the next writer
+overwrites both)."""
+import jax.numpy as jnp
+import numpy as np
 import pytest
 from _hyp_compat import hypothesis, st
 
@@ -116,6 +123,128 @@ def test_pages_for_matches_alloc(n_tokens, page_size):
     sid = pool.alloc(n_tokens)
     assert len(pool.seq_pages(sid)) == pool.pages_for(n_tokens)
     assert pool.pages_for(n_tokens) * page_size >= n_tokens
+
+
+# ------------------------------------------------- quantized pool state
+@hypothesis.given(
+    st.lists(
+        st.tuples(st.integers(0, 3), st.integers(1, 9)),
+        min_size=1, max_size=30,
+    )
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_quantized_pool_scales_track_pages(ops):
+    """Device-side shadow of the allocator workload under an int8 pool: the
+    scale buffers are indexed by the same page ids as the codes, so (a)
+    every live sequence's pages carry exactly the scales its writer stamped,
+    (b) a COW copy moves codes AND scales, and (c) freed pages' scales are
+    simply overwritten by the next writer — freeing a page frees its scales.
+    """
+    from repro.kernels.paged_attention import quant
+    from repro.models.attention import init_paged_kv_cache
+
+    page, n_kv, hd = 3, 2, 4
+    pool = PagePool(num_pages=8, page_size=page)
+    cache = init_paged_kv_cache(8, page, n_kv, hd, jnp.float32,
+                                kv_dtype="int8")
+    assert set(cache) == {"kp", "vp", "ksc", "vsc"}
+    assert cache["kp"].dtype == jnp.int8
+    assert cache["ksc"].shape == (8, page, n_kv)
+    expected = {}            # page id -> stamped scale value
+
+    def stamp(sid, pages):
+        """Write the constant row ``sid + 1`` into each page: absmax is
+        exact so the int8 round trip is lossless and the scale is known."""
+        val = float(sid % 5 + 1)
+        x = jnp.full((len(pages), page, n_kv, hd), val, jnp.float32)
+        codes, scales = quant.kv_quantize(x, cache["kp"].dtype)
+        idx = jnp.asarray(pages)
+        cache["kp"] = cache["kp"].at[idx].set(codes)
+        cache["ksc"] = cache["ksc"].at[idx].set(scales)
+        for p in pages:
+            expected[p] = val / 127.0
+
+    live = {}
+    for verb, n in ops:
+        try:
+            if verb == 0:
+                sid = pool.alloc(n)
+                live[sid] = None
+                stamp(sid, pool.seq_pages(sid))
+            elif verb == 1 and live:
+                sid = list(live)[n % len(live)]
+                before = set(pool.seq_pages(sid))
+                pool.append(sid, n)
+                for src, dst in pool.drain_copies():   # COW: move both
+                    for key in ("kp", "ksc"):
+                        cache[key] = cache[key].at[dst].set(cache[key][src])
+                    expected[dst] = expected[src]
+                stamp(sid, [p for p in pool.seq_pages(sid)
+                            if p not in before])
+            elif verb == 2 and live:
+                sid = list(live)[n % len(live)]
+                del live[sid]
+                pool.free(sid)
+            elif verb == 3 and live:
+                sid = list(live)[n % len(live)]
+                live[pool.fork(sid)] = None
+        except PoolExhausted:
+            pass
+        pool.check()
+        ksc = np.asarray(cache["ksc"])
+        for sid in live:
+            for p in pool.seq_pages(sid):
+                np.testing.assert_allclose(
+                    ksc[p], expected[p], rtol=1e-6,
+                    err_msg=f"page {p} of sid {sid}: scales drifted",
+                )
+    # the null page's scales stay zero: it dequantizes to exact zeros
+    assert np.all(np.asarray(cache["ksc"])[0] == 0.0)
+    for sid in list(live):
+        pool.free(sid)
+    pool.check()
+    assert pool.pages_in_use == 0
+
+
+def test_kv_quant_roundtrip_error_bounds():
+    """quantize -> dequantize obeys the per-row analytic bounds, and the
+    per-(token, head) symmetric scheme is RMS-comparable to the blockwise
+    dynamic-map reference tier (``kernels.blockwise_quant.ref``) on the
+    same heavy-tailed data — both are 8-bit absmax-scaled codes."""
+    from repro.kernels.blockwise_quant.ref import dequantize_ref, quantize_ref
+    from repro.kernels.paged_attention import quant
+
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(
+        rng.randn(64, 8, 16) * np.exp(rng.randn(64, 8, 16)), jnp.float32
+    )
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+
+    # int8: round-to-nearest at scale = absmax/127 -> |err| <= scale/2
+    c8, s8 = quant.kv_quantize(x, jnp.int8)
+    err8 = jnp.abs(x - quant.kv_dequantize(c8, s8))
+    assert bool(jnp.all(err8 <= s8[..., None] * 0.5 + 1e-7))
+
+    # fp8 e4m3: 3 mantissa bits -> relative half-ulp 2^-4 of the row max
+    cf, sf = quant.kv_quantize(x, jnp.float8_e4m3fn)
+    errf = jnp.abs(x - quant.kv_dequantize(cf, sf))
+    assert bool(jnp.all(errf <= absmax / 14.0 + 1e-7))
+
+    # zero rows are exact (null-page semantics): scale 0, codes 0
+    z = jnp.zeros((2, 3, 16), jnp.float32)
+    for dt in (jnp.int8, jnp.float8_e4m3fn):
+        cz, sz = quant.kv_quantize(z, dt)
+        assert bool(jnp.all(sz == 0))
+        assert bool(jnp.all(quant.kv_dequantize(cz, sz) == 0))
+
+    # RMS comparability with the blockwise dynamic-map tier
+    flat = x.reshape(-1)
+    n = flat.shape[0] - flat.shape[0] % 256
+    idx, sc = quantize_ref(flat[:n])
+    err_blk = jnp.abs(flat[:n] - dequantize_ref(idx, sc))
+    rms = lambda e: float(jnp.sqrt(jnp.mean(e**2)))  # noqa: E731
+    ratio = rms(err8) / max(rms(err_blk), 1e-12)
+    assert 0.25 < ratio < 4.0, ratio
 
 
 # ------------------------------------------------- radix prefix workloads

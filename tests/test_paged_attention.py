@@ -113,6 +113,79 @@ def test_window_equals_full_when_covering():
                                atol=1e-6, rtol=1e-6)
 
 
+# ---------------------------------------------------- quantized pool gather
+def _quantize_case(q, kp, vp, kv_dtype):
+    from repro.kernels.paged_attention import quant
+
+    store = quant.kv_storage_dtype(kv_dtype, q.dtype)
+    kc, ks = quant.kv_quantize(kp, store)
+    vc, vs = quant.kv_quantize(vp, store)
+    return kc, vc, ks, vs
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+@pytest.mark.parametrize("case", CASES[:2], ids=[str(c[:4]) for c in CASES[:2]])
+def test_quantized_kernel_matches_quantized_ref(case, kv_dtype):
+    """Fused in-gather dequant inside the Pallas kernel == dequantizing in
+    the jnp oracle: both read the same codes + scales, so they must agree
+    to kernel tolerance (the quantization error itself cancels out)."""
+    B, Kv, G, hd, page, N, P, lengths = case
+    q, kp, vp, tables, lens = make_case(B, Kv, G, hd, page, N, P, lengths)
+    kc, vc, ks, vs = _quantize_case(q, kp, vp, kv_dtype)
+    out = paged_attention(q, kc, vc, tables, lens, k_scale=ks, v_scale=vs,
+                          use_kernel=True)
+    ref = paged_attention_ref(q, kc, vc, tables, lens, k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5
+    )
+    # and the quantized result is close to (but not identical with) exact
+    exact = paged_attention_ref(q, kp, vp, tables, lens)
+    drift = float(jnp.max(jnp.abs(ref - exact)))
+    assert 0.0 < drift < 0.5, drift
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+def test_quantized_prefill_kernel_matches_quantized_ref(kv_dtype):
+    B, T, Kv, G, hd, page, N, P = 2, 4, 2, 2, 32, 8, 16, 4
+    starts, qlens = [0, 5], [4, 3]
+    q, kp, vp, tbl, st, ln = make_prefill_case(
+        B, T, Kv, G, hd, page, N, P, starts, qlens
+    )
+    kc, vc, ks, vs = _quantize_case(q, kp, vp, kv_dtype)
+    out = paged_prefill_attention(
+        q, kc, vc, tbl, st, ln, k_scale=ks, v_scale=vs, use_kernel=True
+    )
+    ref = paged_prefill_attention_ref(
+        q, kc, vc, tbl, st, ln, k_scale=ks, v_scale=vs
+    )
+    for b in range(B):
+        np.testing.assert_allclose(
+            np.asarray(out)[b, : qlens[b]], np.asarray(ref)[b, : qlens[b]],
+            atol=2e-5, rtol=2e-5,
+        )
+
+
+def test_quantized_null_page_dequantizes_to_zero():
+    """Zero-initialized scales make the null page read as exact zeros no
+    matter what garbage codes it holds — padding masking stays intact."""
+    from repro.kernels.paged_attention import quant
+
+    q, kp, vp, tables, lens = make_case(2, 2, 2, 16, 8, 16, 4, [9, 12], seed=1)
+    kc, vc, ks, vs = _quantize_case(q, kp, vp, "int8")
+    kc = kc.at[0].set(127)                   # poison null-page codes
+    vc = vc.at[0].set(-127)
+    ks = ks.at[0].set(0.0)                   # null page: scale stays zero
+    vs = vs.at[0].set(0.0)
+    ref = paged_attention_ref(q, kc, vc, tables, lens, k_scale=ks, v_scale=vs)
+    out = paged_attention(q, kc, vc, tables, lens, k_scale=ks, v_scale=vs,
+                          use_kernel=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    assert bool(jnp.all(jnp.isfinite(ref)))
+    # dequant of zero-scale pages is exactly zero (not NaN/Inf)
+    assert bool(jnp.all(quant.kv_dequantize(kc[0], ks[0]) == 0.0))
+
+
 # -------------------------------------------------- chunked prefill kernel
 def make_prefill_case(B, T, Kv, G, hd, page, N, P, starts, qlens, seed=0):
     """Pool + block tables covering each request's start + T positions."""

@@ -353,6 +353,145 @@ def test_engine_rejects_oversized_request(arch_state):
         eng.submit(np.zeros(40, np.int32), 20)   # > pool budget
 
 
+# ----------------------------------------------------- quantized KV pool
+PAGED_FAMILIES = ["granite-8b", "gemma3-1b", "phi-3-vision-4.2b"]
+DENSE_FAMILIES = ["falcon-mamba-7b", "recurrentgemma-2b", "seamless-m4t-medium"]
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+@pytest.mark.parametrize("name", PAGED_FAMILIES)
+def test_quantized_pool_batched_equals_alone(arch_state, name, kv_dtype):
+    """Quantize-once-per-write keeps pool bytes independent of batch
+    composition, so the engine's batched==alone token identity must hold at
+    every kv_dtype (the quantized trajectory may differ from bf16's — the
+    guarantee is internal consistency at a FIXED pool dtype)."""
+    cfg, params = arch_state(name)
+    rng = np.random.RandomState(31)
+    prompts = [rng.randint(0, cfg.vocab_size, (s,)).astype(np.int32)
+               for s in (5, 11, 8)]
+    fes = [
+        rng.randn(cfg.frontend_tokens, cfg.d_model).astype(np.float32)
+        if cfg.frontend is not None else None
+        for _ in prompts
+    ]
+
+    def run(reqs, fe_list, slots):
+        eng = ServeEngine(
+            cfg, params, RT,
+            EngineConfig(max_slots=slots, page_size=8, num_pages=33,
+                         max_len=64, inner_steps=4, kv_dtype=kv_dtype),
+        )
+        rids = [eng.submit(p, 6, frontend_embeds=fe)
+                for p, fe in zip(reqs, fe_list)]
+        out = eng.run()
+        eng.pool.check()
+        assert eng.pool.pages_in_use == 0
+        return [out[r] for r in rids]
+
+    batched = run(prompts, fes, slots=2)
+    for i, (p, fe) in enumerate(zip(prompts, fes)):
+        alone = run([p], [fe], slots=1)[0]
+        np.testing.assert_array_equal(
+            batched[i], alone, err_msg=f"{name} {kv_dtype} req {i}"
+        )
+
+
+def _paged_step_logits(cfg, params, prompt, kv_dtype, steps, teacher=None):
+    """Admission-path harness: prefill -> write_prefill_to_pool -> paged
+    decode steps, returning per-step logits (teacher-forced when given)."""
+    from repro.models import decode_step_paged, init_paged_state, prefill
+    from repro.models.stack import write_prefill_to_pool
+
+    rt = RT.replace(kv_dtype=kv_dtype)
+    page = 8
+    prompt_total = len(prompt) + (
+        cfg.frontend_tokens if cfg.frontend == "vision" else 0
+    )
+    max_len = -(-(prompt_total + steps) // page) * page
+    P = max_len // page
+    state = init_paged_state(
+        cfg, 1, rt, num_pages=P + 1, page_size=page, max_len=max_len
+    )
+    table_row = jnp.arange(1, P + 1, dtype=jnp.int32)
+    batch = {"tokens": jnp.asarray(prompt[None])}
+    if cfg.frontend is not None:
+        rngf = np.random.RandomState(1)
+        batch["frontend_embeds"] = jnp.asarray(
+            rngf.randn(1, cfg.frontend_tokens, cfg.d_model), jnp.float32
+        )
+    logits, pstate = prefill(
+        cfg, params, batch, rt, max_len=prompt_total + steps, full_cache=True
+    )
+    state["caches"] = write_prefill_to_pool(
+        state["caches"], pstate["caches"], table_row, page
+    )
+    state["tables"] = table_row[None]
+    state["lengths"] = jnp.asarray([prompt_total], jnp.int32)
+    logs, toks = [logits[0]], []
+    for i in range(steps):
+        tok = (int(jnp.argmax(logs[-1][: cfg.vocab_size]))
+               if teacher is None else teacher[i])
+        toks.append(tok)
+        lg, state = decode_step_paged(
+            cfg, params, state, jnp.asarray([tok]), rt, max_len
+        )
+        logs.append(lg[0])
+    return logs, toks
+
+
+@pytest.mark.parametrize("kv_dtype,rel_tol", [("int8", 0.04), ("fp8", 0.15)])
+@pytest.mark.parametrize("name", PAGED_FAMILIES)
+def test_quantized_pool_logit_error_within_tolerance(
+    arch_state, name, kv_dtype, rel_tol
+):
+    """Teacher-forced decode over a quantized pool stays within a measured
+    max-logit-error tolerance of the native pool (measured ~0.012 relative
+    for int8, ~0.045 for fp8 across these families; asserted at ~3x margin).
+    The prefill logits themselves are quantization-free (native ring cache),
+    so step 0 must be exact — only pool-reading decode steps may drift."""
+    cfg, params = arch_state(name)
+    rng = np.random.RandomState(13)
+    prompt = rng.randint(0, cfg.vocab_size, (11,)).astype(np.int32)
+    ref, toks = _paged_step_logits(cfg, params, prompt, "", steps=5)
+    got, _ = _paged_step_logits(
+        cfg, params, prompt, kv_dtype, steps=5, teacher=toks
+    )
+    np.testing.assert_array_equal(np.asarray(ref[0]), np.asarray(got[0]))
+    scale = max(float(jnp.max(jnp.abs(lg))) for lg in ref)
+    err = max(
+        float(jnp.max(jnp.abs(a - b))) for a, b in zip(ref[1:], got[1:])
+    )
+    assert 0.0 < err <= rel_tol * scale, (err, scale)
+
+
+@pytest.mark.parametrize("name", DENSE_FAMILIES)
+def test_quantized_kv_dtype_noop_on_dense_fallback(arch_state, name):
+    """Dense-fallback families never touch the page pool: a kv_dtype on the
+    engine config must change nothing (dense compiles are shared via
+    ``serve.dense._dense_rt`` stripping the field before cache keying)."""
+    cfg, params = arch_state(name)
+    rng = np.random.RandomState(37)
+    prompts = [rng.randint(0, cfg.vocab_size, (7,)).astype(np.int32)
+               for _ in range(2)]
+    fe_list = [
+        rng.randn(cfg.frontend_tokens, cfg.d_model).astype(np.float32)
+        if (cfg.frontend is not None or cfg.is_encdec) else None
+        for _ in prompts
+    ]
+    outs = {}
+    for kv_dtype in ("", "int8"):
+        eng = ServeEngine(
+            cfg, params, RT, EngineConfig(max_slots=2, kv_dtype=kv_dtype)
+        )
+        assert not eng.paged
+        rids = [eng.submit(p, 5, frontend_embeds=fe)
+                for p, fe in zip(prompts, fe_list)]
+        out = eng.run()
+        outs[kv_dtype] = [out[r] for r in rids]
+    for a, b in zip(outs[""], outs["int8"]):
+        np.testing.assert_array_equal(a, b)
+
+
 # ------------------------------------------------------- sharded serving
 def test_replica_router_least_loaded_deterministic():
     """Least-loaded routing over caller-supplied loads, lowest index on

@@ -13,6 +13,9 @@ already locked to one CPU device):
   the single engine.
 * MQA families (kv heads don't divide TP) fall back to a replicated pool
   and still serve correctly.
+* Quantized (int8) pools shard codes AND scale buffers over the model
+  axis: token-identical to the single-device int8 engine, per-device
+  bytes halved exactly.
 """
 import subprocess
 import sys
@@ -138,6 +141,32 @@ PREFIX_SCRIPT = HEADER.format(arch="moonshot-v1-16b-a3b") + textwrap.dedent(
     """
 )
 
+QUANT_SCRIPT = HEADER.format(arch="moonshot-v1-16b-a3b") + textwrap.dedent(
+    """
+    # int8 KV pool under TP=2: the scale buffers shard their kv-head axis
+    # alongside the code pools (sharding.specs.pool_scale_spec), so the
+    # sharded engine is token-identical to the single-device int8 engine
+    # and per-device pool bytes (codes + scales) halve exactly
+    eq = EngineConfig(max_slots=2, page_size=8, num_pages=33, max_len=64,
+                      inner_steps=4, kv_dtype="int8")
+    eng1, out1 = run_engine(None, eq)
+    eng2, out2 = run_engine(make_serve_mesh(1, 2), eq)
+    for a, b in zip(out1, out2):
+        np.testing.assert_array_equal(a, b)   # TP=2 == TP=1 at int8
+    b1 = eng1.kv_pool_bytes_per_device()
+    b2 = eng2.kv_pool_bytes_per_device()
+    assert b1 == 2 * b2, (b1, b2)             # codes AND scales shard
+    leaves = jax.tree.leaves(eng2._dev["caches"])
+    assert any(l.dtype == jnp.int8 for l in leaves)      # quantized pool
+    assert any(l.ndim == 4 and l.dtype == jnp.float32    # (R, N, page, Kv)
+               for l in leaves)                          # scale buffers
+    for eng in (eng1, eng2):
+        eng.pool.check()
+        assert eng.pool.pages_in_use == 0
+    print("QUANT_SHARDED_OK", b1, b2)
+    """
+)
+
 MQA_SCRIPT = HEADER.format(arch="granite-8b") + textwrap.dedent(
     """
     assert cfg.n_kv_heads == 1                # MQA: heads can't divide TP=2
@@ -177,6 +206,10 @@ def test_replicated_engine_routes_and_matches_single():
 
 def test_mqa_family_falls_back_to_replicated_pool():
     _run(MQA_SCRIPT, "MQA_FALLBACK_OK")
+
+
+def test_quantized_pool_token_identical_and_bytes_halved_under_tp():
+    _run(QUANT_SCRIPT, "QUANT_SHARDED_OK")
 
 
 def test_prefix_cache_and_chunked_prefill_token_identical_under_tp():
