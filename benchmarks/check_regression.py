@@ -5,7 +5,8 @@ against their committed references.
         --fresh BENCH_serve.fresh.json [--tolerance 20]
 
 ``--ref``/``--fresh`` repeat pairwise, so one invocation gates every
-snapshot (kernels, serve, serve_sharded, serve_prefix):
+snapshot (kernels, serve, serve_sharded, serve_prefix, serve_quant,
+serve_trace, train_pipeline):
 
     python -m benchmarks.check_regression \
         --ref BENCH_serve.json --fresh BENCH_serve.fresh.json \

@@ -6,7 +6,11 @@ tails. Reported:
 
 * mean TTFT with the cache off (every request prefills its full prompt)
   vs on+warm (every request adopts the shared prefix and prefills only its
-  tail) — the timed claim, `ttft_ratio` recorded in the derived string;
+  tail) — the timed claim, `ttft_ratio` recorded in the derived string.
+  TTFT spans submit -> first token (queue wait included), so the
+  `batch_ttft_ms` numbers count waiting behind co-submitted requests; the
+  headline sequential numbers submit one at a time into an idle engine, so
+  for them the two origins coincide;
 * `serve_prefix/savings` — an exact accounting row: hit rate, cached-token
   fraction, and prefill FLOPs saved (cached tokens x 2 x param count, the
   standard matmul-dominated estimate). These are scheduling facts, not

@@ -117,7 +117,10 @@ def _capacity_section(cfg) -> None:
         page, cfg.n_kv_heads, cfg.head_dim, cfg.n_layers, "bf16"
     )
     max_len = -(-(max_prompt + max_new) // page) * page
-    budget = 8 * (max_len // page) * page_b
+    # budget covers 8 full horizons PLUS the pool's null page — since the
+    # sized_for_budget overspend fix, the null page is charged to the
+    # budget, so seating 8 requests takes (1 + 8*pages_per_req) pages
+    budget = (1 + 8 * (max_len // page)) * page_b
     e_bf16 = EngineConfig.sized_for_budget(
         cfg, max_prompt, max_new, pool_bytes=budget, page_size=page,
         kv_dtype="bf16",

@@ -4,7 +4,21 @@ from repro.serve.engine import (  # noqa: F401
     ServeEngine,
     paged_supported,
 )
+from repro.serve.frontend import (  # noqa: F401
+    AsyncFrontend,
+    StreamHandle,
+    TraceRequest,
+    bursty_trace,
+    goodput,
+    poisson_trace,
+    replay_trace,
+)
 from repro.serve.pool import PagePool, PoolExhausted  # noqa: F401
 from repro.serve.prefix import PrefixCache  # noqa: F401
 from repro.serve.sampling import sample_slots, sample_token  # noqa: F401
-from repro.serve.scheduler import ReplicaRouter, Request, Scheduler  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    QueueFull,
+    ReplicaRouter,
+    Request,
+    Scheduler,
+)

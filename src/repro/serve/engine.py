@@ -15,6 +15,25 @@ request's token stream independent of what else shares the batch, so engine
 output is identical to running the request alone (the dense path can only
 promise that for greedy decoding).
 
+Tick API + async intake
+-----------------------
+The drain loop is reentrant: one ``step()`` is a complete engine tick
+(admit -> top-up -> one jitted chunk -> collect -> retire) that an external
+driver — ``serve.frontend.AsyncFrontend`` — can call between its own
+events. ``run()`` is now just ``run_begin(); while busy: step();
+run_finalize()``. Requests carry a QoS tier (interactive beats batch at
+admission, strictly and deterministically — see ``serve.scheduler``) and an
+optional per-token callback ``on_token(rid, tokens, done)`` invoked as
+tokens are collected from each chunk; delivered-token counts survive
+preemption, so a preempted-and-recomputed request never re-delivers tokens
+it already streamed (decode is deterministic, the regenerated prefix is
+identical). ``cancel(rid)`` removes a queued request or stops an in-flight
+one mid-decode, freeing its pool pages immediately; it is safe to call
+from inside an ``on_token`` callback (early stop). Latency accounting:
+``stats["ttft_s"]`` is measured from ``submit()`` wall time on every path
+(queue wait included; preempt-then-readmit spans the original submit),
+while ``stats["prefill_s"]`` keeps the prefill compute time separately.
+
 Families whose decode state is not a KV cache (SSM / RG-LRU recurrences,
 enc-dec cross caches) fall back to the dense path (``paged=False``), grouped
 into equal-prompt-length batches.
@@ -131,6 +150,10 @@ class EngineConfig:
     # exactly once at write time, so batched==alone determinism holds at
     # any fixed kv_dtype (see kernels.paged_attention.quant).
     kv_dtype: str = "bf16"
+    # Admission backpressure: bound on EACH QoS tier's wait queue (0 =
+    # unbounded). submit() raises scheduler.QueueFull at the bound; the
+    # async front-end turns that into an awaitable retry.
+    max_queue: int = 0
 
     @property
     def chunk_tokens(self) -> int:
@@ -191,7 +214,13 @@ class EngineConfig:
             page_size, cfg.n_kv_heads, cfg.head_dim, cfg.n_layers,
             kv_dtype, native_itemsize,
         )
-        budget_pages = pool_bytes // page_bytes            # excl. null page
+        # The returned config allocates 1 + slots * per_slot pages and the
+        # reserved null page costs page_bytes like any other, so it must be
+        # charged against the budget too — otherwise the pool overspends
+        # pool_bytes by up to one page. (The max(1, .) floor still returns
+        # a working 1-slot config for budgets too small to honor; callers
+        # sizing to a real HBM budget pass adequate pool_bytes.)
+        budget_pages = pool_bytes // page_bytes - 1        # null page charged
         per_slot = math.ceil(pages_per_req * headroom)
         slots = max(1, int(budget_pages) // per_slot)
         num_pages = 1 + slots * per_slot
@@ -285,12 +314,20 @@ class ServeEngine:
             )
             self.params = jax.tree.map(jax.device_put, params, shardings)
         self.pool = PagePool(engine.num_pages, engine.page_size)
-        self.scheduler = Scheduler(policy=engine.policy)
+        self.scheduler = Scheduler(
+            policy=engine.policy, max_queue=engine.max_queue
+        )
         self._next_rid = 0
         self._admit_count = 0
         self._slots: List[Optional[_Slot]] = [None] * engine.max_slots
         self._outputs: Dict[int, List[int]] = {}
-        self.stats: Dict[str, Any] = {"ttft_s": {}, "kv_bytes": {}}
+        self._callbacks: Dict[int, Any] = {}   # rid -> on_token(rid, toks, done)
+        self._emitted: Dict[int, int] = {}     # tokens DELIVERED per rid
+        self._completed_run: set = set()
+        self._run_t0: Optional[float] = None   # open measurement window
+        self.stats: Dict[str, Any] = {
+            "ttft_s": {}, "prefill_s": {}, "kv_bytes": {},
+        }
         if self.paged:
             self._dev = init_paged_state(
                 cfg, engine.max_slots, self.rt,
@@ -365,15 +402,26 @@ class ServeEngine:
         tokens: np.ndarray,
         max_new: int,
         frontend_embeds: Optional[np.ndarray] = None,
+        qos: str = "interactive",
+        on_token=None,
     ) -> int:
+        """Enqueue a request; returns its rid. ``qos`` picks the admission
+        tier (``interactive`` | ``batch``); ``on_token(rid, tokens, done)``
+        is called with each newly delivered token batch (``done`` is None
+        while streaming, then ``"complete"`` / ``"cancelled"`` exactly
+        once). Raises before ANY engine state changes — capacity rejects
+        (ValueError) and backpressure (scheduler.QueueFull) leave the rid
+        counter, queues, and callbacks untouched, which is what makes
+        replica routing transactional one level up."""
         assert max_new >= 1
         req = Request(
             rid=self._next_rid,
             tokens=np.asarray(tokens, np.int32).reshape(-1),
             max_new=int(max_new),
             frontend_embeds=frontend_embeds,
+            qos=qos,
+            t_submit=time.perf_counter(),
         )
-        self._next_rid += 1
         if self.paged:
             total = self._prompt_total(req) + req.max_new - 1
             if total > self.ecfg.max_len:
@@ -385,38 +433,72 @@ class ServeEngine:
                     f"request needs {self.pool.pages_for(total)} pages "
                     f"> pool budget {self.pool.budget}"
                 )
-        self.scheduler.add(req)
+        self.scheduler.add(req)            # may raise QueueFull
+        self._next_rid += 1
+        if on_token is not None:
+            self._callbacks[req.rid] = on_token
         return req.rid
 
-    def run(self) -> Dict[int, np.ndarray]:
-        """Drain the queue; returns {rid: generated tokens (max_new,)} for
-        the requests completed by THIS call (the engine is reusable —
-        submit more and run again; ``self.stats`` throughput fields are
-        likewise per-run, while the per-rid dicts accumulate).
-        """
-        if not self.paged:
-            return self._run_dense()
+    @property
+    def busy(self) -> bool:
+        """Work pending: queued requests or seated decode slots."""
+        if self.paged:
+            return bool(
+                len(self.scheduler)
+                or any(s is not None for s in self._slots)
+            )
+        return bool(len(self.scheduler))
+
+    def run_begin(self) -> None:
+        """Open a measurement window: per-run counters snapshot here so a
+        second submit()/run() cycle on the same engine reports its own
+        throughput/latency, not a mix with the previous run's."""
         self._completed_run = set()
-        t0 = time.perf_counter()
-        # per-run deltas so a second submit()/run() cycle on the same engine
-        # reports its own throughput, not a mix with the previous run's
-        admit0 = self._admit_count
-        evict0 = self.stats.get("evictions", 0)
-        discard0 = self.stats.get("discarded_tokens", 0)
-        decode_tokens = 0
-        while len(self.scheduler) or any(self._slots):
-            self._admit_free_slots()
-            self._topup_or_evict()
-            emits, remaining = self._step()
-            decode_tokens += self._collect(emits)
-            self._retire(remaining)
-        wall = time.perf_counter() - t0
+        self._run_t0 = time.perf_counter()
+        self._run_admit0 = self._admit_count
+        self._run_evict0 = self.stats.get("evictions", 0)
+        self._run_discard0 = self.stats.get("discarded_tokens", 0)
+        self._run_decode_tokens = 0
+
+    def step(self) -> Dict[str, Any]:
+        """ONE engine tick: admit -> top-up -> one jitted chunk -> collect
+        -> retire. Reentrant and externally drivable (the async front-end
+        calls this between its own events); an idle engine returns
+        ``busy=False`` without touching the device. Opens a measurement
+        window implicitly if none is open."""
+        if not self.busy:
+            return {"busy": False, "finished": [], "decoded": 0}
+        if self._run_t0 is None:
+            self.run_begin()
+        if not self.paged:
+            return self._step_dense()
+        self._admit_free_slots()
+        self._topup_or_evict()
+        emits, remaining = self._device_step()
+        self._run_decode_tokens += self._collect(emits)
+        finished = self._retire(remaining)
+        return {
+            "busy": True,
+            "finished": finished,
+            "decoded": int((emits >= 0).sum()),
+        }
+
+    def run_finalize(self) -> Dict[int, np.ndarray]:
+        """Close the measurement window: compute per-run throughput/latency
+        stats and return {rid: generated tokens} for the requests completed
+        SINCE run_begin(). No-op ({}) when no window is open."""
+        if self._run_t0 is None:
+            return {}
+        wall = time.perf_counter() - self._run_t0
         # throughput counts DELIVERED tokens; work thrown away by
         # preemption is reported separately, not inflated into tokens/s
-        discarded = self.stats.get("discarded_tokens", 0) - discard0
-        n_prefill = (self._admit_count - admit0) - (
-            self.stats.get("evictions", 0) - evict0
+        discarded = (
+            self.stats.get("discarded_tokens", 0) - self._run_discard0
         )
+        n_prefill = (self._admit_count - self._run_admit0) - (
+            self.stats.get("evictions", 0) - self._run_evict0
+        )
+        decode_tokens = self._run_decode_tokens
         self.stats["decode_tokens"] = decode_tokens - discarded
         self.stats["wall_s"] = wall
         self.stats["tokens_per_s"] = (
@@ -425,10 +507,101 @@ class ServeEngine:
         self.stats["pool_high_water_pages"] = self.pool.high_water
         if self.prefix is not None:
             self.stats.update(self.prefix.stats())
+        run_rids = sorted(self._completed_run)
+        # per-run latency aggregates: benches must read these (or index
+        # ttft_s by this run's rids) — never average the accumulated
+        # per-rid dict across runs
+        ttfts = [
+            self.stats["ttft_s"][r] for r in run_rids
+            if r in self.stats["ttft_s"]
+        ]
+        self.stats["run_completed"] = len(run_rids)
+        self.stats["run_mean_ttft_s"] = (
+            float(np.mean(ttfts)) if ttfts else 0.0
+        )
+        self._run_t0 = None
         return {
             rid: np.asarray(self._outputs[rid], np.int32)
-            for rid in sorted(self._completed_run)
+            for rid in run_rids
         }
+
+    def run(self) -> Dict[int, np.ndarray]:
+        """Drain the queue; returns {rid: generated tokens (max_new,)} for
+        the requests completed by THIS call (the engine is reusable —
+        submit more and run again; ``self.stats`` throughput fields are
+        likewise per-run, while the per-rid dicts accumulate).
+        """
+        self.run_begin()
+        while self.busy:
+            self.step()
+        return self.run_finalize()
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request: remove it from the wait queue, or stop it
+        mid-flight and free its pool pages immediately. Already-delivered
+        tokens stand; the request's callback (if any) gets a final
+        ``done="cancelled"`` event. Returns False for unknown or already-
+        finished rids. Safe to call from inside an ``on_token`` callback
+        (early stop) — the current tick's collect/retire skip the vacated
+        slot. Dense fallback: only still-queued requests can be cancelled
+        (a launched dense batch is one compiled call)."""
+        req = self.scheduler.cancel(rid)
+        if req is not None:
+            self.stats["cancelled"] = self.stats.get("cancelled", 0) + 1
+            self._deliver_done(rid, "cancelled")
+            return True
+        if not self.paged:
+            return False
+        for slot_id, slot in enumerate(self._slots):
+            if slot is None or slot.rid != rid:
+                continue
+            if (
+                self.prefix is not None and self._use_chunked(slot.req)
+                and slot.phase == "decode"
+            ):
+                # the full prompt was computed — its pages are as cacheable
+                # as a retired request's (generated-token pages stay out)
+                n_full = slot.req.prompt_len // self.ecfg.page_size
+                self.prefix.insert(
+                    slot.req.tokens,
+                    self.pool.seq_pages(slot.sid)[:n_full],
+                )
+            self.pool.free(slot.sid)
+            d = self._dev
+            d["tables"] = d["tables"].at[slot_id].set(0)
+            d["lengths"] = d["lengths"].at[slot_id].set(0)
+            d["remaining"] = d["remaining"].at[slot_id].set(0)
+            self._slots[slot_id] = None
+            self.stats["cancelled"] = self.stats.get("cancelled", 0) + 1
+            self._deliver_done(rid, "cancelled")
+            return True
+        return False
+
+    # -------------------------------------------------- token delivery
+    def _deliver(self, rid: int) -> None:
+        """Push not-yet-delivered output tokens to the request's callback.
+        ``_emitted`` tracks the delivered count independently of
+        ``_outputs`` (which eviction clears), so a preempted request whose
+        deterministic recompute regenerates the same prefix never
+        re-delivers tokens the consumer already saw."""
+        toks = self._outputs.get(rid)
+        if toks is None:
+            return
+        sent = self._emitted.get(rid, 0)
+        if len(toks) <= sent:
+            return
+        fresh = toks[sent:]
+        self._emitted[rid] = len(toks)
+        cb = self._callbacks.get(rid)
+        if cb is not None:
+            cb(rid, list(fresh), None)
+
+    def _deliver_done(self, rid: int, reason: str) -> None:
+        self._deliver(rid)
+        cb = self._callbacks.pop(rid, None)
+        self._emitted.pop(rid, None)
+        if cb is not None:
+            cb(rid, [], reason)
 
     # ----------------------------------------------------------- internals
     def _prompt_total(self, req: Request) -> int:
@@ -681,7 +854,12 @@ class ServeEngine:
             cfg.vocab_size,
         )
         tok0.block_until_ready()
-        self.stats["ttft_s"][req.rid] = time.perf_counter() - t0
+        now = time.perf_counter()
+        # TTFT from SUBMIT time — queue wait included — on every path; a
+        # readmitted-after-preemption request whose first token was already
+        # delivered keeps its original (honest) TTFT, see _evict
+        self.stats["ttft_s"].setdefault(req.rid, now - req.t_submit)
+        self.stats["prefill_s"][req.rid] = now - t0
 
         table_row = jnp.asarray(
             self.pool.table(sid, self._dev["tables"].shape[1]), jnp.int32
@@ -701,6 +879,7 @@ class ServeEngine:
         self._slots[slot_id] = _Slot(req.rid, sid, req, self._admit_count)
         self._admit_count += 1
         self._outputs[req.rid] = [int(tok0[0])]
+        self._deliver(req.rid)   # last: a callback may cancel() this slot
 
     def _topup_or_evict(self) -> None:
         """Ensure every active slot's pages cover this chunk's writes;
@@ -762,7 +941,16 @@ class ServeEngine:
                 + len(self._outputs[slot.rid]) - 1
             )
             del self._outputs[slot.rid]
-        self.stats["ttft_s"].pop(slot.rid, None)
+        # If the first token was never DELIVERED (no callback consumed it),
+        # the recompute after readmission is what the user waits for: drop
+        # the stale TTFT so it is re-measured — still from req.t_submit, so
+        # preempt-then-readmit TTFT spans the original submit. If it WAS
+        # delivered, the consumer already saw it at the recorded time and
+        # that TTFT stays (the recompute is invisible to them:
+        # _emitted suppresses re-delivery of the regenerated prefix).
+        if self._emitted.get(slot.rid, 0) == 0:
+            self.stats["ttft_s"].pop(slot.rid, None)
+            self.stats["prefill_s"].pop(slot.rid, None)
         self.scheduler.requeue_front(slot.req)
         d = self._dev
         d["tables"] = d["tables"].at[slot_id].set(0)
@@ -803,8 +991,8 @@ class ServeEngine:
             NamedSharding(self.rt.mesh, PartitionSpec(*([None] * arr.ndim))),
         )
 
-    def _step(self):
-        """One engine step: a decode-only chunk, or — when a slot is mid-
+    def _device_step(self):
+        """One device dispatch: a decode-only chunk, or — when a slot is mid-
         prefill — the fused program (its next prompt chunk + the same decode
         chunk). Oldest-admitted prefilling slot goes first (FIFO fairness:
         one chunk per step keeps decode stalls bounded by one chunk)."""
@@ -873,7 +1061,11 @@ class ServeEngine:
             cfg.vocab_size,
         )
         tok0.block_until_ready()
-        self.stats["ttft_s"][req.rid] = time.perf_counter() - slot.t_admit
+        now = time.perf_counter()
+        # TTFT from SUBMIT (queue wait + admission + every chunk), matching
+        # the legacy path's origin; prefill compute time kept separately
+        self.stats["ttft_s"].setdefault(req.rid, now - req.t_submit)
+        self.stats["prefill_s"][req.rid] = now - slot.t_admit
         d = self._dev
         d["lengths"] = d["lengths"].at[slot_id].set(req.prompt_len)
         d["remaining"] = d["remaining"].at[slot_id].set(req.max_new - 1)
@@ -882,6 +1074,7 @@ class ServeEngine:
         d["steps"] = d["steps"].at[slot_id].set(1)  # fold 0 used just above
         slot.phase = "decode"
         self._outputs[req.rid] = [int(tok0[0])]
+        self._deliver(req.rid)   # last: a callback may cancel() this slot
 
     def _collect(self, emits: np.ndarray) -> int:
         n = 0
@@ -892,9 +1085,11 @@ class ServeEngine:
             toks = toks[toks >= 0]
             self._outputs[slot.rid].extend(int(t) for t in toks)
             n += len(toks)
+            self._deliver(slot.rid)  # may cancel() this slot (early stop)
         return n
 
-    def _retire(self, remaining: np.ndarray) -> None:
+    def _retire(self, remaining: np.ndarray) -> List[int]:
+        finished: List[int] = []
         for slot_id, slot in enumerate(self._slots):
             if slot is None or slot.phase == "prefill" or remaining[slot_id] > 0:
                 continue
@@ -917,55 +1112,57 @@ class ServeEngine:
             d["tables"] = d["tables"].at[slot_id].set(0)
             d["lengths"] = d["lengths"].at[slot_id].set(0)
             self._slots[slot_id] = None
+            finished.append(slot.rid)
+            self._deliver_done(slot.rid, "complete")
+        return finished
 
     # ------------------------------------------------------ dense fallback
-    def _run_dense(self) -> Dict[int, np.ndarray]:
-        """Group queued requests into equal-prompt-length batches and run the
-        cached dense generate (contiguous (B, total) caches)."""
+    def _step_dense(self) -> Dict[str, Any]:
+        """One dense-fallback tick: pop the head request plus every queued
+        request sharing its (prompt_len, max_new) shape — they run as one
+        cached compiled generate (contiguous (B, total) caches) — then
+        deliver whole outputs. Matching requests beyond ``max_slots`` wait
+        for the next tick."""
         cfg, ecfg = self.cfg, self.ecfg
-        t0 = time.perf_counter()
-        decode_tokens = 0
-        reqs: List[Request] = []
-        while len(self.scheduler):
-            reqs.append(self.scheduler.pop())
-        groups: Dict[Tuple[int, int], List[Request]] = {}
-        for r in reqs:
-            groups.setdefault((r.prompt_len, r.max_new), []).append(r)
-        for (plen, max_new), members in groups.items():
-            for i in range(0, len(members), ecfg.max_slots):
-                part = members[i : i + ecfg.max_slots]
-                batch = {
-                    "tokens": jnp.asarray(
-                        np.stack([r.tokens for r in part]), jnp.int32
-                    )
-                }
-                if part[0].frontend_embeds is not None:
-                    batch["frontend_embeds"] = jnp.asarray(
-                        np.stack([r.frontend_embeds for r in part])
-                    )
-                tokens, _, ttft = dense_mod.generate_dense(
-                    cfg, self.params, batch, self.rt, max_new,
-                    temperature=ecfg.temperature, seed=ecfg.seed,
-                )
-                tokens.block_until_ready()
-                total = plen + max_new + (
-                    cfg.frontend_tokens if cfg.frontend == "vision" else 0
-                )
-                kv = self._dense_kv_bytes(total)
-                for b, r in enumerate(part):
-                    self._outputs[r.rid] = list(np.asarray(tokens[b]))
-                    self.stats["ttft_s"][r.rid] = ttft
-                    self.stats["kv_bytes"][r.rid] = kv
-                    decode_tokens += max_new - 1
-        wall = time.perf_counter() - t0
-        done = [r.rid for r in reqs]
-        self.stats["decode_tokens"] = decode_tokens
-        self.stats["wall_s"] = wall
-        self.stats["tokens_per_s"] = (
-            decode_tokens + len(done)
-        ) / max(wall, 1e-9)
+        part = self.scheduler.pop_batch(ecfg.max_slots)
+        plen, max_new = part[0].prompt_len, part[0].max_new
+        batch = {
+            "tokens": jnp.asarray(
+                np.stack([r.tokens for r in part]), jnp.int32
+            )
+        }
+        if part[0].frontend_embeds is not None:
+            batch["frontend_embeds"] = jnp.asarray(
+                np.stack([r.frontend_embeds for r in part])
+            )
+        t_call = time.perf_counter()
+        tokens, _, pf_s = dense_mod.generate_dense(
+            cfg, self.params, batch, self.rt, max_new,
+            temperature=ecfg.temperature, seed=ecfg.seed,
+        )
+        tokens.block_until_ready()
+        total = plen + max_new + (
+            cfg.frontend_tokens if cfg.frontend == "vision" else 0
+        )
+        kv = self._dense_kv_bytes(total)
+        finished: List[int] = []
+        for b, r in enumerate(part):
+            self._outputs[r.rid] = [int(t) for t in np.asarray(tokens[b])]
+            # generate_dense's returned latency is its prefill(+first
+            # sample) wall time from call start; TTFT spans from submit,
+            # so queue wait before this tick is included
+            self.stats["ttft_s"][r.rid] = t_call + pf_s - r.t_submit
+            self.stats["prefill_s"][r.rid] = pf_s
+            self.stats["kv_bytes"][r.rid] = kv
+            self._run_decode_tokens += max_new - 1
+            self._admit_count += 1
+            self._completed_run.add(r.rid)
+            finished.append(r.rid)
+            self._deliver(r.rid)
+            self._deliver_done(r.rid, "complete")
         return {
-            rid: np.asarray(self._outputs[rid], np.int32) for rid in done
+            "busy": True, "finished": finished,
+            "decoded": len(part) * max_new,
         }
 
     def _dense_kv_bytes(self, total: int) -> int:
@@ -983,10 +1180,13 @@ class ReplicatedServeEngine:
     request alone, routing can never change tokens — only latency — so the
     replicated engine inherits the batched==alone determinism guarantee.
 
-    ``run()`` drains replicas sequentially from this host; on real hardware
-    each replica's chunk executes on its own device slice, so a multi-
-    controller launcher can drive them concurrently without any change to
-    the engines themselves.
+    ``step()`` ticks every replica round-robin from this host (``run()``
+    just loops it); on real hardware each replica's chunk executes on its
+    own device slice, so a multi-controller launcher can drive them
+    concurrently without any change to the engines themselves. Routing is
+    transactional: if the chosen engine's ``submit`` raises (capacity
+    reject, QueueFull backpressure), the routing decision is rolled back
+    and no global rid is consumed.
     """
 
     def __init__(
@@ -1017,50 +1217,122 @@ class ReplicatedServeEngine:
         tokens: np.ndarray,
         max_new: int,
         frontend_embeds: Optional[np.ndarray] = None,
+        qos: str = "interactive",
+        on_token=None,
     ) -> int:
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         idx = self.router.route(
             [e.outstanding_tokens for e in self.engines]
         )
-        local = self.engines[idx].submit(
-            tokens, max_new, frontend_embeds=frontend_embeds
-        )
         rid = self._next_rid
+        cb = None
+        if on_token is not None:
+            # translate the replica-local rid back to the global one
+            def cb(_local, toks, done, _g=rid, _f=on_token):
+                _f(_g, toks, done)
+        try:
+            local = self.engines[idx].submit(
+                tokens, max_new, frontend_embeds=frontend_embeds,
+                qos=qos, on_token=cb,
+            )
+        except Exception:
+            # transactional routing: a rejected request (capacity ValueError,
+            # QueueFull backpressure) must not inflate the chosen replica's
+            # routed count or consume a global rid
+            self.router.unroute(idx)
+            raise
         self._next_rid += 1
         self._where[rid] = (idx, local)
         return rid
 
-    def run(self) -> Dict[int, np.ndarray]:
-        # run every replica, queued or not: an empty run resets the
-        # engine's per-run stats, so the aggregates below never mix a
-        # previous run's numbers into this one
+    def cancel(self, rid: int) -> bool:
+        if rid not in self._where:
+            return False
+        idx, local = self._where[rid]
+        return self.engines[idx].cancel(local)
+
+    @property
+    def busy(self) -> bool:
+        return any(e.busy for e in self.engines)
+
+    def run_begin(self) -> None:
+        # open windows on every replica, queued or not: an empty window
+        # still resets that engine's per-run stats, so the aggregates in
+        # run_finalize never mix a previous run's numbers into this one
+        for e in self.engines:
+            e.run_begin()
+
+    def step(self) -> Dict[str, Any]:
+        """One tick across all replicas (round-robin from this host; on
+        real hardware each replica's chunk runs on its own device slice)."""
+        if self.busy and any(e._run_t0 is None for e in self.engines):
+            self.run_begin()
+        finished: List[int] = []
+        busy = False
+        l2g = {
+            (idx, local): rid
+            for rid, (idx, local) in self._where.items()
+        }
+        for idx, e in enumerate(self.engines):
+            rep = e.step()
+            busy = busy or rep["busy"]
+            finished.extend(
+                l2g[(idx, lr)] for lr in rep["finished"]
+                if (idx, lr) in l2g
+            )
+        return {"busy": busy, "finished": finished}
+
+    def run_finalize(self) -> Dict[int, np.ndarray]:
         outs: List[Dict[int, np.ndarray]] = [
-            eng.run() for eng in self.engines
+            eng.run_finalize() for eng in self.engines
         ]
         merged = {
             rid: outs[idx][local]
             for rid, (idx, local) in self._where.items()
             if local in outs[idx]
         }
-        # replicas are drained sequentially from this host, so aggregate
-        # throughput is total delivered work over total wall (a concurrent
-        # multi-controller drive would approach the per-replica sum)
-        wall = sum(e.stats.get("wall_s", 0.0) for e in self.engines)
+        # replicas are stepped round-robin from this host, so their
+        # measurement windows overlap: the elapsed window is the max
+        # per-replica wall, and aggregate throughput is total delivered
+        # work over it (a concurrent multi-controller drive would approach
+        # the per-replica sum)
+        wall = max(
+            [e.stats.get("wall_s", 0.0) for e in self.engines] + [0.0]
+        )
         delivered = sum(
             e.stats.get("decode_tokens", 0) for e in self.engines
+        )
+        completed = sum(
+            e.stats.get("run_completed", 0) for e in self.engines
         )
         self.stats = {
             "replica_requests": list(self.router.routed),
             "tokens_per_s": delivered / max(wall, 1e-9),
             "wall_s": wall,
             "decode_tokens": delivered,
+            "run_completed": completed,
+            "run_mean_ttft_s": (
+                sum(
+                    e.stats.get("run_mean_ttft_s", 0.0)
+                    * e.stats.get("run_completed", 0)
+                    for e in self.engines
+                ) / max(completed, 1)
+            ),
             "evictions": sum(
                 e.stats.get("evictions", 0) for e in self.engines
+            ),
+            "cancelled": sum(
+                e.stats.get("cancelled", 0) for e in self.engines
             ),
             "ttft_s": {
                 rid: self.engines[idx].stats["ttft_s"][local]
                 for rid, (idx, local) in self._where.items()
                 if local in self.engines[idx].stats["ttft_s"]
+            },
+            "prefill_s": {
+                rid: self.engines[idx].stats["prefill_s"][local]
+                for rid, (idx, local) in self._where.items()
+                if local in self.engines[idx].stats["prefill_s"]
             },
             "kv_pool_bytes_per_device": max(
                 e.stats.get("kv_pool_bytes_per_device", 0)
@@ -1078,3 +1350,9 @@ class ReplicatedServeEngine:
             if vals:
                 self.stats[key] = sum(vals)
         return merged
+
+    def run(self) -> Dict[int, np.ndarray]:
+        self.run_begin()
+        while self.busy:
+            self.step()
+        return self.run_finalize()

@@ -1,0 +1,378 @@
+"""Async serving front-end over the engine's reentrant tick loop.
+
+The engine stays synchronous — one host thread, one jitted chunk at a time.
+What this layer adds is *intake*: an asyncio driver that calls
+``engine.step()`` and yields to the event loop between ticks, so client
+coroutines submit, stream, and cancel between (never during) device chunks.
+Per-token engine callbacks push into per-request ``asyncio.Queue``s, giving
+each client an async iterator over its own token stream; admission
+backpressure (``scheduler.QueueFull``) becomes an awaitable retry inside
+``submit()``.
+
+Because the engine's per-request token stream is independent of batch
+composition (batched == alone), ANY interleaving of submissions with ticks
+yields identical per-request outputs — the async layer can only change
+latency, never tokens. The scheduling/accounting side is made reproducible
+separately: :func:`replay_trace` keys a traffic trace's arrivals (and
+cancels) to engine *ticks* — virtual time — so admission order, preemption
+and cancel counts, and SLO goodput (first token within ``slo_ticks`` of
+arrival) are machine-independent exact quantities, while wall-clock
+TTFT/TPOT are measured per request for the timed percentile rows. That
+split is what lets ``benchmarks/serve_trace_bench.py`` gate goodput/cancel
+rows EXACTLY in CI and latency rows within tolerance.
+
+TTFT here (and in ``engine.stats["ttft_s"]``) is submit -> first token,
+queue wait included; prefill compute time is the separate ``prefill_s``.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from typing import Any, AsyncIterator, Dict, List, Optional
+
+import numpy as np
+
+from repro.serve.scheduler import QueueFull
+
+__all__ = [
+    "AsyncFrontend", "StreamHandle", "TraceRequest",
+    "poisson_trace", "bursty_trace", "replay_trace", "goodput",
+]
+
+
+@dataclasses.dataclass
+class StreamHandle:
+    """One submitted request as seen by a client coroutine."""
+    rid: int
+    qos: str
+    max_new: int
+    t_submit: float                       # wall clock at engine accept
+    submit_tick: int                      # front-end tick at engine accept
+    queue: "asyncio.Queue" = dataclasses.field(
+        default_factory=asyncio.Queue
+    )
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    done: Optional[str] = None            # None | "complete" | "cancelled"
+    cancel_after: int = 0                 # early-stop after N tokens (0=off)
+    arrive_tick: int = 0                  # trace arrival (virtual time)
+    first_tick: Optional[int] = None
+    done_tick: Optional[int] = None
+    t_first: Optional[float] = None
+    t_last: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        return (
+            None if self.t_first is None else self.t_first - self.t_submit
+        )
+
+    @property
+    def tpot_s(self) -> Optional[float]:
+        """Mean time per output token AFTER the first (decode cadence)."""
+        if self.t_first is None or len(self.tokens) < 2:
+            return None
+        return (self.t_last - self.t_first) / (len(self.tokens) - 1)
+
+    def record(self, deferred_ticks: int = 0) -> Dict[str, Any]:
+        return {
+            "rid": self.rid,
+            "qos": self.qos,
+            "status": self.done or "open",
+            "n_tokens": len(self.tokens),
+            "max_new": self.max_new,
+            "arrive_tick": self.arrive_tick,
+            "submit_tick": self.submit_tick,
+            "first_tick": self.first_tick,
+            "done_tick": self.done_tick,
+            "deferred_ticks": deferred_ticks,
+            "ttft_s": self.ttft_s,
+            "tpot_s": self.tpot_s,
+            "tokens": np.asarray(self.tokens, np.int32),
+        }
+
+
+class AsyncFrontend:
+    """asyncio submission/streaming layer for ``ServeEngine`` /
+    ``ReplicatedServeEngine``.
+
+    Used either with a background drive task (``async with AsyncFrontend
+    (engine) as fe: ...`` — ticks run whenever the engine has work, client
+    coroutines interleave between them) or externally paced (construct
+    without entering, call :meth:`tick` yourself — what
+    :func:`replay_trace` does to keep virtual time deterministic).
+    """
+
+    def __init__(self, engine):
+        self.engine = engine
+        self.ticks = 0                     # virtual time: one per step()
+        self.handles: Dict[int, StreamHandle] = {}
+        self._space = asyncio.Event()      # set after each tick (backpressure)
+        self._wake = asyncio.Event()       # set on submit (idle drive wakes)
+        self._task: Optional[asyncio.Task] = None
+        self._closing = False
+
+    # ------------------------------------------------------------ sync core
+    def try_submit(
+        self,
+        tokens,
+        max_new: int,
+        *,
+        qos: str = "interactive",
+        frontend_embeds=None,
+        cancel_after: int = 0,
+    ) -> Optional[StreamHandle]:
+        """Non-blocking submit: a StreamHandle, or None under backpressure
+        (the tier queue is at ``EngineConfig.max_queue``)."""
+        handle = StreamHandle(
+            rid=-1, qos=qos, max_new=int(max_new), t_submit=0.0,
+            submit_tick=self.ticks, cancel_after=cancel_after,
+        )
+
+        def on_token(rid, toks, done):
+            self._on_event(handle, toks, done)
+
+        try:
+            rid = self.engine.submit(
+                tokens, max_new, frontend_embeds=frontend_embeds,
+                qos=qos, on_token=on_token,
+            )
+        except QueueFull:
+            return None
+        handle.rid = rid
+        handle.t_submit = time.perf_counter()
+        self.handles[rid] = handle
+        self._wake.set()
+        return handle
+
+    def _on_event(self, handle: StreamHandle, toks, done) -> None:
+        now = time.perf_counter()
+        if toks:
+            if handle.t_first is None:
+                handle.t_first = now
+                handle.first_tick = self.ticks
+            handle.t_last = now
+            handle.tokens.extend(int(t) for t in toks)
+            handle.queue.put_nowait(("tokens", list(toks)))
+            if (
+                handle.cancel_after
+                and handle.done is None
+                and len(handle.tokens) >= handle.cancel_after
+            ):
+                # early stop from inside the token callback: the engine
+                # frees the slot's pages now and emits done="cancelled"
+                self.engine.cancel(handle.rid)
+                return
+        if done is not None:
+            handle.done = done
+            handle.done_tick = self.ticks
+            handle.t_done = now
+            handle.queue.put_nowait(("done", done))
+
+    def tick(self) -> Dict[str, Any]:
+        """One engine tick; wakes any submitter awaiting backpressure.
+        Ticks an idle engine too — virtual time advances while waiting for
+        trace arrivals."""
+        report = self.engine.step()
+        self.ticks += 1
+        self._space.set()
+        return report
+
+    def cancel(self, handle: StreamHandle) -> bool:
+        return self.engine.cancel(handle.rid)
+
+    # ----------------------------------------------------------- async API
+    async def submit(
+        self,
+        tokens,
+        max_new: int,
+        *,
+        qos: str = "interactive",
+        frontend_embeds=None,
+        cancel_after: int = 0,
+    ) -> StreamHandle:
+        """Submit, awaiting under admission backpressure until the tier
+        queue has room (one retry per tick)."""
+        while True:
+            h = self.try_submit(
+                tokens, max_new, qos=qos, frontend_embeds=frontend_embeds,
+                cancel_after=cancel_after,
+            )
+            if h is not None:
+                return h
+            self._space.clear()
+            await self._space.wait()
+
+    async def stream(self, handle: StreamHandle) -> AsyncIterator[int]:
+        """Async iterator over the request's tokens; ends when the request
+        completes or is cancelled (already-delivered tokens stand)."""
+        while True:
+            kind, payload = await handle.queue.get()
+            if kind == "tokens":
+                for t in payload:
+                    yield t
+            else:
+                return
+
+    async def result(self, handle: StreamHandle) -> np.ndarray:
+        """Drain the stream; the full generated sequence."""
+        async for _ in self.stream(handle):
+            pass
+        return np.asarray(handle.tokens, np.int32)
+
+    async def _drive(self) -> None:
+        while not self._closing:
+            if self.engine.busy:
+                self.tick()
+                # yield so client coroutines run between device chunks
+                await asyncio.sleep(0)
+            else:
+                # drained: close the engine's measurement window (stats
+                # land), then sleep until the next submit
+                self.engine.run_finalize()
+                self._wake.clear()
+                await self._wake.wait()
+
+    async def __aenter__(self) -> "AsyncFrontend":
+        self._task = asyncio.create_task(self._drive())
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.close()
+
+    async def close(self) -> None:
+        self._closing = True
+        self._wake.set()
+        if self._task is not None:
+            try:
+                await self._task
+            finally:
+                self._task = None
+
+
+# --------------------------------------------------------------- traces
+@dataclasses.dataclass
+class TraceRequest:
+    """One arrival in a traffic trace. Times are engine TICKS (virtual),
+    which is what makes a replay's scheduling deterministic."""
+    arrive_tick: int
+    tokens: np.ndarray
+    max_new: int
+    qos: str = "interactive"
+    cancel_after: int = 0        # client cancels after N streamed tokens
+
+
+def _gen_common(
+    rng: np.random.RandomState,
+    n: int,
+    arrive_ticks: List[int],
+    *,
+    vocab: int,
+    prompt_range=(4, 24),
+    new_range=(4, 12),
+    qos_batch_frac: float = 0.0,
+    shared_prefix: Optional[np.ndarray] = None,
+    shared_frac: float = 0.0,
+    cancel_frac: float = 0.0,
+    cancel_after: int = 3,
+) -> List[TraceRequest]:
+    out: List[TraceRequest] = []
+    for i in range(n):
+        plen = int(rng.randint(prompt_range[0], prompt_range[1] + 1))
+        toks = rng.randint(0, vocab, (plen,)).astype(np.int32)
+        if shared_prefix is not None and rng.rand() < shared_frac:
+            toks = np.concatenate(
+                [np.asarray(shared_prefix, np.int32), toks]
+            )
+        out.append(TraceRequest(
+            arrive_tick=arrive_ticks[i],
+            tokens=toks,
+            max_new=int(rng.randint(new_range[0], new_range[1] + 1)),
+            qos="batch" if rng.rand() < qos_batch_frac else "interactive",
+            cancel_after=(
+                cancel_after if rng.rand() < cancel_frac else 0
+            ),
+        ))
+    return out
+
+
+def poisson_trace(
+    rng: np.random.RandomState, n: int, *, rate: float, vocab: int, **kw
+) -> List[TraceRequest]:
+    """Poisson arrivals: exponential inter-arrival gaps with mean
+    ``1/rate`` ticks, plus mixed prompt/output lengths and optional
+    shared-prefix / QoS / cancel populations (see ``_gen_common``)."""
+    t = 0.0
+    ticks = []
+    for _ in range(n):
+        t += rng.exponential(1.0 / rate)
+        ticks.append(int(t))
+    return _gen_common(rng, n, ticks, vocab=vocab, **kw)
+
+
+def bursty_trace(
+    rng: np.random.RandomState, n: int, *, burst: int, gap: int,
+    vocab: int, **kw,
+) -> List[TraceRequest]:
+    """Bursty arrivals: ``burst`` simultaneous requests every ``gap``
+    ticks — the queue-depth / backpressure stressor."""
+    ticks = [(i // burst) * gap for i in range(n)]
+    return _gen_common(rng, n, ticks, vocab=vocab, **kw)
+
+
+async def replay_trace(engine, trace: List[TraceRequest]):
+    """Replay a trace against an engine in virtual (tick) time.
+
+    Drives ticks itself (no background task) so the interleaving of
+    arrivals, admissions, cancels, and chunks is a pure function of the
+    trace — an idle engine's ticks still advance virtual time toward the
+    next arrival, and an arrival hitting backpressure retries each tick
+    (in arrival order) until admitted, with its deferral counted.
+
+    Returns ``(records, frontend)`` where records[i] is
+    ``trace[i]``'s :meth:`StreamHandle.record` (tick-exact fields for
+    accounting, wall-clock ttft/tpot for timed rows).
+    """
+    fe = AsyncFrontend(engine)
+    order = sorted(range(len(trace)), key=lambda i: (trace[i].arrive_tick, i))
+    pending = list(order)
+    handles: Dict[int, StreamHandle] = {}
+    deferred: Dict[int, int] = {}
+    while pending or engine.busy:
+        while pending and trace[pending[0]].arrive_tick <= fe.ticks:
+            i = pending[0]
+            tr = trace[i]
+            h = fe.try_submit(
+                tr.tokens, tr.max_new, qos=tr.qos,
+                cancel_after=tr.cancel_after,
+            )
+            if h is None:
+                # backpressure: this arrival (and, FIFO, everything behind
+                # it) waits a tick and retries
+                deferred[i] = deferred.get(i, 0) + 1
+                break
+            h.arrive_tick = tr.arrive_tick
+            handles[i] = h
+            pending.pop(0)
+        fe.tick()
+        await asyncio.sleep(0)
+    engine.run_finalize()
+    records = [
+        handles[i].record(deferred.get(i, 0)) for i in range(len(trace))
+    ]
+    return records, fe
+
+
+def goodput(records: List[Dict[str, Any]], slo_ticks: int):
+    """(met, total): requests that COMPLETED and got their first token
+    within ``slo_ticks`` of trace arrival. Tick-based on both ends, so the
+    count is machine-independent (an exact CI row, unlike wall-clock
+    percentiles)."""
+    met = sum(
+        1 for r in records
+        if r["status"] == "complete"
+        and r["first_tick"] is not None
+        and r["first_tick"] - r["arrive_tick"] <= slo_ticks
+    )
+    return met, len(records)

@@ -492,6 +492,170 @@ def test_quantized_kv_dtype_noop_on_dense_fallback(arch_state, name):
         np.testing.assert_array_equal(a, b)
 
 
+# ------------------------------------- latency accounting (TTFT origin)
+def _submit_then_wait(eng, prompts, max_new, wait_s=0.05):
+    """Submit everything, sit in the queue for wait_s, then drain. With
+    TTFT measured from SUBMIT (the fix), every request's TTFT must include
+    that wait; the old admit-origin accounting would report only prefill."""
+    import time as _time
+
+    rids = [eng.submit(p, max_new) for p in prompts]
+    _time.sleep(wait_s)
+    out = eng.run()
+    return rids, out
+
+
+@pytest.mark.parametrize("variant", ["legacy", "chunked", "dense"])
+def test_ttft_origin_is_submit_on_every_path(arch_state, variant):
+    """Regression for the TTFT accounting bug: the legacy whole-prompt
+    prefill, the chunked-prefill path, and the dense fallback all timed
+    TTFT from admission, hiding queue wait. All three must now span
+    submit -> first token (>= the induced queue wait) and keep prefill
+    compute in the separate prefill_s."""
+    name = "falcon-mamba-7b" if variant == "dense" else "granite-8b"
+    cfg, params = arch_state(name)
+    rng = np.random.RandomState(23)
+    prompts = [rng.randint(0, cfg.vocab_size, (s,)).astype(np.int32)
+               for s in ((6, 6) if variant == "dense" else (6, 11))]
+    if variant == "legacy":
+        ecfg = EngineConfig(max_slots=2, page_size=8, num_pages=17,
+                            max_len=32, inner_steps=4)
+    elif variant == "chunked":
+        ecfg = EngineConfig(max_slots=2, page_size=8, num_pages=17,
+                            max_len=32, inner_steps=4, prefix_cache=True,
+                            prefill_chunk=8)
+    else:
+        ecfg = EngineConfig(max_slots=2)
+    eng = ServeEngine(cfg, params, RT, ecfg)
+    rids, _ = _submit_then_wait(eng, prompts, 4, wait_s=0.05)
+    s = eng.stats
+    for rid in rids:
+        assert s["ttft_s"][rid] >= 0.05, (variant, rid, s["ttft_s"])
+        assert 0 < s["prefill_s"][rid] < s["ttft_s"][rid]
+
+
+def test_ttft_includes_queue_wait_ordering(arch_state):
+    """One slot, co-submitted requests: each later admission's TTFT must
+    grow by the time spent waiting behind its predecessors."""
+    cfg, params = arch_state("granite-8b")
+    rng = np.random.RandomState(29)
+    prompts = [rng.randint(0, cfg.vocab_size, (6,)).astype(np.int32)
+               for _ in range(3)]
+    eng = ServeEngine(
+        cfg, params, RT,
+        EngineConfig(max_slots=1, page_size=8, num_pages=9, max_len=16,
+                     inner_steps=4),
+    )
+    rids, _ = _submit_then_wait(eng, prompts, 4, wait_s=0.0)
+    ttfts = [eng.stats["ttft_s"][r] for r in rids]
+    assert ttfts[0] < ttfts[1] < ttfts[2], ttfts
+
+
+def test_preempt_readmit_ttft_spans_original_submit(arch_state):
+    """Preemption pressure driven through the external step() loop: the
+    evicted-and-readmitted request's recomputed TTFT still originates at
+    its original submit (>= the pre-run queue wait), and outputs stay
+    exact."""
+    cfg, params = arch_state("granite-8b")
+    rng = np.random.RandomState(4)
+    prompts = [rng.randint(0, cfg.vocab_size, (4,)).astype(np.int32)
+               for _ in range(2)]
+    max_news = [24, 16]
+    eng = ServeEngine(
+        cfg, params, RT,
+        EngineConfig(max_slots=2, page_size=4, num_pages=10, max_len=48,
+                     inner_steps=4, policy="optimistic"),
+    )
+    import time as _time
+
+    rids = [eng.submit(p, m) for p, m in zip(prompts, max_news)]
+    _time.sleep(0.05)
+    eng.run_begin()
+    steps = 0
+    while eng.busy:
+        assert eng.step()["busy"]
+        steps += 1
+        assert steps < 200
+    out = eng.run_finalize()
+    assert eng.stats.get("evictions", 0) > 0
+    for rid, p, m in zip(rids, prompts, max_news):
+        np.testing.assert_array_equal(out[rid], _run_alone(cfg, params, p, m))
+        assert eng.stats["ttft_s"][rid] >= 0.05
+    eng.pool.check()
+
+
+def test_engine_per_run_stats_are_per_run(arch_state):
+    """A second submit/run cycle reports ITS OWN completion count and mean
+    TTFT — regression for readers that averaged the accumulated per-rid
+    ttft_s dict across runs."""
+    cfg, params = arch_state("granite-8b")
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(0, cfg.vocab_size, (6,)).astype(np.int32)
+               for _ in range(3)]
+    eng = ServeEngine(
+        cfg, params, RT,
+        EngineConfig(max_slots=2, page_size=8, num_pages=17, max_len=32,
+                     inner_steps=4),
+    )
+    r0, r1 = eng.submit(prompts[0], 5), eng.submit(prompts[1], 5)
+    eng.run()
+    assert eng.stats["run_completed"] == 2
+    r2 = eng.submit(prompts[2], 5)
+    eng.run()
+    s = eng.stats
+    assert s["run_completed"] == 1
+    assert s["decode_tokens"] == 4 and s["tokens_per_s"] > 0
+    # the run mean covers ONLY this run's rid, not the accumulated dict
+    assert s["run_mean_ttft_s"] == pytest.approx(s["ttft_s"][r2])
+    assert len(s["ttft_s"]) == 3      # the dict does accumulate (by design)
+
+
+def test_sized_for_budget_never_overspends(arch_state):
+    """Regression: the null page was not charged, so num_pages * page_bytes
+    could exceed pool_bytes by one page. The sized pool (null page
+    included) must now fit the budget whenever the budget can hold at
+    least one usable page."""
+    from repro.serve.pool import kv_page_bytes
+
+    cfg, _ = arch_state("granite-8b")
+    page = 8
+    page_b = kv_page_bytes(page, cfg.n_kv_heads, cfg.head_dim,
+                           cfg.n_layers, "bf16")
+    pages_per_req = 40 // page                 # horizon 24+12 -> max_len 40
+    # smallest budget that holds one request + the null page, then larger
+    # ones; below that floor sized_for_budget still returns 1 slot by
+    # design (documented), so the no-overspend contract starts here
+    floor = (1 + pages_per_req) * page_b
+    for budget in (floor, 150_000, 200_000, 400_000, 1_000_000):
+        ecfg = EngineConfig.sized_for_budget(
+            cfg, 24, 12, pool_bytes=budget, page_size=page, kv_dtype="bf16",
+        )
+        assert ecfg.num_pages * page_b <= budget, (budget, ecfg.num_pages)
+        assert ecfg.num_pages >= 1 + pages_per_req
+
+
+def test_replicated_submit_is_transactional(arch_state):
+    """Regression: ReplicaRouter.route() was committed before the inner
+    submit could raise, leaking a phantom request onto the replica's load.
+    An oversized submit must leave router counts AND rid numbering
+    untouched, and the engine must keep serving afterwards."""
+    from repro.serve import ReplicatedServeEngine
+
+    cfg, params = arch_state("granite-8b")
+    ecfg = EngineConfig(max_slots=1, page_size=4, num_pages=5, max_len=64,
+                        inner_steps=4)
+    eng = ReplicatedServeEngine(cfg, params, RT, ecfg, mesh=None)
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(40, np.int32), 20)    # > pool budget
+    assert eng.router.routed == [0]
+    assert eng._next_rid == 0
+    rng = np.random.RandomState(13)
+    prompt = rng.randint(0, cfg.vocab_size, (6,)).astype(np.int32)
+    rid = eng.submit(prompt, 4)
+    out = eng.run()
+    np.testing.assert_array_equal(out[rid], _run_alone(cfg, params, prompt, 4))
+
+
 # ------------------------------------------------------- sharded serving
 def test_replica_router_least_loaded_deterministic():
     """Least-loaded routing over caller-supplied loads, lowest index on

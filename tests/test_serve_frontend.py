@@ -1,0 +1,265 @@
+"""Async serving front-end: tick loop, streaming, QoS, cancel, backpressure.
+
+The engine guarantees batched==alone token identity, and the front-end can
+only change WHEN ticks happen — so every test here pins the async layer to
+the isolated-run oracle: streamed tokens match the alone run exactly, a
+cancelled stream is a PREFIX of the alone run, trace replay is
+tick-deterministic (including its cancel/QoS/backpressure paths), and the
+pool always drains.
+"""
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import Runtime, init_params
+from repro.serve import (
+    AsyncFrontend,
+    EngineConfig,
+    ReplicatedServeEngine,
+    ServeEngine,
+    TraceRequest,
+    poisson_trace,
+    replay_trace,
+)
+from repro.train.serve import generate
+
+pytestmark = pytest.mark.frontend
+
+RT = Runtime(dtype=jnp.float32, chunk_q=32)
+
+
+@pytest.fixture(scope="module")
+def gstate():
+    cfg = get_reduced("granite-8b")
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _alone(cfg, params, prompt, max_new):
+    out, _ = generate(
+        cfg, params, {"tokens": jnp.asarray(np.asarray(prompt)[None])}, RT,
+        max_new,
+    )
+    return np.asarray(out[0])
+
+
+def _ecfg(**kw):
+    base = dict(max_slots=2, page_size=8, num_pages=17, max_len=32,
+                inner_steps=4)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def test_async_streaming_matches_alone(gstate):
+    """Background-driven front-end, staggered submits (one arriving while
+    another is mid-stream): every request's streamed tokens equal its
+    isolated run."""
+    cfg, params = gstate
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(0, cfg.vocab_size, (s,)).astype(np.int32)
+               for s in (5, 9, 12)]
+    eng = ServeEngine(cfg, params, RT, _ecfg())
+
+    async def scenario():
+        async with AsyncFrontend(eng) as fe:
+            h0 = await fe.submit(prompts[0], 8)
+            got = 0
+            async for _tok in fe.stream(h0):
+                got += 1
+                if got == 2:
+                    break
+            # mid-stream arrival: h0 is still decoding
+            h1 = await fe.submit(prompts[1], 6)
+            h2 = await fe.submit(prompts[2], 5)
+            await fe.result(h0)
+            await fe.result(h1)
+            await fe.result(h2)
+            return h0, h1, h2
+
+    h0, h1, h2 = asyncio.run(scenario())
+    for h, p, m in ((h0, prompts[0], 8), (h1, prompts[1], 6),
+                    (h2, prompts[2], 5)):
+        assert h.done == "complete" and len(h.tokens) == m
+        np.testing.assert_array_equal(
+            np.asarray(h.tokens, np.int32), _alone(cfg, params, p, m)
+        )
+    assert eng.pool.pages_in_use == 0
+
+
+def _mixed_trace(cfg, rng):
+    """Small hand-rolled trace exercising QoS, cancel, and backpressure."""
+    lens = (5, 9, 6, 12, 7, 8)
+    arrive = (0, 0, 1, 3, 3, 6)
+    qos = ("interactive", "batch", "interactive", "interactive",
+           "batch", "interactive")
+    cancel = (0, 0, 2, 0, 0, 3)
+    return [
+        TraceRequest(
+            arrive_tick=a,
+            tokens=rng.randint(0, cfg.vocab_size, (s,)).astype(np.int32),
+            max_new=m,
+            qos=q,
+            cancel_after=c,
+        )
+        for a, s, m, q, c in zip(arrive, lens, (8, 6, 9, 7, 6, 8), qos,
+                                 cancel)
+    ]
+
+
+def test_replay_trace_deterministic_with_cancel_and_qos(gstate):
+    """Two replays of the same trace on fresh engines are tick-identical
+    (admission, cancels, deferrals are functions of the trace alone), the
+    completed outputs equal the alone runs, and cancelled streams are
+    prefixes of theirs."""
+    cfg, params = gstate
+    trace = _mixed_trace(cfg, np.random.RandomState(19))
+
+    def one():
+        eng = ServeEngine(cfg, params, RT, _ecfg(max_queue=2))
+        records, fe = asyncio.run(replay_trace(eng, trace))
+        return eng, records, fe
+
+    eng_a, recs_a, _ = one()
+    eng_b, recs_b, _ = one()
+    for ra, rb in zip(recs_a, recs_b):
+        for k in ("status", "first_tick", "done_tick", "deferred_ticks",
+                  "n_tokens"):
+            assert ra[k] == rb[k], (k, ra, rb)
+        np.testing.assert_array_equal(ra["tokens"], rb["tokens"])
+
+    n_cancelled = 0
+    for tr, rec in zip(trace, recs_a):
+        alone = _alone(cfg, params, tr.tokens, tr.max_new)
+        if rec["status"] == "complete":
+            np.testing.assert_array_equal(rec["tokens"], alone)
+        else:
+            assert rec["status"] == "cancelled"
+            n_cancelled += 1
+            n = len(rec["tokens"])
+            assert tr.cancel_after <= n < tr.max_new
+            np.testing.assert_array_equal(rec["tokens"], alone[:n])
+    assert n_cancelled == sum(1 for t in trace if t.cancel_after)
+    assert eng_a.stats["cancelled"] == n_cancelled
+    assert eng_a.pool.pages_in_use == 0
+    assert eng_b.pool.pages_in_use == 0
+
+
+def test_qos_interactive_served_before_earlier_batch(gstate):
+    """One slot, engine busy: a batch request submitted BEFORE an
+    interactive one must still be admitted after it (strict tier
+    priority)."""
+    cfg, params = gstate
+    rng = np.random.RandomState(5)
+    p0, pb, pi = (rng.randint(0, cfg.vocab_size, (6,)).astype(np.int32)
+                  for _ in range(3))
+    eng = ServeEngine(cfg, params, RT, _ecfg(max_slots=1, num_pages=9))
+    fe = AsyncFrontend(eng)
+    h0 = fe.try_submit(p0, 6)
+    fe.tick()                      # h0 occupies the only slot
+    hb = fe.try_submit(pb, 4, qos="batch")
+    hi = fe.try_submit(pi, 4, qos="interactive")
+    ticks = 0
+    while eng.busy:
+        fe.tick()
+        ticks += 1
+        assert ticks < 100
+    eng.run_finalize()
+    assert h0.done == hb.done == hi.done == "complete"
+    assert hi.first_tick < hb.first_tick   # tier beats submit order
+    np.testing.assert_array_equal(
+        np.asarray(hi.tokens, np.int32), _alone(cfg, params, pi, 4)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(hb.tokens, np.int32), _alone(cfg, params, pb, 4)
+    )
+
+
+def test_backpressure_queuefull_then_async_retry(gstate):
+    """At max_queue the sync path reports backpressure (None) and the
+    async submit() waits for a slot instead of failing."""
+    cfg, params = gstate
+    rng = np.random.RandomState(7)
+    p0, p1, p2 = (rng.randint(0, cfg.vocab_size, (6,)).astype(np.int32)
+                  for _ in range(3))
+    eng = ServeEngine(cfg, params, RT,
+                      _ecfg(max_slots=1, num_pages=9, max_queue=1))
+
+    async def scenario():
+        async with AsyncFrontend(eng) as fe:
+            h0 = await fe.submit(p0, 6)
+            # admission only happens at a tick, so the queue may still be
+            # full here; the sync probe reports that as None ...
+            if fe.try_submit(p1, 4) is None:
+                deferred = True
+                h1 = await fe.submit(p1, 4)      # ... and the async path
+            else:                                 # waits it out
+                deferred = False
+                h1 = fe.handles[max(fe.handles)]
+            h2 = await fe.submit(p2, 4)
+            await fe.result(h0)
+            await fe.result(h1)
+            await fe.result(h2)
+            return deferred, (h0, h1, h2)
+
+    deferred, handles = asyncio.run(scenario())
+    assert deferred                # max_queue=1: the probe really did defer
+    for h, p, m in zip(handles, (p0, p1, p2), (6, 4, 4)):
+        assert h.done == "complete"
+        np.testing.assert_array_equal(
+            np.asarray(h.tokens, np.int32), _alone(cfg, params, p, m)
+        )
+    assert eng.pool.pages_in_use == 0
+
+
+def test_cancel_queued_and_inflight(gstate):
+    """Cancelling a QUEUED request yields zero tokens; cancelling an
+    IN-FLIGHT one frees its pages mid-decode and the delivered stream is a
+    prefix of the alone run."""
+    cfg, params = gstate
+    rng = np.random.RandomState(11)
+    p0, p1 = (rng.randint(0, cfg.vocab_size, (6,)).astype(np.int32)
+              for _ in range(2))
+    eng = ServeEngine(cfg, params, RT, _ecfg(max_slots=1, num_pages=9))
+    fe = AsyncFrontend(eng)
+    h0 = fe.try_submit(p0, 10)
+    h1 = fe.try_submit(p1, 6)
+    assert fe.cancel(h1)                 # still queued: nothing delivered
+    fe.tick()                            # h0 admitted + first chunk
+    assert h1.done == "cancelled" and h1.tokens == []
+    assert len(h0.tokens) > 0
+    assert fe.cancel(h0)                 # in-flight: frees pages mid-decode
+    assert h0.done == "cancelled"
+    assert not eng.busy
+    assert eng.pool.pages_in_use == 0
+    assert eng.stats["cancelled"] == 2
+    n = len(h0.tokens)
+    assert 0 < n < 10
+    np.testing.assert_array_equal(
+        np.asarray(h0.tokens, np.int32), _alone(cfg, params, p0, 10)[:n]
+    )
+    eng.run_finalize()
+
+
+def test_replicated_engine_through_frontend(gstate):
+    """The front-end drives ReplicatedServeEngine through the same tick
+    API: a replayed trace completes with alone-identical outputs on a
+    single-replica (mesh=None) instance."""
+    cfg, params = gstate
+    rng = np.random.RandomState(13)
+    trace = poisson_trace(
+        rng, 5, rate=0.8, vocab=cfg.vocab_size, prompt_range=(4, 10),
+        new_range=(4, 8),
+    )
+    eng = ReplicatedServeEngine(cfg, params, RT, _ecfg(max_queue=4),
+                                mesh=None)
+    records, fe = asyncio.run(replay_trace(eng, trace))
+    assert all(r["status"] == "complete" for r in records)
+    for tr, rec in zip(trace, records):
+        np.testing.assert_array_equal(
+            rec["tokens"], _alone(cfg, params, tr.tokens, tr.max_new)
+        )
+    assert eng.stats["run_completed"] == len(trace)
+    assert all(e.pool.pages_in_use == 0 for e in eng.engines)
