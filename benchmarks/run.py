@@ -24,6 +24,7 @@ MODULES = [
     "benchmarks.serve_bench",
     "benchmarks.serve_prefix_bench",
     "benchmarks.serve_quant_bench",
+    "benchmarks.serve_spec_bench",
     "benchmarks.serve_trace_bench",
     "benchmarks.train_pipeline_bench",
     "benchmarks.roofline_report",

@@ -45,10 +45,9 @@ def main() -> None:
         rng.randint(0, cfg.vocab_size, (s,)).astype(np.int32)
         for s in prompt_lens
     ]
-    ecfg = EngineConfig.sized_for(
+    ecfg = EngineConfig.capacity(
         max_prompt, max_new, slots=2, page_size=page, headroom=2.0,
-        inner_steps=4,
-    )
+    ).engine(inner_steps=4)
 
     def run_engine():
         eng = ServeEngine(cfg, params, rt, ecfg)
@@ -132,9 +131,9 @@ def sharded_section() -> None:
         rng.randint(0, cfg.vocab_size, (s,)).astype(np.int32)
         for s in (9, 16, 12, 14)
     ]
-    ecfg = EngineConfig.sized_for(
-        16, max_new, slots=2, page_size=8, headroom=2.0, inner_steps=4,
-    )
+    ecfg = EngineConfig.capacity(
+        16, max_new, slots=2, page_size=8, headroom=2.0,
+    ).engine(inner_steps=4)
     kv_per_dev = {}
     n_dev = len(jax.devices())
     shapes = [(1, 1), (1, 2)] + ([(2, 2)] if n_dev >= 4 else [])

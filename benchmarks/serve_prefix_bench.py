@@ -55,10 +55,9 @@ def main() -> None:
     max_prompt = max(len(p) for p in prompts)
 
     def make_engine(**kw):
-        ecfg = EngineConfig.sized_for(
+        ecfg = EngineConfig.capacity(
             max_prompt, max_new, slots=2, page_size=page, headroom=2.0,
-            inner_steps=4, **kw,
-        )
+        ).engine(inner_steps=4, **kw)
         return ServeEngine(cfg, params, rt, ecfg)
 
     COUNTERS = (

@@ -12,8 +12,8 @@ Four claims, separated by what can be asserted where:
   bytes at bf16 / int8 / fp8 from the one pricing rule
   (``quant.kv_token_bytes``), and per-device pool bytes asserted from the
   engine's REAL device buffers.
-* **Capacity** (accounting row): ``EngineConfig.sized_for_budget`` at one
-  fixed HBM budget — resident requests at int8 vs bf16 (>= 1.8x is the
+* **Capacity** (accounting row): ``EngineConfig.capacity(pool_bytes=...)``
+  at one fixed HBM budget — resident requests at int8 vs bf16 (>= 1.8x is the
   tentpole claim; the f32-scale overhead is why it lands under the naive
   2x).
 * **Accuracy** (accounting row): greedy agreement of the int8 engine vs
@@ -117,25 +117,25 @@ def _capacity_section(cfg) -> None:
         page, cfg.n_kv_heads, cfg.head_dim, cfg.n_layers, "bf16"
     )
     max_len = -(-(max_prompt + max_new) // page) * page
-    # budget covers 8 full horizons PLUS the pool's null page — since the
-    # sized_for_budget overspend fix, the null page is charged to the
-    # budget, so seating 8 requests takes (1 + 8*pages_per_req) pages
+    # budget covers 8 full horizons PLUS the pool's null page — the null
+    # page is charged to the budget by EngineConfig.capacity, so seating 8
+    # requests takes (1 + 8*pages_per_req) pages
     budget = (1 + 8 * (max_len // page)) * page_b
-    e_bf16 = EngineConfig.sized_for_budget(
-        cfg, max_prompt, max_new, pool_bytes=budget, page_size=page,
+    c_bf16 = EngineConfig.capacity(
+        max_prompt, max_new, pool_bytes=budget, cfg=cfg, page_size=page,
         kv_dtype="bf16",
     )
-    e_int8 = EngineConfig.sized_for_budget(
-        cfg, max_prompt, max_new, pool_bytes=budget, page_size=page,
+    c_int8 = EngineConfig.capacity(
+        max_prompt, max_new, pool_bytes=budget, cfg=cfg, page_size=page,
         kv_dtype="int8",
     )
-    factor = e_int8.max_slots / e_bf16.max_slots
-    assert factor >= 1.8, (e_bf16.max_slots, e_int8.max_slots)
+    factor = c_int8.slots / c_bf16.slots
+    assert factor >= 1.8, (c_bf16.slots, c_int8.slots)
     emit(
         "serve_quant/resident_requests",
         0.0,
-        f"pool_budget={budget}B horizon={max_len}: bf16_slots={e_bf16.max_slots} "
-        f"int8_slots={e_int8.max_slots}; capacity_factor={factor:.3f}x (>=1.8x)",
+        f"pool_budget={budget}B horizon={max_len}: bf16_slots={c_bf16.slots} "
+        f"int8_slots={c_int8.slots}; capacity_factor={factor:.3f}x (>=1.8x)",
     )
 
 
@@ -163,10 +163,10 @@ def main() -> None:
     ]
 
     def run_engine(kv_dtype, reqs):
-        ecfg = EngineConfig.sized_for(
+        ecfg = EngineConfig.capacity(
             max_prompt, max_new, slots=2, page_size=page, headroom=2.0,
-            inner_steps=4, kv_dtype=kv_dtype,
-        )
+            kv_dtype=kv_dtype,
+        ).engine(inner_steps=4)
         eng = ServeEngine(cfg, params, rt, ecfg)
         rids = [eng.submit(p, max_new) for p in reqs]
         out = eng.run()

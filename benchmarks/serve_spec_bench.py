@@ -1,0 +1,154 @@
+"""Speculative-decoding benchmark: multi-token commit over the paged engine.
+
+One timed claim, honestly framed. A spec tick replaces ``inner_steps``
+sequential decode forwards with a single batched T=k+1 verify forward, so
+tokens/s scales with the accepted-run length — and the accepted-run length
+is a property of the WORKLOAD: prompt-lookup drafting pays off exactly when
+the continuation is predictable (copied spans, boilerplate, cycles — the
+regime real LM output lives in much of the time). Random-init reduced
+models emit near-incompressible streams over a 1024-token alphabet, where
+acceptance is ~0 (reported below, unasserted) — so the anchored scenario
+shrinks the alphabet to 2 via the same config registry, which drives the
+greedy stream into short cycles the drafter can actually hit: acceptance
+~0.87 at k=8, in the range prompt-lookup papers report on summarization.
+
+* **Timed** (gated on slowdown only): paged decode tokens/s at batch 1 and
+  batch 4, spec-on (ngram drafter, k=8) vs spec-off (inner_steps=4 fused
+  scan) on the anchored scenario; the in-bench assert is the tentpole
+  claim — >= 1.5x at BOTH batch sizes. Best-of-3 walls, and spec-on
+  output is asserted token-identical to spec-off first (greedy acceptance
+  commits only the target's own argmax chain, so drafting buys speed,
+  never tokens). Interpret-mode CPU timings are NOT TPU perf claims
+  (EXPERIMENTS.md) — but note the mechanism is the same one that wins on
+  real accelerators: fewer sequential forwards per committed token.
+* **Exact** (accounting row, gated verbatim): acceptance counters on the
+  anchored scenario — verify calls, drafted/accepted tokens, acceptance
+  rate, mean accepted-per-verify. Deterministic greedy argmax facts, same
+  anchored-seed caveat as the quantized-pool bench: the seed is one whose
+  argmax margins clear accumulation noise.
+* **Incompressible control** (timed, no speedup assert): the same engines
+  on a full-vocab random prompt, where acceptance is ~0 and every tick
+  commits ~1 token — the floor case: spec decode degenerates toward
+  per-token verify and must stay within dispatch-overhead distance of
+  plain decode, not fall off a cliff.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, header
+
+K = 8
+MAX_NEW = 128
+
+
+def _drive(cfg, params, rt, prompts, max_new, k, slots):
+    import jax.numpy as jnp  # noqa: F401  (jax must be initialized)
+
+    from repro.serve import EngineConfig, ServeEngine
+
+    ecfg = EngineConfig.capacity(
+        16, max_new, slots=slots, page_size=8, headroom=1.0,
+    ).engine(inner_steps=4, spec_tokens=k)
+    eng = ServeEngine(cfg, params, rt, ecfg)
+    rids = [eng.submit(p, max_new) for p in prompts]
+    t0 = time.perf_counter()
+    out = eng.run()
+    wall = time.perf_counter() - t0
+    outs = [np.asarray(out[r]) for r in rids]
+    return eng, sum(len(o) for o in outs) / wall, outs
+
+
+def _best(cfg, params, rt, prompts, max_new, k, reps=3):
+    """Best-of-N tokens/s (compile-warmed): engine ticks are host-driven,
+    so a single wall is noisier than time_fn's jitted medians."""
+    slots = min(len(prompts), 4)
+    _drive(cfg, params, rt, prompts, max_new, k, slots)      # warm compiles
+    runs = [
+        _drive(cfg, params, rt, prompts, max_new, k, slots)
+        for _ in range(reps)
+    ]
+    return max(runs, key=lambda r: r[1])
+
+
+def main() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_reduced
+    from repro.configs.base import reduced
+    from repro.models import Runtime, init_params
+
+    header("Speculative decoding (ngram drafter, paged k=8 verify)")
+    rt = Runtime(dtype=jnp.float32, chunk_q=32)
+    base = get_reduced("granite-8b")
+
+    # anchored scenario: binary alphabet -> the greedy stream cycles, the
+    # prompt-lookup drafter hits, and the accepted-run length is large.
+    # Seed 7 is a measured anchor whose argmax margins clear noise.
+    cfg = reduced(base, name="granite-8b-bin", vocab_size=2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = np.random.RandomState(7).randint(0, 2, (12,)).astype(np.int32)
+
+    spec_stats = None
+    for B in (1, 4):
+        prompts = [prompt] * B
+        _, off_tps, off_out = _best(cfg, params, rt, prompts, MAX_NEW, 0)
+        eng, on_tps, on_out = _best(cfg, params, rt, prompts, MAX_NEW, K)
+        for a, b in zip(off_out, on_out):
+            # greedy acceptance == the target's own argmax chain
+            assert np.array_equal(a, b), "spec-on diverged from spec-off"
+        ratio = on_tps / off_tps
+        emit(
+            f"serve_spec/decode_b{B}_off",
+            1e6 / off_tps,
+            f"tokens_per_s={off_tps:.1f} (inner_steps=4 fused decode scan)",
+        )
+        emit(
+            f"serve_spec/decode_b{B}_spec",
+            1e6 / on_tps,
+            f"tokens_per_s={on_tps:.1f}; speedup_vs_off={ratio:.2f}x "
+            f"(>=1.5x gated in-bench); "
+            f"accepted_per_verify="
+            f"{eng.stats['spec_accepted_per_verify']:.2f}",
+        )
+        assert ratio >= 1.5, (B, ratio, on_tps, off_tps)
+        spec_stats = eng.stats
+
+    s = spec_stats
+    emit(
+        "serve_spec/acceptance",
+        0.0,
+        f"k={K} drafter=ngram batch=4: "
+        f"verify_calls={s['spec_verify_calls']} "
+        f"drafted={s['spec_drafted_tokens']} "
+        f"accepted={s['spec_accepted_tokens']} "
+        f"accept_rate={s['spec_accept_rate']:.3f} "
+        f"accepted_per_verify={s['spec_accepted_per_verify']:.3f}",
+    )
+
+    # control: full-vocab random stream — near-zero acceptance, spec ticks
+    # commit ~1 token each; must stay in the same cost range as plain
+    # decode (the timed gate's 20x tolerance catches a cliff), and stay
+    # token-identical (junk drafts are rejected, never committed)
+    pfull = np.random.RandomState(0).randint(
+        0, base.vocab_size, (12,)
+    ).astype(np.int32)
+    params_full = init_params(base, jax.random.PRNGKey(0))
+    _, off_tps, off_out = _best(base, params_full, rt, [pfull], 48, 0, reps=2)
+    eng, on_tps, on_out = _best(base, params_full, rt, [pfull], 48, K, reps=2)
+    assert np.array_equal(off_out[0], on_out[0])
+    emit(
+        "serve_spec/incompressible_control",
+        1e6 / on_tps,
+        f"tokens_per_s={on_tps:.1f} vs off={off_tps:.1f} "
+        f"(ratio={on_tps / off_tps:.2f}x); "
+        f"accept_rate={eng.stats['spec_accept_rate']:.3f} — random-init "
+        f"full-vocab stream: prompt lookup has ~nothing to hit",
+    )
+
+
+if __name__ == "__main__":
+    main()

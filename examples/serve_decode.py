@@ -38,10 +38,10 @@ def main() -> None:
     paged = paged_supported(cfg)
     eng = ServeEngine(
         cfg, params, rt,
-        EngineConfig.sized_for(
+        EngineConfig.capacity(
             args.prompt_len + cfg.frontend_tokens, args.new_tokens,
-            slots=2, page_size=8, headroom=2.0, inner_steps=4,
-        ),
+            slots=2, page_size=8, headroom=2.0,
+        ).engine(inner_steps=4),
         paged=paged,
     )
 

@@ -114,6 +114,12 @@ def paged_prefill_attention(
     Same tensor-parallel contract as :func:`paged_attention`: the kv-head
     axis shards over ``model`` (q axis 2 here), tables / positions stay
     replicated, and no collective runs inside attention.
+
+    This op is also the speculative-decoding verify path
+    (``models.lm.verify_step_paged``): drafts are written to the pool
+    then attended as a T=k+1 "prefill" whose row ``t`` sees
+    ``kpos <= start + t`` — so verify correctness is exactly chunked-
+    prefill correctness, no separate masking code path.
     """
     quantized = k_scale is not None
 

@@ -164,6 +164,14 @@ def main() -> None:
     ap.add_argument("--max-queue", type=int, default=0,
                     help="per-QoS-tier admission queue cap (0 = unbounded); "
                          "overflow raises QueueFull / defers trace arrivals")
+    ap.add_argument("--spec", type=int, default=0, metavar="K",
+                    help="speculative decoding: draft K tokens per tick and "
+                         "commit the verified run (greedy only — forces "
+                         "temperature 0; requires --paged)")
+    ap.add_argument("--drafter", default="ngram", choices=("ngram", "model"),
+                    help="--spec drafter: model-free prompt lookup, or a "
+                         "paired reduced same-family model "
+                         "(spec.paired_drafter_cfg)")
     ap.add_argument("--mesh", default="",
                     help="DxM (data replicas x model shards), e.g. 2x2")
     ap.add_argument("--no-force-devices", dest="force_devices",
@@ -213,24 +221,41 @@ def main() -> None:
         paged = paged_supported(cfg)
         if not paged:
             print(f"{cfg.name}: family {cfg.family!r} -> dense fallback")
+        if args.spec and not paged:
+            ap.error(f"--spec needs a paged-capable family, not {args.arch}")
         max_prompt = args.prompt_len + args.shared_prefix
-        ecfg = EngineConfig.sized_for(
+        temperature = 0.0 if args.spec else args.temperature
+        ecfg = EngineConfig.capacity(
             max_prompt + cfg.frontend_tokens, args.new_tokens,
             slots=args.slots, page_size=args.page_size, headroom=2.0,
-            temperature=args.temperature, seed=args.seed,
+            kv_dtype=args.kv_dtype,
+        ).engine(
+            temperature=temperature, seed=args.seed,
             use_kernel=args.kernel,
             prefill_bucket=args.page_size,  # random lengths: bound compiles
             prefix_cache=args.prefix_cache,
             prefill_chunk=args.prefill_chunk,
-            kv_dtype=args.kv_dtype,
             max_queue=args.max_queue,
+            spec_tokens=args.spec, spec_drafter=args.drafter,
         )
+        draft_params = draft_cfg = None
+        if args.spec and args.drafter == "model":
+            from repro.serve import paired_drafter_cfg
+
+            draft_cfg = paired_drafter_cfg(cfg)
+            draft_params = init_params(
+                draft_cfg, jax.random.PRNGKey(args.seed + 1)
+            )
         if mesh is not None:
             eng = ReplicatedServeEngine(
-                cfg, params, rt, ecfg, mesh=mesh, paged=paged
+                cfg, params, rt, ecfg, mesh=mesh, paged=paged,
+                draft_params=draft_params, draft_cfg=draft_cfg,
             )
         else:
-            eng = ServeEngine(cfg, params, rt, ecfg, paged=paged)
+            eng = ServeEngine(
+                cfg, params, rt, ecfg, paged=paged,
+                draft_params=draft_params, draft_cfg=draft_cfg,
+            )
         if args.trace:
             # the dense fallback works too: _step_dense is one tick
             _replay_cli(args, cfg, eng)
@@ -278,6 +303,13 @@ def main() -> None:
             f"bytes/request={np.mean(per_req):.0f} (mean over {len(per_req)}), "
             f"capacity_factor_vs_bf16={cap_factor:.2f}x"
         )
+        if args.spec:
+            print(
+                f"  spec: k={args.spec} drafter={args.drafter} "
+                f"accept_rate={s.get('spec_accept_rate', 0.0):.2f} "
+                f"accepted_per_verify="
+                f"{s.get('spec_accepted_per_verify', 1.0):.2f}"
+            )
         if args.prefix_cache and "prefix_lookups" in s:
             hit_rate = s["prefix_hits"] / max(s["prefix_lookups"], 1)
             cached_frac = (

@@ -9,5 +9,6 @@ from repro.models.lm import (  # noqa: F401
     loss_fn,
     prefill,
     prefill_chunk_paged,
+    verify_step_paged,
 )
 from repro.models.runtime import Runtime  # noqa: F401

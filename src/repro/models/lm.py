@@ -421,6 +421,45 @@ def decode_step_paged(
     return logits[:, 0], new_state
 
 
+def verify_step_paged(
+    cfg: ArchConfig,
+    params: Params,
+    state: Dict[str, Any],
+    tokens: jax.Array,
+    q_len: jax.Array,
+    rt: Runtime,
+    max_len: int,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Batched multi-token verify pass for speculative decoding.
+
+    tokens: (B, T) int32 — per slot, the pending token followed by the k
+    draft tokens (T = k + 1), sitting at absolute positions
+    ``lengths[b] .. lengths[b] + T - 1``; q_len: (B,) valid rows per slot
+    (0 disables a slot: its rows write the null page and its logits are
+    zeros). Returns (logits (B, T, V), new state).
+
+    This is ``attention_prefill_paged`` at T = k + 1 — the chunked-prefill
+    write-then-attend path — so row t's KV is written before any row
+    attends, and row t attends exactly positions ``kpos <= lengths + t``:
+    the same band a sequential decode step at that position would see.
+    Rows therefore reproduce the sequential greedy decode stream, and
+    rejected rows need no device-side rollback: their KV sits past the
+    committed length, is never attended there, and is overwritten before
+    any future attend. ``lengths`` is NOT advanced — the caller commits
+    the accepted run length (host-side truncation via ``PagePool.truncate``
+    is the pool-accounting half of the rollback).
+    """
+    specs = layer_specs(cfg, seq_len=max_len, long_variant=rt.long_variant)
+    x = embed_apply(params["embed"], tokens, rt.dtype)            # (B, T, d)
+    x, caches = stack_mod.stack_prefill_paged(
+        cfg, params["stack"], x, state["caches"], state["tables"],
+        state["lengths"], q_len, rt, specs,
+    )
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = logits_apply(params.get("head"), params["embed"], x, cfg.tie_embeddings)
+    return logits, dict(state, caches=caches)
+
+
 def decode_step(
     cfg: ArchConfig,
     params: Params,

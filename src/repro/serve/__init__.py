@@ -1,4 +1,5 @@
 from repro.serve.engine import (  # noqa: F401
+    Capacity,
     EngineConfig,
     ReplicatedServeEngine,
     ServeEngine,
@@ -15,7 +16,15 @@ from repro.serve.frontend import (  # noqa: F401
 )
 from repro.serve.pool import PagePool, PoolExhausted  # noqa: F401
 from repro.serve.prefix import PrefixCache  # noqa: F401
-from repro.serve.sampling import sample_slots, sample_token  # noqa: F401
+from repro.serve.sampling import (  # noqa: F401
+    SamplingPolicy,
+    sample_slots,
+    sample_token,
+)
+from repro.serve.spec import (  # noqa: F401
+    ngram_draft,
+    paired_drafter_cfg,
+)
 from repro.serve.scheduler import (  # noqa: F401
     QueueFull,
     ReplicaRouter,

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.models import Runtime, decode_step, prefill
 from repro.models.layers import Params
-from repro.serve.sampling import sample_token
+from repro.serve.sampling import SamplingPolicy
 
 # (cfg, rt, batch_key, total, max_new, temperature) -> (prefill_fn, loop_fn)
 _CACHE: Dict[Any, Any] = {}
@@ -114,14 +114,13 @@ def compiled_decode_loop(
         global CACHE_BUILDS
         CACHE_BUILDS += 1
 
+        policy = SamplingPolicy(temperature=temperature, vocab=cfg.vocab_size)
+
         def loop(params, state, tok0, rng):
             def step(carry, i):
                 st, tok = carry
                 logits, st = decode_step(cfg, params, st, tok, rt, seq_len=total)
-                tok = sample_token(
-                    logits, jax.random.fold_in(rng, i), temperature,
-                    cfg.vocab_size,
-                )
+                tok = policy.sample(logits, jax.random.fold_in(rng, i))
                 return (st, tok), tok
 
             (state_f, _), toks = jax.lax.scan(
@@ -164,10 +163,11 @@ def generate_dense(
         cfg, rt, bkey, total, max_new_tokens, temperature
     )
 
+    policy = SamplingPolicy(temperature=temperature, vocab=cfg.vocab_size)
     rng = jax.random.PRNGKey(seed)
     t0 = time.perf_counter()
     logits, state = prefill_fn(params, batch)
-    tok0 = sample_token(logits, rng, temperature, cfg.vocab_size)
+    tok0 = policy.sample(logits, rng)
     tok0.block_until_ready()
     ttft = time.perf_counter() - t0
 

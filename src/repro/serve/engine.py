@@ -38,6 +38,25 @@ Families whose decode state is not a KV cache (SSM / RG-LRU recurrences,
 enc-dec cross caches) fall back to the dense path (``paged=False``), grouped
 into equal-prompt-length batches.
 
+Speculative decoding
+--------------------
+With ``EngineConfig.spec_tokens = k`` a decode tick commits a VARIABLE-
+length token run per slot instead of exactly one token: a drafter proposes
+k tokens per slot (model-free prompt-lookup by default, or a paired small
+same-family model — ``serve.spec``), one batched (k+1)-row pass through the
+paged PREFILL path verifies them (``models.lm.verify_step_paged``), and the
+longest draft prefix matching the target's own argmax chain commits
+together with the verify pass's bonus token — 1..k+1 tokens per slot per
+tick. Greedy acceptance (``temperature`` must be 0) makes every committed
+token the target's own argmax, so spec-on output is token-identical to
+spec-off (and to running alone); draft quality only moves throughput.
+Rejected rows roll back for free on device (their KV sits past the
+committed length, masked and overwritten) and via ``PagePool.truncate``
+host-side for the pool reservation under the optimistic policy. The
+multi-token commit rides the existing emits contract: ``on_token``
+streaming, TPOT/goodput accounting, cancel/preempt bookkeeping all see the
+same per-slot token runs they would under one-token ticks.
+
 Prefix cache + chunked prefill
 ------------------------------
 With ``EngineConfig.prefix_cache`` a radix tree (``serve.prefix``) keeps
@@ -88,11 +107,13 @@ from repro.models import (
     prefill_chunk_paged,
 )
 from repro.models.layers import Params
+from repro.models.lm import verify_step_paged
 from repro.models.stack import write_prefill_to_pool
 from repro.serve import dense as dense_mod
+from repro.serve import spec as spec_mod
 from repro.serve.pool import PagePool, PoolExhausted
 from repro.serve.prefix import PrefixCache
-from repro.serve.sampling import sample_slots, sample_token
+from repro.serve.sampling import SamplingPolicy
 from repro.serve.scheduler import Request, Scheduler
 
 
@@ -154,6 +175,19 @@ class EngineConfig:
     # unbounded). submit() raises scheduler.QueueFull at the bound; the
     # async front-end turns that into an awaitable retry.
     max_queue: int = 0
+    # Speculative decoding: draft spec_tokens tokens per decode tick and
+    # verify them in ONE batched (k+1)-row pass through the paged-prefill
+    # write-then-attend path; a prefix of matching drafts plus the verify
+    # pass's own next token commit together (1..k+1 tokens per slot per
+    # tick). Greedy acceptance only (temperature must be 0): every
+    # committed token equals the target model's own argmax, so the stream
+    # is the target's greedy stream and batched==alone survives. 0 = off.
+    spec_tokens: int = 0
+    # Drafter kind: "ngram" (model-free prompt lookup, default) or "model"
+    # (a paired small same-family config; pass draft_params to ServeEngine).
+    spec_drafter: str = "ngram"
+    # Longest n-gram the prompt-lookup drafter matches on.
+    spec_ngram: int = 3
 
     @property
     def chunk_tokens(self) -> int:
@@ -162,71 +196,92 @@ class EngineConfig:
         return self.prefill_chunk or self.prefill_bucket or self.page_size
 
     @classmethod
-    def sized_for(
+    def capacity(
         cls,
         max_prompt_total: int,
         max_new: int,
         *,
-        slots: int,
-        page_size: int = 16,
-        headroom: float = 1.0,
-        **kw,
-    ) -> "EngineConfig":
-        """Config sized so ``slots`` worst-case requests (prompt incl. any
-        frontend prefix + ``max_new``) fit concurrently — the one place the
-        capacity arithmetic lives, next to the reservation policy it must
-        satisfy (``scheduler.reserve_tokens`` needs ``horizon - 1`` tokens).
-        ``headroom`` > 1 over-provisions pages for queue churn."""
-        horizon = max_prompt_total + max_new
-        max_len = -(-horizon // page_size) * page_size
-        pages_per_req = max_len // page_size
-        num_pages = 1 + math.ceil(slots * pages_per_req * headroom)
-        return cls(
-            max_slots=slots, page_size=page_size, num_pages=num_pages,
-            max_len=max_len, **kw,
-        )
-
-    @classmethod
-    def sized_for_budget(
-        cls,
-        cfg,
-        max_prompt_total: int,
-        max_new: int,
-        *,
-        pool_bytes: int,
+        slots: Optional[int] = None,
+        pool_bytes: Optional[int] = None,
+        cfg=None,
         page_size: int = 16,
         headroom: float = 1.0,
         kv_dtype: str = "bf16",
         native_itemsize: int = 2,
-        **kw,
-    ) -> "EngineConfig":
-        """Inverse of :meth:`sized_for`: size the SLOT count to an HBM pool
-        budget. Given ``pool_bytes`` per device, derive how many worst-case
-        requests fit at ``kv_dtype`` page pricing (``pool.kv_page_bytes``,
-        incl. scale buffers) — the resident-request capacity that quantized
-        pools multiply (~2x at int8 vs a bf16 pool of equal bytes)."""
-        from repro.serve.pool import kv_page_bytes
+    ) -> "Capacity":
+        """THE capacity arithmetic, in one direction-agnostic call.
 
+        Give ``slots`` to size a pool for that many worst-case requests
+        (prompt incl. any frontend prefix + ``max_new``; the reservation
+        policy needs ``horizon - 1`` tokens per request), or ``pool_bytes``
+        to size the SLOT count to an HBM budget at ``kv_dtype`` page
+        pricing (``pool.kv_page_bytes``, incl. scale buffers — the
+        resident-request capacity quantized pools multiply). Exactly one of
+        the two. ``headroom`` > 1 over-provisions pages for queue churn.
+        Byte pricing needs the model ``cfg`` (required with ``pool_bytes``;
+        optional with ``slots``, where the byte fields report 0 without
+        it). Returns a :class:`Capacity`; call ``.engine(**kw)`` on it for
+        the ``EngineConfig``."""
+        if (slots is None) == (pool_bytes is None):
+            raise ValueError("pass exactly one of slots= / pool_bytes=")
+        if pool_bytes is not None and cfg is None:
+            raise ValueError("pool_bytes sizing needs cfg= for byte pricing")
         horizon = max_prompt_total + max_new
         max_len = -(-horizon // page_size) * page_size
-        pages_per_req = max_len // page_size
-        page_bytes = kv_page_bytes(
-            page_size, cfg.n_kv_heads, cfg.head_dim, cfg.n_layers,
-            kv_dtype, native_itemsize,
+        pages_per_request = max_len // page_size
+        page_bytes = 0
+        if cfg is not None:
+            from repro.serve.pool import kv_page_bytes
+
+            page_bytes = kv_page_bytes(
+                page_size, cfg.n_kv_heads, cfg.head_dim, cfg.n_layers,
+                kv_dtype, native_itemsize,
+            )
+        if slots is not None:
+            num_pages = 1 + math.ceil(slots * pages_per_request * headroom)
+        else:
+            # The pool allocates 1 + slots * per_slot pages and the reserved
+            # null page costs page_bytes like any other, so it is charged
+            # against the budget too — otherwise the pool overspends
+            # pool_bytes by up to one page. (The max(1, .) floor still
+            # returns a working 1-slot config for budgets too small to
+            # honor; callers sizing to a real HBM budget pass enough.)
+            budget_pages = pool_bytes // page_bytes - 1    # null page charged
+            per_slot = math.ceil(pages_per_request * headroom)
+            slots = max(1, int(budget_pages) // per_slot)
+            num_pages = 1 + slots * per_slot
+        return Capacity(
+            slots=slots, page_size=page_size, max_len=max_len,
+            pages_per_request=pages_per_request, num_pages=num_pages,
+            bytes_per_token=(page_bytes // page_size if page_bytes else 0),
+            page_bytes=page_bytes, pool_bytes=num_pages * page_bytes,
+            kv_dtype=kv_dtype,
         )
-        # The returned config allocates 1 + slots * per_slot pages and the
-        # reserved null page costs page_bytes like any other, so it must be
-        # charged against the budget too — otherwise the pool overspends
-        # pool_bytes by up to one page. (The max(1, .) floor still returns
-        # a working 1-slot config for budgets too small to honor; callers
-        # sizing to a real HBM budget pass adequate pool_bytes.)
-        budget_pages = pool_bytes // page_bytes - 1        # null page charged
-        per_slot = math.ceil(pages_per_req * headroom)
-        slots = max(1, int(budget_pages) // per_slot)
-        num_pages = 1 + slots * per_slot
-        return cls(
-            max_slots=slots, page_size=page_size, num_pages=num_pages,
-            max_len=max_len, kv_dtype=kv_dtype, **kw,
+
+
+@dataclasses.dataclass(frozen=True)
+class Capacity:
+    """Named result of :meth:`EngineConfig.capacity` — the worst-case-request
+    -> pages -> pool arithmetic as one inspectable value instead of fields
+    scattered across an ``EngineConfig``."""
+
+    slots: int                # concurrent worst-case requests
+    page_size: int
+    max_len: int              # per-request horizon, page-aligned
+    pages_per_request: int    # pages one worst-case request spans (no headroom)
+    num_pages: int            # pool size INCLUDING the reserved null page 0
+    bytes_per_token: int      # KV bytes/token across layers (0 without cfg)
+    page_bytes: int           # bytes_per_token * page_size (0 without cfg)
+    pool_bytes: int           # num_pages * page_bytes (null page included)
+    kv_dtype: str
+
+    def engine(self, **kw) -> EngineConfig:
+        """The ``EngineConfig`` realizing this capacity plan; ``kw`` passes
+        every non-capacity field through (inner_steps, policy, ...)."""
+        kw.setdefault("kv_dtype", self.kv_dtype)
+        return EngineConfig(
+            max_slots=self.slots, page_size=self.page_size,
+            num_pages=self.num_pages, max_len=self.max_len, **kw,
         )
 
 
@@ -283,6 +338,8 @@ class ServeEngine:
         rt: Optional[Runtime] = None,
         engine: EngineConfig = EngineConfig(),
         paged: Optional[bool] = None,
+        draft_params: Optional[Params] = None,
+        draft_cfg: Optional[ArchConfig] = None,
     ):
         from repro.kernels.paged_attention import quant
 
@@ -302,6 +359,47 @@ class ServeEngine:
                 "use paged=False (dense fallback)"
             )
         self.paged = paged
+        self._policy = SamplingPolicy(
+            temperature=engine.temperature, vocab=cfg.vocab_size,
+            seed=engine.seed,
+        )
+        if engine.spec_tokens:
+            if not paged:
+                raise ValueError(
+                    "speculative decoding needs the paged engine (the "
+                    "verify pass is the paged-prefill path); spec_tokens=0 "
+                    "for dense-fallback families"
+                )
+            if engine.temperature != 0.0:
+                raise ValueError(
+                    "speculative decoding is greedy-acceptance only: "
+                    "spec_tokens>0 requires temperature=0.0"
+                )
+            if engine.spec_drafter not in spec_mod.DRAFTER_KINDS:
+                raise ValueError(
+                    f"spec_drafter={engine.spec_drafter!r} not in "
+                    f"{spec_mod.DRAFTER_KINDS}"
+                )
+            if engine.spec_drafter == "model":
+                if engine.prefix_cache or engine.prefill_chunk:
+                    raise ValueError(
+                        "spec_drafter='model' needs the legacy whole-prompt "
+                        "admission prefill (the drafter's KV is built "
+                        "there); prefix_cache/prefill_chunk admit without "
+                        "recompute, leaving the drafter blind — use the "
+                        "ngram drafter with those modes"
+                    )
+                if cfg.frontend is not None:
+                    raise ValueError(
+                        "spec_drafter='model': modality-prefix embeddings "
+                        "are sized for the target d_model and cannot feed "
+                        "the reduced drafter — use the ngram drafter"
+                    )
+                if draft_params is None:
+                    raise ValueError(
+                        "spec_drafter='model' needs draft_params (init the "
+                        "paired config from spec.paired_drafter_cfg(cfg))"
+                    )
         if self.rt.mesh is not None and params is not None:
             # Megatron layout over the mesh's `model` axis; leaves whose
             # dims don't divide stay replicated (specs.py guards), so any
@@ -363,7 +461,7 @@ class ServeEngine:
             ckey = (
                 cfg, self.rt, engine.max_slots, engine.page_size,
                 engine.num_pages, engine.max_len, engine.inner_steps,
-                engine.temperature,
+                engine.temperature, engine.spec_tokens,
             )  # seed/policy/prefill_bucket are host-side only
             if ckey not in _CHUNK_CACHE:
                 _CHUNK_CACHE[ckey] = self._build_chunk_fn()
@@ -378,6 +476,39 @@ class ServeEngine:
                         self._build_fused_fn(), self._build_prefill_fn()
                     )
                 self._fused_fn, self._prefill_fn = _CHUNK_CACHE[fkey]
+            if engine.spec_tokens:
+                vkey = ckey + ("verify",)
+                if vkey not in _CHUNK_CACHE:
+                    _CHUNK_CACHE[vkey] = self._build_verify_fn()
+                self._verify_fn = _CHUNK_CACHE[vkey]
+                if engine.spec_drafter == "model":
+                    # drafter caches share the TARGET's block tables and
+                    # page geometry (same page ids index its own smaller
+                    # per-layer pools), so pool accounting is done once;
+                    # only the caches leafset and the host-side lengths /
+                    # catch-up trackers are drafter-private. The drafter
+                    # never shards: it is reduced() — tiny — and its pools
+                    # must not entangle the mesh donation of the target's.
+                    self._draft_cfg = (
+                        draft_cfg if draft_cfg is not None
+                        else spec_mod.paired_drafter_cfg(cfg)
+                    )
+                    self._draft_params = draft_params
+                    self._draft_rt = self.rt.replace(mesh=None)
+                    self._draft_dev = {
+                        "caches": init_paged_state(
+                            self._draft_cfg, B, self._draft_rt,
+                            num_pages=engine.num_pages,
+                            page_size=engine.page_size,
+                            max_len=engine.max_len,
+                        )["caches"]
+                    }
+                    self._draft_len = np.zeros(B, np.int64)
+                    self._spec_catchup = np.full(B, -1, np.int64)
+                    dkey = ckey + ("draft", self._draft_cfg)
+                    if dkey not in _CHUNK_CACHE:
+                        _CHUNK_CACHE[dkey] = self._build_draft_fn()
+                    self._draft_fn = _CHUNK_CACHE[dkey]
         self.prefix: Optional[PrefixCache] = (
             PrefixCache(self.pool)
             if self.paged and engine.prefix_cache else None
@@ -459,6 +590,12 @@ class ServeEngine:
         self._run_evict0 = self.stats.get("evictions", 0)
         self._run_discard0 = self.stats.get("discarded_tokens", 0)
         self._run_decode_tokens = 0
+        self._run_spec0 = tuple(
+            self.stats.get(key, 0) for key in (
+                "spec_verify_calls", "spec_drafted_tokens",
+                "spec_accepted_tokens",
+            )
+        )
 
     def step(self) -> Dict[str, Any]:
         """ONE engine tick: admit -> top-up -> one jitted chunk -> collect
@@ -505,6 +642,18 @@ class ServeEngine:
             decode_tokens - discarded + n_prefill
         ) / max(wall, 1e-9)
         self.stats["pool_high_water_pages"] = self.pool.high_water
+        if self.ecfg.spec_tokens:
+            # run-window acceptance stats: rate = accepted drafts over
+            # drafted; accepted-per-verify adds the bonus token (mean
+            # committed run length per verify call, 1..k+1)
+            v0, d0, a0 = self._run_spec0
+            verifies = self.stats.get("spec_verify_calls", 0) - v0
+            drafted = self.stats.get("spec_drafted_tokens", 0) - d0
+            acc = self.stats.get("spec_accepted_tokens", 0) - a0
+            self.stats["spec_accept_rate"] = acc / max(drafted, 1)
+            self.stats["spec_accepted_per_verify"] = (
+                (acc + verifies) / max(verifies, 1)
+            )
         if self.prefix is not None:
             self.stats.update(self.prefix.stats())
         run_rids = sorted(self._completed_run)
@@ -643,6 +792,7 @@ class ServeEngine:
     def _decode_scan_fn(self):
         """Traceable body shared by the decode-only and fused chunk fns."""
         cfg, rt, ecfg = self.cfg, self.rt, self.ecfg
+        policy = self._policy
 
         def chunk(params, caches, tables, lengths, remaining, tok, keys, steps):
             state0 = {"caches": caches, "tables": tables, "lengths": lengths}
@@ -654,9 +804,7 @@ class ServeEngine:
                     cfg, params, state, tok, rt, max_len=ecfg.max_len,
                     active=active,
                 )
-                nxt = sample_slots(
-                    logits, keys, steps, ecfg.temperature, cfg.vocab_size
-                )
+                nxt = policy.sample_slots(logits, keys, steps)
                 emit = jnp.where(active, nxt, -1)
                 tok = jnp.where(active, nxt, tok)
                 act = active.astype(jnp.int32)
@@ -723,6 +871,86 @@ class ServeEngine:
 
         return jax.jit(pf_only, donate_argnums=(1,))
 
+    def _build_verify_fn(self):
+        """Batched (k+1)-row verify + greedy acceptance, one jitted program.
+
+        ``tokens`` (B, k+1) carries each slot's pending token + its k drafts
+        at positions ``lengths .. lengths + k``; ``q_len`` 0 disables a
+        slot. Returns (caches, g (B, k+1), a (B,)): ``g`` is the target's
+        own argmax of every verify row — row j's argmax is what a
+        sequential greedy decode would emit AFTER token j of the run — and
+        ``a`` is the count of leading drafts that equal that argmax chain
+        (``d_j == g_{j-1}``), i.e. the accepted prefix. Committing
+        ``c = a + 1`` tokens ``g_0 .. g_{c-1}`` is therefore exactly the
+        target's greedy stream regardless of draft quality (a junk or
+        zero-padded draft is accepted only when it IS the argmax)."""
+        cfg, rt, ecfg = self.cfg, self.rt, self.ecfg
+        policy = self._policy
+
+        def verify(params, caches, tables, lengths, tokens, q_len):
+            state = {"caches": caches, "tables": tables, "lengths": lengths}
+            logits, state = verify_step_paged(
+                cfg, params, state, tokens, q_len, rt, ecfg.max_len
+            )
+            g = policy.greedy_tokens(logits)                   # (B, k+1)
+            ok = (tokens[:, 1:] == g[:, :-1]).astype(jnp.int32)
+            a = jnp.cumprod(ok, axis=1).sum(axis=1)            # (B,)
+            return state["caches"], g, a
+
+        return jax.jit(verify, donate_argnums=(1,))
+
+    def _build_draft_fn(self):
+        """Greedy k-step decode scan of the paired drafter model.
+
+        The drafter trails the target by at most one token (full-accept
+        catch-up), so each tick force-feeds 1–2 known tokens — ``forced``
+        (B, 2) = [catch-up-or-pending, pending-or-junk], ``n_forced`` in
+        {1, 2} — then free-runs on its own argmax emits. Per slot the scan
+        takes ``(n_forced - 1) + k`` active steps (masked per-step), so the
+        k proposals for slot b are ``emits[n_forced_b - 1 : n_forced_b - 1
+        + k, b]``. ``d_len`` is the drafter's own cached length (host-
+        tracked); tables are the TARGET's block tables — same page ids,
+        drafter-private pools."""
+        dcfg, rt, ecfg = self._draft_cfg, self._draft_rt, self.ecfg
+        k = ecfg.spec_tokens
+        policy = SamplingPolicy(temperature=0.0, vocab=dcfg.vocab_size)
+
+        def draft(params, caches, tables, d_len, forced, n_forced, active):
+            state0 = {"caches": caches, "tables": tables, "lengths": d_len}
+            n_steps = (n_forced - 1) + k
+
+            def step(carry, i):
+                state, tok = carry
+                inp = jnp.where(
+                    i == 0, forced[:, 0],
+                    jnp.where(i < n_forced, forced[:, 1], tok),
+                )
+                act = active & (i < n_steps)
+                logits, state = decode_step_paged(
+                    dcfg, params, state, inp, rt, max_len=ecfg.max_len,
+                    active=act,
+                )
+                emit = policy.greedy_tokens(logits)
+                return (state, emit), emit
+
+            (state, _), emits = jax.lax.scan(
+                step, (state0, forced[:, 0]), jnp.arange(k + 1)
+            )
+            return state["caches"], emits                      # (k+1, B)
+
+        return jax.jit(draft, donate_argnums=(1,))
+
+    @property
+    def _lookahead(self) -> int:
+        """Tokens one tick may write per slot: ``inner_steps`` for the
+        decode scan, ``spec_tokens + 1`` verify rows for a speculative
+        tick (writes land at ``lengths .. lengths + k`` even when fewer
+        commit)."""
+        ecfg = self.ecfg
+        if ecfg.spec_tokens:
+            return max(ecfg.inner_steps, ecfg.spec_tokens + 1)
+        return ecfg.inner_steps
+
     def _admission_headroom(self) -> int:
         """Extra free pages required beyond a newcomer's reservation under
         the optimistic policy: one chunk's worth of page-boundary crossings
@@ -734,7 +962,7 @@ class ServeEngine:
         n_active = sum(1 for s in self._slots if s is not None)
         if n_active == 0:
             return 0
-        per_slot = self.ecfg.inner_steps // self.ecfg.page_size + 1
+        per_slot = self._lookahead // self.ecfg.page_size + 1
         return (n_active + 1) * per_slot
 
     def _use_chunked(self, req: Request) -> bool:
@@ -848,11 +1076,8 @@ class ServeEngine:
             )
         else:
             logits, pstate = prefill_fn(self.params, batch)
-        rkey = jax.random.fold_in(jax.random.PRNGKey(ecfg.seed), req.rid)
-        tok0 = sample_token(
-            logits, jax.random.fold_in(rkey, 0), ecfg.temperature,
-            cfg.vocab_size,
-        )
+        rkey = self._policy.request_key(req.rid)
+        tok0 = self._policy.sample(logits, jax.random.fold_in(rkey, 0))
         tok0.block_until_ready()
         now = time.perf_counter()
         # TTFT from SUBMIT time — queue wait included — on every path; a
@@ -869,6 +1094,29 @@ class ServeEngine:
             self._dev["caches"], pstate["caches"], table_row,
             page_size=ecfg.page_size,
         )
+        if ecfg.spec_tokens and ecfg.spec_drafter == "model":
+            # bring the drafter level with the target: prefill the same
+            # (padded) prompt through the paired config and scatter its KV
+            # through the SAME table row into the drafter's pools; from
+            # here on the drafter advances inside the spec tick's scan
+            d_prefill = dense_mod.compiled_prefill(
+                self._draft_cfg, self._draft_rt,
+                dense_mod.batch_shape_key(batch),
+                prompt_total + (len(tokens) - req.prompt_len),
+                dynamic_gather=bool(bucket), full_cache=True,
+            )
+            if bucket:
+                _, dstate = d_prefill(
+                    self._draft_params, batch, jnp.int32(prompt_total - 1)
+                )
+            else:
+                _, dstate = d_prefill(self._draft_params, batch)
+            self._draft_dev["caches"] = self._scatter_fn(
+                self._draft_dev["caches"], dstate["caches"], table_row,
+                page_size=ecfg.page_size,
+            )
+            self._draft_len[slot_id] = prompt_total
+            self._spec_catchup[slot_id] = -1
         d = self._dev
         d["tables"] = d["tables"].at[slot_id].set(table_row)
         d["lengths"] = d["lengths"].at[slot_id].set(prompt_total)
@@ -894,7 +1142,7 @@ class ServeEngine:
             if slot is None:
                 continue
             need = int(lengths[slot_id]) + min(
-                int(remaining[slot_id]), self.ecfg.inner_steps
+                int(remaining[slot_id]), self._lookahead
             )
             while self._slots[slot_id] is not None:
                 try:
@@ -979,6 +1227,131 @@ class ServeEngine:
         )
         return np.asarray(emits), np.asarray(remaining)
 
+    def _spec_step(self):
+        """One speculative tick over all decode slots: draft k tokens per
+        slot (host-side ngram lookup, or the paired drafter model's scan),
+        verify every slot's [pending, drafts] run in ONE batched (k+1)-row
+        pass through the paged-prefill write-then-attend path, and commit
+        the accepted prefix plus the verify pass's own bonus token —
+        1..k+1 tokens per slot per tick, never fewer than an ordinary
+        decode step's 1 (row 0 alone IS that decode step). Every committed
+        token is the target's own argmax, so the stream is token-identical
+        to non-speculative greedy decode (and to running alone). Rejected
+        rows need no device rollback (see ``models.lm.verify_step_paged``);
+        under the optimistic policy the pool reservation is rewound
+        host-side via ``PagePool.truncate``."""
+        ecfg = self.ecfg
+        k = ecfg.spec_tokens
+        B = ecfg.max_slots
+        d = self._dev
+        lengths = np.array(d["lengths"])
+        remaining = np.array(d["remaining"])
+        tok = np.array(d["tok"])
+        steps = np.array(d["steps"])
+        active = np.array(
+            [s is not None for s in self._slots]
+        ) & (remaining > 0)
+        n_act = int(active.sum())
+        if n_act == 0:
+            return np.full((0, B), -1, np.int32), remaining
+        drafts = np.zeros((B, k), np.int32)
+        if ecfg.spec_drafter == "model":
+            drafts = self._run_draft(active, tok)
+        else:
+            for slot_id, slot in enumerate(self._slots):
+                if not active[slot_id]:
+                    continue
+                ctx = np.concatenate([
+                    slot.req.tokens,
+                    np.asarray(self._outputs[slot.rid], np.int32),
+                ])
+                prop = spec_mod.ngram_draft(ctx, k, ecfg.spec_ngram)
+                drafts[slot_id, : len(prop)] = prop
+        # row 0 = the pending token (sampled last tick, not yet cached);
+        # rows 1..k = drafts. Zero-padded/junk drafts are harmless: they
+        # commit only if they equal the argmax — the correct token anyway.
+        tokens = np.concatenate([tok[:, None], drafts], axis=1)
+        q_len = np.where(active, k + 1, 0).astype(np.int32)
+        caches, g, a = self._verify_fn(
+            self.params, d["caches"], d["tables"], d["lengths"],
+            self._place(jnp.asarray(tokens, jnp.int32)),
+            self._place(jnp.asarray(q_len)),
+        )
+        d["caches"] = caches
+        g, a = np.asarray(g), np.asarray(a)
+        stats = self.stats
+        stats["spec_verify_calls"] = stats.get("spec_verify_calls", 0) + n_act
+        stats["spec_drafted_tokens"] = (
+            stats.get("spec_drafted_tokens", 0) + n_act * k
+        )
+        emits = np.full((k + 1, B), -1, np.int32)
+        accepted = 0
+        for slot_id, slot in enumerate(self._slots):
+            if not active[slot_id]:
+                continue
+            c = int(min(a[slot_id] + 1, remaining[slot_id]))
+            emits[:c, slot_id] = g[slot_id, :c]
+            lengths[slot_id] += c
+            remaining[slot_id] -= c
+            tok[slot_id] = g[slot_id, c - 1]   # new pending token
+            steps[slot_id] += c
+            accepted += c - 1
+            if ecfg.policy == "optimistic":
+                # pool-accounting half of rejection rollback: hand back
+                # reservation the rejected tail no longer needs (refcount/
+                # COW-safe inside the pool; table rows are rewritten from
+                # the pool every tick under this policy)
+                self.pool.truncate(slot.sid, int(lengths[slot_id]))
+            if ecfg.spec_drafter == "model":
+                if c == k + 1:
+                    # full accept: the drafter never cached g_{k-1} (it
+                    # only consumed through its own (k-1)th emit) — force-
+                    # feed it next tick, then the new pending token
+                    self._spec_catchup[slot_id] = int(g[slot_id, k - 1])
+                    self._draft_len[slot_id] = int(lengths[slot_id]) - 1
+                else:
+                    # partial accept: the drafter's accepted prefix is
+                    # already cached correctly; rewind its length past the
+                    # rejected tail (stale KV beyond it is masked by
+                    # length and overwritten by the next scan)
+                    self._spec_catchup[slot_id] = -1
+                    self._draft_len[slot_id] = int(lengths[slot_id])
+        stats["spec_accepted_tokens"] = (
+            stats.get("spec_accepted_tokens", 0) + accepted
+        )
+        d["lengths"] = self._place(jnp.asarray(lengths))
+        d["remaining"] = self._place(jnp.asarray(remaining))
+        d["tok"] = self._place(jnp.asarray(tok))
+        d["steps"] = self._place(jnp.asarray(steps))
+        return emits, remaining
+
+    def _run_draft(self, active: np.ndarray, tok: np.ndarray) -> np.ndarray:
+        """Advance the paired drafter model k greedy steps per active slot
+        and return its proposals (B, k). The drafter trails the target by
+        at most one cached token, so 1–2 known tokens are force-fed first
+        (see ``_build_draft_fn``); its block tables ARE the target's."""
+        ecfg = self.ecfg
+        k = ecfg.spec_tokens
+        B = ecfg.max_slots
+        catch = self._spec_catchup
+        n_forced = np.where(active & (catch >= 0), 2, 1).astype(np.int32)
+        forced = np.zeros((B, 2), np.int32)
+        forced[:, 0] = np.where(catch >= 0, catch, tok)
+        forced[:, 1] = tok
+        caches, emits = self._draft_fn(
+            self._draft_params, self._draft_dev["caches"],
+            self._dev["tables"], jnp.asarray(self._draft_len, jnp.int32),
+            jnp.asarray(forced), jnp.asarray(n_forced), jnp.asarray(active),
+        )
+        self._draft_dev["caches"] = caches
+        emits = np.asarray(emits)               # (k+1, B)
+        drafts = np.zeros((B, k), np.int32)
+        for b in range(B):
+            if active[b]:
+                o = int(n_forced[b]) - 1
+                drafts[b] = emits[o : o + k, b]
+        return drafts
+
     def _place(self, arr: jax.Array) -> jax.Array:
         """Commit a fresh host array replicated onto the mesh (the fused fn
         mixes it with sharded pools; see ``dense.place_batch``)."""
@@ -1001,6 +1374,13 @@ class ServeEngine:
             if s is not None and s.phase == "prefill"
         ]
         if not pf:
+            # speculative ticks need every seated slot in the decode phase
+            # (the verify batch spans all slots); while any prompt is still
+            # chunking, the ordinary fused tick below keeps decode moving —
+            # both paths emit the same greedy stream, so mixing them tick
+            # by tick never changes tokens
+            if self.ecfg.spec_tokens:
+                return self._spec_step()
             return self._run_chunk()
         slot_id, slot = min(pf, key=lambda kv: kv[1].order)
         req = slot.req
@@ -1055,10 +1435,9 @@ class ServeEngine:
         the batched == alone guarantee) is untouched."""
         ecfg, cfg = self.ecfg, self.cfg
         req = slot.req
-        rkey = jax.random.fold_in(jax.random.PRNGKey(ecfg.seed), req.rid)
-        tok0 = sample_token(
-            pf_logits[None], jax.random.fold_in(rkey, 0), ecfg.temperature,
-            cfg.vocab_size,
+        rkey = self._policy.request_key(req.rid)
+        tok0 = self._policy.sample(
+            pf_logits[None], jax.random.fold_in(rkey, 0)
         )
         tok0.block_until_ready()
         now = time.perf_counter()
@@ -1197,6 +1576,8 @@ class ReplicatedServeEngine:
         engine: EngineConfig = EngineConfig(),
         mesh=None,
         paged: Optional[bool] = None,
+        draft_params: Optional[Params] = None,
+        draft_cfg: Optional[ArchConfig] = None,
     ):
         from repro.launch.mesh import replica_submeshes
         from repro.serve.scheduler import ReplicaRouter
@@ -1204,7 +1585,10 @@ class ReplicatedServeEngine:
         rt = rt if rt is not None else Runtime()
         meshes = replica_submeshes(mesh) if mesh is not None else [rt.mesh]
         self.engines = [
-            ServeEngine(cfg, params, rt.replace(mesh=m), engine, paged=paged)
+            ServeEngine(
+                cfg, params, rt.replace(mesh=m), engine, paged=paged,
+                draft_params=draft_params, draft_cfg=draft_cfg,
+            )
             for m in meshes
         ]
         self.router = ReplicaRouter(len(self.engines))
@@ -1345,10 +1729,22 @@ class ReplicatedServeEngine:
         for key in (
             "prompt_tokens", "prefix_lookups", "prefix_hits",
             "prefix_cached_tokens", "prefill_chunks",
+            "spec_verify_calls", "spec_drafted_tokens",
+            "spec_accepted_tokens",
         ):
             vals = [e.stats[key] for e in self.engines if key in e.stats]
             if vals:
                 self.stats[key] = sum(vals)
+        if "spec_verify_calls" in self.stats:
+            # fleet-level acceptance from the summed run-window counters
+            # (each engine's own rates cover only its replica)
+            acc = self.stats.get("spec_accepted_tokens", 0)
+            self.stats["spec_accept_rate"] = acc / max(
+                self.stats.get("spec_drafted_tokens", 0), 1
+            )
+            self.stats["spec_accepted_per_verify"] = (
+                acc + self.stats["spec_verify_calls"]
+            ) / max(self.stats["spec_verify_calls"], 1)
         return merged
 
     def run(self) -> Dict[int, np.ndarray]:

@@ -49,7 +49,7 @@ def kv_page_bytes(
     """Device bytes one pool page costs across all layers (K + V codes, plus
     the per-(slot, head) f32 scale buffers under a quantized ``kv_dtype``).
     The single byte-accounting rule shared by the engine's per-request
-    stats, ``EngineConfig.sized_for_budget``, the serve CLI, and the
+    stats, ``EngineConfig.capacity``, the serve CLI, and the
     quantized-pool bench — page metadata here is host-side and free."""
     from repro.kernels.paged_attention.quant import kv_token_bytes
 
@@ -174,6 +174,28 @@ class PagePool:
     def ensure(self, sid: int, n_tokens: int) -> None:
         """Grow reserved capacity to at least ``n_tokens`` (idempotent)."""
         self.append(sid, n_tokens - self._seqs[sid].tokens)
+
+    def truncate(self, sid: int, n_tokens: int) -> None:
+        """Shrink a sequence's reserved capacity to ``n_tokens`` (floor 1,
+        matching ``alloc``), releasing tail pages past
+        ``pages_for(n_tokens)`` — the rejection-rollback verb of speculative
+        decoding. Refcount/COW-safe by construction: a released tail page
+        only drops one reference (a fork or prefix-cache retain keeps the
+        device bytes alive for its other owners), ``_release`` already drops
+        pending COW copies whose destination page dies with the truncation,
+        and no data moves — positions below ``n_tokens`` are untouched,
+        while stale tokens above are unreachable under the engine's
+        write-then-attend contract (never attended past the committed
+        length, overwritten before any future attend). Growing is not this
+        verb's job: ``n_tokens >= tokens`` is a no-op."""
+        seq = self._seqs[sid]
+        n_tokens = max(1, n_tokens)
+        if n_tokens >= seq.tokens:
+            return
+        keep = self.pages_for(n_tokens)
+        while len(seq.pages) > keep:
+            self._release(seq.pages.pop())
+        seq.tokens = n_tokens
 
     def retain(self, pages: List[int]) -> None:
         """Cache-side reference on already-live pages (no sequence). The

@@ -1,12 +1,21 @@
 """Token sampling shared by the dense path and the paged serve engine.
 
-``sample_token`` keeps the historical ``repro.train.serve`` contract (one key
-for the whole batch); ``sample_slots`` is the continuous-batching variant —
-every decode slot carries its own key and per-request step counter, so a
-request's sample stream is identical whether it runs alone or packed into a
-busy batch (admission order cannot perturb outputs).
+:class:`SamplingPolicy` is the one policy object every token-producing path
+goes through — dense generation, the engine's prefill first-token and decode
+scan, and speculative decoding's verify/acceptance rule — so greedy vs
+temperature behavior and per-slot key derivation are defined in exactly one
+place (and spec-sampling acceptance has one seam to land in later).
+
+The module-level primitives remain: ``sample_token`` keeps the historical
+``repro.train.serve`` contract (one key for the whole batch);
+``sample_slots`` is the continuous-batching variant — every decode slot
+carries its own key and per-request step counter, so a request's sample
+stream is identical whether it runs alone or packed into a busy batch
+(admission order cannot perturb outputs).
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -53,3 +62,56 @@ def sample_slots(
         return jax.random.categorical(k, logit / temperature)
 
     return jax.vmap(one)(logits, keys, steps).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingPolicy:
+    """Greedy/temperature sampling plus per-request key derivation, as one
+    value. Hashable and usable as part of a jit cache key, so jitted step
+    functions can close over a policy without retracing per request.
+
+      temperature  0 = greedy (argmax); >0 = categorical at that temperature
+      vocab        true vocab size; padding ids above it are masked out
+      seed         engine seed; per-request streams are fold_in(seed, rid)
+    """
+
+    temperature: float = 0.0
+    vocab: int = 0
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+    def request_key(self, rid: int) -> jax.Array:
+        """Root PRNG key of request ``rid``'s sample stream (depends only on
+        (seed, rid) — never on engine time or co-resident requests)."""
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed), rid)
+
+    def sample(self, logits: jax.Array, key: jax.Array) -> jax.Array:
+        """One-key-per-batch sampling (dense path / prefill first token).
+        logits: (B, Vp)."""
+        return sample_token(logits, key, self.temperature, self.vocab)
+
+    def first_token(self, logits: jax.Array, rid: int) -> jax.Array:
+        """Step 0 of request ``rid``'s stream — the prefill-produced token."""
+        key = jax.random.fold_in(self.request_key(rid), 0)
+        return sample_token(logits, key, self.temperature, self.vocab)
+
+    def sample_slots(
+        self, logits: jax.Array, keys: jax.Array, steps: jax.Array
+    ) -> jax.Array:
+        """Per-slot sampling inside the decode scan. logits: (B, Vp); keys:
+        (B, 2) per-slot request keys; steps: (B,) per-request counters."""
+        return sample_slots(logits, keys, steps, self.temperature, self.vocab)
+
+    def greedy_tokens(self, logits: jax.Array) -> jax.Array:
+        """argmax over vocab-masked logits at any leading shape — the
+        speculative-decoding verify/acceptance rule. Deliberately ignores
+        ``temperature``: greedy acceptance is what makes accepted tokens
+        token-identical to the target's own greedy stream."""
+        flat = mask_padded_logits(
+            logits.reshape(-1, logits.shape[-1]), self.vocab
+        )
+        toks = jnp.argmax(flat, axis=-1).astype(jnp.int32)
+        return toks.reshape(logits.shape[:-1])

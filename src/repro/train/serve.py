@@ -54,10 +54,9 @@ def generate(
         )
         eng = ServeEngine(
             cfg, params, rt,
-            EngineConfig.sized_for(
+            EngineConfig.capacity(
                 prompt_total, max_new_tokens, slots=B,
-                temperature=temperature, seed=seed,
-            ),
+            ).engine(temperature=temperature, seed=seed),
         )
         fe = batch.get("frontend_embeds")
         rids = [

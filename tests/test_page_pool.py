@@ -79,16 +79,47 @@ def test_fork_free_order_independent():
     pool.check()
 
 
+def test_truncate_releases_tail_pages():
+    """The speculative-decoding rollback verb: shrink a reservation to the
+    committed token count, releasing exactly the pages past it."""
+    pool = PagePool(num_pages=9, page_size=4)
+    a = pool.alloc(15)                 # 4 pages
+    keep = pool.seq_pages(a)[:2]
+    pool.truncate(a, 7)                # -> 2 pages
+    assert pool.seq_pages(a) == keep
+    assert pool.pages_in_use == 2
+    pool.truncate(a, 7)                # idempotent
+    pool.truncate(a, 12)               # growing is not truncate's job: no-op
+    assert pool.seq_pages(a) == keep
+    pool.ensure(a, 12)                 # the grow verb re-extends
+    assert len(pool.seq_pages(a)) == 3
+    pool.truncate(a, 0)                # floor 1 token, like alloc
+    assert len(pool.seq_pages(a)) == 1
+    pool.check()
+    # COW safety: truncating a fork releases only the fork's refs; shared
+    # pages survive for the other sequence
+    b = pool.alloc(8)
+    c = pool.fork(b)
+    pool.truncate(c, 1)
+    assert len(pool.seq_pages(b)) == 2
+    pool.free(b)
+    pool.free(c)
+    pool.free(a)
+    pool.check()
+    assert pool.pages_in_use == 0
+
+
 @hypothesis.given(
     st.lists(
-        st.tuples(st.integers(0, 3), st.integers(1, 9)),
+        st.tuples(st.integers(0, 4), st.integers(1, 9)),
         min_size=1, max_size=60,
     )
 )
 @hypothesis.settings(max_examples=60, deadline=None)
 def test_pool_invariants_under_random_ops(ops):
-    """ops: (verb, amount) with verb 0=alloc 1=append 2=free 3=fork; the
-    amount doubles as the token count / live-sequence selector."""
+    """ops: (verb, amount) with verb 0=alloc 1=append 2=free 3=fork
+    4=truncate (the spec-decode rollback verb); the amount doubles as the
+    token count / live-sequence selector."""
     pool = PagePool(num_pages=8, page_size=3)   # budget 7
     live = []
     for verb, n in ops:
@@ -101,6 +132,8 @@ def test_pool_invariants_under_random_ops(ops):
                 pool.free(live.pop(n % len(live)))
             elif verb == 3 and live:
                 live.append(pool.fork(live[n % len(live)]))
+            elif verb == 4 and live:
+                pool.truncate(live[n % len(live)], n - 1)
         except PoolExhausted:
             pass                                # refusal must not corrupt
         pool.check()

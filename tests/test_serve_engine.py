@@ -610,11 +610,12 @@ def test_engine_per_run_stats_are_per_run(arch_state):
     assert len(s["ttft_s"]) == 3      # the dict does accumulate (by design)
 
 
-def test_sized_for_budget_never_overspends(arch_state):
+def test_capacity_budget_never_overspends(arch_state):
     """Regression: the null page was not charged, so num_pages * page_bytes
     could exceed pool_bytes by one page. The sized pool (null page
     included) must now fit the budget whenever the budget can hold at
-    least one usable page."""
+    least one usable page — and the Capacity result's own byte accounting
+    must agree with the pool pricing rule."""
     from repro.serve.pool import kv_page_bytes
 
     cfg, _ = arch_state("granite-8b")
@@ -623,15 +624,39 @@ def test_sized_for_budget_never_overspends(arch_state):
                            cfg.n_layers, "bf16")
     pages_per_req = 40 // page                 # horizon 24+12 -> max_len 40
     # smallest budget that holds one request + the null page, then larger
-    # ones; below that floor sized_for_budget still returns 1 slot by
+    # ones; below that floor budget sizing still returns 1 slot by
     # design (documented), so the no-overspend contract starts here
     floor = (1 + pages_per_req) * page_b
     for budget in (floor, 150_000, 200_000, 400_000, 1_000_000):
-        ecfg = EngineConfig.sized_for_budget(
-            cfg, 24, 12, pool_bytes=budget, page_size=page, kv_dtype="bf16",
+        cap = EngineConfig.capacity(
+            24, 12, pool_bytes=budget, cfg=cfg, page_size=page,
+            kv_dtype="bf16",
         )
-        assert ecfg.num_pages * page_b <= budget, (budget, ecfg.num_pages)
-        assert ecfg.num_pages >= 1 + pages_per_req
+        assert cap.page_bytes == page_b
+        assert cap.pool_bytes == cap.num_pages * page_b <= budget, (
+            budget, cap.num_pages,
+        )
+        assert cap.num_pages >= 1 + pages_per_req
+        assert cap.pages_per_request == pages_per_req
+        ecfg = cap.engine(inner_steps=4)
+        assert (ecfg.max_slots, ecfg.num_pages, ecfg.kv_dtype) == (
+            cap.slots, cap.num_pages, "bf16",
+        )
+
+
+def test_capacity_api_validation(arch_state):
+    cfg, _ = arch_state("granite-8b")
+    with pytest.raises(ValueError, match="exactly one"):
+        EngineConfig.capacity(24, 12)
+    with pytest.raises(ValueError, match="exactly one"):
+        EngineConfig.capacity(24, 12, slots=2, pool_bytes=10**6, cfg=cfg)
+    with pytest.raises(ValueError, match="needs cfg"):
+        EngineConfig.capacity(24, 12, pool_bytes=10**6)
+    # slots mode without cfg: geometry exact, byte fields report 0
+    cap = EngineConfig.capacity(24, 12, slots=3, page_size=8, headroom=2.0)
+    assert cap.max_len == 40 and cap.pages_per_request == 5
+    assert cap.num_pages == 1 + 3 * 5 * 2
+    assert cap.bytes_per_token == cap.page_bytes == cap.pool_bytes == 0
 
 
 def test_replicated_submit_is_transactional(arch_state):

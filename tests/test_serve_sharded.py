@@ -181,6 +181,34 @@ MQA_SCRIPT = HEADER.format(arch="granite-8b") + textwrap.dedent(
 )
 
 
+SPEC_SCRIPT = HEADER.format(arch="moonshot-v1-16b-a3b") + textwrap.dedent(
+    """
+    # speculative decoding under TP=2: drafting (host-side ngram lookup)
+    # and the batched verify pass are layout-blind, so the spec engine at
+    # TP=2 must be token-identical to spec-off at TP=1 — the strongest
+    # form of the "drafting changes speed, never tokens" claim
+    base = rng.randint(0, cfg.vocab_size, (4,)).astype(np.int32)
+    prompts = [np.tile(base, 4)] + prompts[:3]
+    max_news = [10, 9, 4, 12]
+    es = EngineConfig(max_slots=2, page_size=8, num_pages=33, max_len=64,
+                      inner_steps=4, spec_tokens=3)
+    eng0, out0 = run_engine(None)                       # spec-off TP=1
+    eng1, out1 = run_engine(None, es)                   # spec-on  TP=1
+    eng2, out2 = run_engine(make_serve_mesh(1, 2), es)  # spec-on  TP=2
+    for a, b, c in zip(out0, out1, out2):
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, c)
+    assert eng2.stats["spec_verify_calls"] > 0
+    assert eng1.stats["spec_accepted_tokens"] == (
+        eng2.stats["spec_accepted_tokens"])   # same ticks, same commits
+    for eng in (eng1, eng2):
+        eng.pool.check()
+        assert eng.pool.pages_in_use == 0
+    print("SPEC_SHARDED_OK", eng2.stats["spec_accepted_tokens"])
+    """
+)
+
+
 def _run(script, marker):
     r = subprocess.run(
         [sys.executable, "-c", script],
@@ -214,3 +242,7 @@ def test_quantized_pool_token_identical_and_bytes_halved_under_tp():
 
 def test_prefix_cache_and_chunked_prefill_token_identical_under_tp():
     _run(PREFIX_SCRIPT, "PREFIX_SHARDED_OK")
+
+
+def test_speculative_decoding_token_identical_under_tp():
+    _run(SPEC_SCRIPT, "SPEC_SHARDED_OK")
