@@ -27,6 +27,7 @@ MODULES = [
     "benchmarks.serve_spec_bench",
     "benchmarks.serve_trace_bench",
     "benchmarks.train_pipeline_bench",
+    "benchmarks.train_stash_bench",
     "benchmarks.roofline_report",
 ]
 

@@ -3,6 +3,13 @@
 Simulated makespan + peak device memory for each planner on a 36-segment
 granite-8b-like activation profile, at several memory budgets. The "what to
 offload" column of Table 3 becomes measurable policy differences.
+
+Dtype-aware: per-segment bytes come from the roofline stash arithmetic
+(``stash_bytes_per_slot``) at the activation's storage format instead of a
+hard-wired f32 constant — an fp8-stashed segment both fits more budget
+without offloading and pays proportionally less link time per offload. The
+``roofline_reconcile`` accounting row asserts the planner's counted link
+traffic equals segments x the roofline's predicted bytes per segment.
 """
 from __future__ import annotations
 
@@ -14,18 +21,27 @@ from repro.core.offload import (
     lifetime_planner,
     simulate_schedule,
 )
+from repro.roofline.analysis import stash_bytes_per_slot
 
-# granite-8b-ish: 36 blocks, ~0.8 GB activations each at the dry-run batch,
-# forward ~6 ms per block on v5e; host link 50 GB/s.
+# granite-8b-ish: 36 blocks, ~0.8 GB f32 activations each at the dry-run
+# batch, forward ~6 ms per block on v5e; host link 50 GB/s.
 N = 36
+N_ELEMS = int(0.8e9) // 4            # elements per segment (f32 baseline)
 T_FWD = [6e-3] * N
-A_BYTES = [0.8e9] * N
 LINK = LinkModel(bandwidth=50e9, latency=5e-6)
+
+# (label, stash format, native itemsize) -> per-segment stored bytes
+DTYPES = [("f32", "raw", 4), ("bf16", "raw", 2), ("fp8", "fp8", 2)]
+
+
+def _seg_bytes(stash: str, itemsize: int) -> float:
+    return float(stash_bytes_per_slot(N_ELEMS, stash, itemsize))
 
 
 def main() -> None:
     header("Table 3: offloading strategies")
-    base_t, base_peak = simulate_schedule(T_FWD, A_BYTES, ["keep"] * N, LINK)
+    a_f32 = [_seg_bytes("raw", 4)] * N
+    base_t, base_peak = simulate_schedule(T_FWD, a_f32, ["keep"] * N, LINK)
     emit("table3/keep_all", base_t * 1e6, f"peak={base_peak/2**30:.1f}GiB")
     for frac in (0.5, 0.25):
         budget = base_peak * frac
@@ -34,7 +50,7 @@ def main() -> None:
             ("greedy_beaumont20", greedy_planner),
             ("dynprog_joint_beaumont21", dynprog_joint),
         ]:
-            plan = planner(T_FWD, A_BYTES, budget, LINK)
+            plan = planner(T_FWD, a_f32, budget, LINK)
             n_off = sum(1 for x in plan.actions if x == "offload")
             n_rec = sum(1 for x in plan.actions if x == "recompute")
             emit(
@@ -44,6 +60,28 @@ def main() -> None:
                 f"offloaded={n_off} recomputed={n_rec} "
                 f"slowdown={plan.est_time/base_t:.3f}x",
             )
+
+    # dtype sweep at a FIXED absolute budget (25% of the f32 peak): narrower
+    # storage lowers both the peak and the per-offload link time, so the
+    # planner offloads less and the makespan approaches keep-all
+    budget = base_peak * 0.25
+    for label, stash, itemsize in DTYPES:
+        a = [_seg_bytes(stash, itemsize)] * N
+        plan = greedy_planner(T_FWD, a, budget, LINK)
+        n_off = sum(1 for x in plan.actions if x == "offload")
+        emit(
+            f"table3/greedy@{label}_budget0.25f32",
+            plan.est_time * 1e6,
+            f"seg_bytes={a[0]/2**20:.1f}MiB peak={plan.peak_memory/2**30:.2f}GiB "
+            f"offloaded={n_off} slowdown={plan.est_time/base_t:.3f}x",
+        )
+        predicted = n_off * _seg_bytes(stash, itemsize)
+        assert plan.offloaded_bytes == predicted, (label, plan.offloaded_bytes)
+    emit(
+        "table3/roofline_reconcile@fp8", 0.0,
+        f"per_seg_predicted={int(_seg_bytes('fp8', 2))} == planner-counted "
+        "link bytes / offloaded segments (exact, all dtypes asserted)",
+    )
 
 
 if __name__ == "__main__":

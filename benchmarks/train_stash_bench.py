@@ -1,0 +1,208 @@
+"""Activation-stash bench: capacity accounting + pipeline step timings.
+
+Accounting rows (us = 0.0, exact — gated by check_regression):
+  * fp8-vs-bf16 bytes per activation slot: blockwise codes + per-block f32
+    scales must be >= 1.8x smaller than the native bf16 slot (asserted).
+  * 1F1B slot high-water at P=4, M=8: min(P, M) slots per device — the
+    quantity the stash multiplies.
+  * predicted-vs-measured: the roofline closed form for stash state bytes
+    must equal the byte size of the buffers ``StashBackend.init``
+    actually allocates (eval_shape), per backend.
+  * plan unlock: a ParallelPlan whose activation budget fails
+    ``.validate()`` at stash=raw validates (and, per the timed rows,
+    trains) at stash=fp8 — the capacity factor as a feasibility flip.
+
+Timed rows (subprocess on 4 forced host devices): 1F1B step time at
+stash raw / int8 / fp8 on the same reduced model, plus the host-driven
+eager runner (stash=host) with its eviction stats.
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, header, subprocess_env
+from repro.core.pipeline import tick_table
+from repro.core.stash import get_backend
+from repro.roofline.analysis import (
+    predicted_stash_capacity_factor,
+    stash_bytes_per_slot,
+)
+
+P, M = 4, 8
+B, SEQ, D = 8, 64, 128          # bench microbatch: (B/M, SEQ, D) slots
+N_ELEMS = (B // M) * SEQ * D
+
+
+def _struct_bytes(struct) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(struct):
+        n = 1
+        for d in leaf.shape:
+            n *= int(d)
+        total += n * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def _accounting() -> None:
+    raw_b = stash_bytes_per_slot(N_ELEMS, "raw", native_itemsize=2)
+    fp8_b = stash_bytes_per_slot(N_ELEMS, "fp8", native_itemsize=2)
+    factor = predicted_stash_capacity_factor(N_ELEMS, "fp8", native_itemsize=2)
+    assert factor >= 1.8, (raw_b, fp8_b, factor)
+    emit(
+        "train_stash/bytes_per_slot@fp8_vs_bf16", 0.0,
+        f"bf16={raw_b} fp8={fp8_b} factor={factor:.3f}x (>=1.8x)",
+    )
+
+    t = tick_table("1f1b", P, M)
+    assert t.n_act_slots == min(P, M), t.n_act_slots
+    emit(
+        f"train_stash/slot_high_water@1f1b_P{P}M{M}", 0.0,
+        f"act_slots={t.n_act_slots} == min(P,M) cot_slots={t.n_cot_slots}",
+    )
+
+    # predicted (roofline closed form) vs measured (buffers init allocates);
+    # the runner's buffer carries one extra trash slot for -1 table entries
+    x_struct = jax.ShapeDtypeStruct((B // M, SEQ, D), jnp.bfloat16)
+    n_slots = t.n_act_slots + 1
+    for name in ("raw", "int8", "fp8"):
+        backend = get_backend(name)
+        predicted = n_slots * stash_bytes_per_slot(
+            N_ELEMS, name, native_itemsize=2
+        )
+        measured = _struct_bytes(
+            jax.eval_shape(lambda: backend.init(n_slots, x_struct))
+        )
+        assert predicted == measured, (name, predicted, measured)
+        emit(
+            f"train_stash/predicted_vs_measured@{name}", 0.0,
+            f"predicted={predicted} measured={measured} exact_match=True "
+            f"({n_slots} slots incl. trash)",
+        )
+
+
+def _plan_unlock() -> None:
+    from repro.configs import SURVEY_DEMO, reduced
+    from repro.core.partitioner import ParallelPlan
+
+    tiny = reduced(SURVEY_DEMO, n_layers=4, d_model=D, n_heads=4,
+                   n_kv_heads=2, d_ff=256, vocab_size=512)
+    base = ParallelPlan(dp=1, tp=1, pp=P, microbatches=M, schedule="1f1b")
+    kw = dict(global_batch=B, seq_len=SEQ, itemsize=4)
+    raw_rep = base.stash_report(tiny, **kw)
+    import dataclasses
+
+    fp8 = dataclasses.replace(base, stash="fp8")
+    fp8_rep = fp8.stash_report(tiny, **kw)
+    budget = (fp8_rep["act_bytes"] + raw_rep["act_bytes"]) // 2
+    try:
+        base.validate(tiny, act_budget=budget, **kw)
+        raise AssertionError("raw plan should exceed the budget")
+    except ValueError:
+        pass
+    fp8.validate(tiny, act_budget=budget, **kw)
+    emit(
+        f"train_stash/plan_unlock@fp8_P{P}M{M}", 0.0,
+        f"budget={budget} raw={raw_rep['act_bytes']} (fails) "
+        f"fp8={fp8_rep['act_bytes']} (fits) "
+        f"capacity={fp8_rep['capacity_factor']:.3f}x",
+    )
+
+
+SCRIPT = textwrap.dedent(
+    """
+    import os, time
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import SURVEY_DEMO, ShapeSpec, reduced
+    import repro.configs.registry as registry
+    from repro.core.partitioner import ParallelPlan
+    from repro.data import DataPipeline
+    from repro.launch.mesh import make_train_mesh
+    from repro.launch.train import (
+        build_train_pipeline, build_train_pipeline_host)
+    from repro.optim import get as get_opt
+    from repro.train import TrainConfig, make_state
+
+    TINY = reduced(SURVEY_DEMO, n_layers=4, d_model=128, n_heads=4,
+                   n_kv_heads=2, d_ff=256, vocab_size=512)
+    registry.ARCHITECTURES[TINY.name] = TINY
+    B, SEQ, P, M = 8, 64, 4, 8
+    shape = ShapeSpec("t", SEQ, B, "train")
+    opt_tc = TrainConfig(precision="f32", log_every=1)
+    opt = get_opt(opt_tc.optimizer, opt_tc.lr)
+    data = DataPipeline(TINY, batch_size=B, seq_len=SEQ, seed=0)
+    batch_np = {k: np.asarray(v) for k, v in dict(next(data)).items()}
+    data.close()
+
+    def time_step(fn, state, batch, iters=5):
+        state, m = fn(state, batch)          # compile + warm
+        jax.block_until_ready(m)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            state, m = fn(state, batch)
+            jax.block_until_ready(m)
+        return (time.perf_counter() - t0) / iters * 1e6, float(m["loss"])
+
+    for stash in ("raw", "int8", "fp8"):
+        plan = ParallelPlan(dp=1, tp=1, pp=P, microbatches=M,
+                            schedule="1f1b", stash=stash).validate(TINY)
+        tc = TrainConfig(precision="f32", log_every=1, stash=stash)
+        mesh = make_train_mesh(1, 1, P)
+        jitted, (s_struct, b_struct) = build_train_pipeline(
+            TINY.name, mesh, plan, tc, shape)
+        state = jax.tree.map(
+            lambda x, st: jax.device_put(x, st.sharding),
+            make_state(TINY, opt, tc), s_struct)
+        batch = jax.tree.map(
+            lambda v, st: jax.device_put(jnp.asarray(v), st.sharding),
+            batch_np, b_struct)
+        us, loss = time_step(jitted, state, batch)
+        print(f"ROW {stash} {us:.1f} loss={loss:.4f}")
+
+    plan = ParallelPlan(dp=1, tp=1, pp=P, microbatches=M,
+                        schedule="1f1b", stash="host").validate(TINY)
+    tc = TrainConfig(precision="f32", log_every=1, stash="host")
+    step, _, backend = build_train_pipeline_host(TINY.name, plan, tc, shape)
+    state = make_state(TINY, opt, tc)
+    batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+    us, loss = time_step(step, state, batch, iters=2)
+    st = backend.stats()
+    print(f"ROW host {us:.1f} loss={loss:.4f} "
+          f"evictions={st['evictions']} host_hits={st['host_hits']}")
+    """
+)
+
+
+def _executable() -> None:
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        timeout=900, env=subprocess_env(),
+    )
+    rows = {}
+    for ln in r.stdout.splitlines():
+        if ln.startswith("ROW "):
+            _, name, us, extra = ln.split(maxsplit=3)
+            rows[name] = (float(us), extra)
+    for name in ("raw", "int8", "fp8", "host"):
+        us, extra = rows.get(name, (0.0, f"FAILED rc={r.returncode}"))
+        emit(
+            f"train_stash/step@{name}_P{P}M{M}", us,
+            f"{extra} B={B} seq={SEQ} 4-layer tiny 1f1b",
+        )
+    assert r.returncode == 0, r.stderr[-2000:]
+
+
+def main() -> None:
+    header("Activation stash: capacity accounting + 1F1B step timings")
+    _accounting()
+    _plan_unlock()
+    _executable()
+
+
+if __name__ == "__main__":
+    main()

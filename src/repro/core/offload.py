@@ -192,3 +192,81 @@ def dynprog_joint(
         combo = tuple([ACTION_RECOMPUTE] * n)
         return _finish(t_fwd, a_bytes, list(combo), link)
     return best
+
+
+def offload_chain_grads(
+    seg_fns: Sequence,
+    seg_params: Sequence,
+    x0,
+    actions: Sequence[str],
+    loss_fn,
+    *,
+    host_window: int = 2,
+):
+    """EXECUTE an offload plan's per-segment actions for real.
+
+    The planners above only score action vectors; this runs one
+    forward+backward over the segment chain ``x_{i+1} = seg_fns[i](p_i,
+    x_i)`` with each segment input stored per its action:
+
+      keep      -> stays on device (plain reference)
+      offload   -> core.stash.HostStash — device->host copy started at
+                   store time, double-buffered window, fetched back
+                   bit-exactly for the backward
+      recompute -> stored nowhere; the backward replays forward from the
+                   nearest stored (or initial) input
+
+    Backward is ``jax.vjp`` per segment in reverse order, seeded by
+    ``loss_fn(x_n)``. Returns (loss, per-segment param grads, dx0, stats)
+    where stats merges the HostStash counters with ``replayed_segments`` —
+    the recompute cost the dynprog planner trades against link time.
+    """
+    import jax
+
+    from repro.core.stash import HostStash
+
+    n = len(seg_fns)
+    assert len(seg_params) == n and len(actions) == n, (n, actions)
+    host = HostStash(window=host_window)
+    hstate = host.init(n, None)
+    kept = {}
+
+    x = x0
+    inputs_stored = [False] * n
+    for i in range(n):
+        if actions[i] == ACTION_OFFLOAD:
+            hstate = host.put(hstate, i, x)
+            inputs_stored[i] = True
+        elif actions[i] == ACTION_KEEP:
+            kept[i] = x
+            inputs_stored[i] = True
+        x = seg_fns[i](seg_params[i], x)
+    y = x
+
+    replays = 0
+
+    def load_input(i):
+        nonlocal replays
+        if actions[i] == ACTION_OFFLOAD:
+            return host.get(hstate, i, None)
+        if actions[i] == ACTION_KEEP:
+            return kept[i]
+        j = i
+        while j > 0 and not inputs_stored[j]:
+            j -= 1
+        xx = x0 if j == 0 and not inputs_stored[0] else load_input(j)
+        for t in range(j, i):
+            xx = seg_fns[t](seg_params[t], xx)
+            replays += 1
+        return xx
+
+    loss, pull = jax.vjp(loss_fn, y)
+    (cot,) = pull(jax.numpy.ones_like(loss))
+    grads = [None] * n
+    for i in reversed(range(n)):
+        x_i = load_input(i)
+        _, vjp_fn = jax.vjp(seg_fns[i], seg_params[i], x_i)
+        d_p, cot = vjp_fn(cot)
+        grads[i] = d_p
+    stats = dict(host.stats(), replayed_segments=replays)
+    return loss, grads, cot, stats

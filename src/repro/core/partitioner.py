@@ -192,7 +192,9 @@ class ParallelPlan:
     ``remat`` is the remat policy applied inside every stage's layer scan
     (the per-stage knob of the §2.1 plans — the runner itself already
     recomputes each stage forward from its stored input, so this controls
-    the *within-stage* transient only).
+    the *within-stage* transient only); ``stash`` picks the activation-slot
+    storage backend (core.stash: raw | int8 | fp8 | host) — the capacity
+    knob that can make an otherwise-OOM plan feasible.
     """
     dp: int = 1
     tp: int = 1
@@ -201,6 +203,7 @@ class ParallelPlan:
     schedule: str = "1f1b"
     boundaries: Tuple[int, ...] = ()
     remat: str = "none"
+    stash: str = "raw"
 
     @property
     def n_devices(self) -> int:
@@ -212,11 +215,27 @@ class ParallelPlan:
         step = n_layers // self.pp
         return tuple(range(0, n_layers + 1, step))
 
-    def validate(self, cfg: ArchConfig) -> "ParallelPlan":
-        """Check executability against ``cfg``; returns self (chainable)."""
+    def validate(
+        self,
+        cfg: ArchConfig,
+        *,
+        global_batch: Optional[int] = None,
+        seq_len: Optional[int] = None,
+        act_budget: Optional[int] = None,
+        itemsize: int = 2,
+    ) -> "ParallelPlan":
+        """Check executability against ``cfg``; returns self (chainable).
+
+        With ``act_budget`` (device bytes available for pipeline activation
+        state; requires ``global_batch``/``seq_len``), also checks that the
+        stash fits — the capacity constraint a compressed or host stash can
+        unlock for a plan that is infeasible at raw width.
+        """
         from repro.core.pipeline import EXECUTABLE_SCHEDULES
+        from repro.core.stash import normalize_stash
         from repro.models.stack import pipeline_incompatibility
 
+        normalize_stash(self.stash)
         if self.schedule not in EXECUTABLE_SCHEDULES:
             raise ValueError(
                 f"schedule {self.schedule!r} is simulator-only; executable: "
@@ -225,6 +244,11 @@ class ParallelPlan:
             )
         if min(self.dp, self.tp, self.pp, self.microbatches) < 1:
             raise ValueError(f"degenerate plan {self}")
+        if normalize_stash(self.stash) == "host" and (self.dp, self.tp) != (1, 1):
+            raise ValueError(
+                "stash='host' uses the host-driven runner (single device "
+                f"per stage); got dp={self.dp} tp={self.tp}"
+            )
         if cfg.n_layers % self.pp:
             raise ValueError(
                 f"{cfg.n_layers} layers not divisible into pp={self.pp} stages"
@@ -236,12 +260,67 @@ class ParallelPlan:
         why = pipeline_incompatibility(cfg, self.tp)
         if why is not None:
             raise ValueError(f"plan incompatible with {cfg.name}: {why}")
+        if act_budget is not None:
+            if global_batch is None or seq_len is None:
+                raise ValueError("act_budget check needs global_batch and seq_len")
+            rep = self.stash_report(
+                cfg, global_batch=global_batch, seq_len=seq_len,
+                itemsize=itemsize,
+            )
+            if rep["act_bytes"] > act_budget:
+                raise ValueError(
+                    f"activation state {rep['act_bytes']} B exceeds budget "
+                    f"{act_budget} B at stash={rep['backend']} "
+                    f"(raw would need {rep['raw_act_bytes']} B; capacity "
+                    f"factor {rep['capacity_factor']:.2f}x)"
+                )
         return self
+
+    def stash_report(
+        self,
+        cfg: ArchConfig,
+        *,
+        global_batch: int,
+        seq_len: int,
+        itemsize: int = 2,
+    ) -> dict:
+        """Predicted per-device pipeline activation-state bytes under this
+        plan's stash backend (roofline.analysis closed forms; the bench
+        reconciles these against measured buffer sizes)."""
+        from repro.core.pipeline import tick_table
+        from repro.core.stash import normalize_stash
+        from repro.roofline.analysis import (
+            predicted_pipeline_stash_bytes,
+            stash_bytes_per_slot,
+        )
+
+        s = normalize_stash(self.stash)
+        table = tick_table(self.schedule, self.pp, self.microbatches)
+        mb = global_batch // (self.dp * self.microbatches)
+        n_elems = mb * seq_len * cfg.d_model // self.tp
+        raw_slot = stash_bytes_per_slot(n_elems, "raw", itemsize)
+        act = predicted_pipeline_stash_bytes(
+            n_elems, table.n_act_slots, table.n_cot_slots, s, itemsize
+        )
+        raw = predicted_pipeline_stash_bytes(
+            n_elems, table.n_act_slots, table.n_cot_slots, "raw", itemsize
+        )
+        return {
+            "backend": s,
+            "n_act_slots": table.n_act_slots,
+            "n_cot_slots": table.n_cot_slots,
+            "bytes_per_slot": stash_bytes_per_slot(n_elems, s, itemsize),
+            "raw_bytes_per_slot": raw_slot,
+            "act_bytes": act,
+            "raw_act_bytes": raw,
+            "capacity_factor": raw / max(act, 1),
+        }
 
     def describe(self) -> str:
         return (
             f"dp={self.dp} tp={self.tp} pp={self.pp} "
-            f"M={self.microbatches} schedule={self.schedule} remat={self.remat}"
+            f"M={self.microbatches} schedule={self.schedule} "
+            f"remat={self.remat} stash={self.stash}"
         )
 
 
@@ -254,6 +333,11 @@ def auto_plan(
     schedule: str = "1f1b",
     remat: str = "none",
     max_dp: Optional[int] = None,
+    stash: str = "raw",
+    act_budget: Optional[int] = None,
+    global_batch: Optional[int] = None,
+    seq_len: Optional[int] = None,
+    itemsize: int = 2,
 ) -> ParallelPlan:
     """Search (dp, pp) for ``n_devices`` and return an executable plan.
 
@@ -261,6 +345,12 @@ def auto_plan(
     search dimension); the remaining budget goes through ``dp_pp_search``
     with the uniform-stage constraint. ``max_dp`` typically comes from the
     global batch: dp <= batch / microbatches.
+
+    With ``act_budget`` the plan is stash-aware: if the throughput-optimal
+    split does not fit the activation budget at the requested ``stash``,
+    the search escalates raw -> fp8 (int8 stores the same bytes, so fp8 is
+    the whole compressed rung) and reports which capacity factor unlocked
+    the plan via the ``stash`` field of the result.
     """
     if n_devices % tp:
         raise ValueError(f"{n_devices} devices not divisible by tp={tp}")
@@ -268,8 +358,29 @@ def auto_plan(
     choice = dp_pp_search(
         costs, n_devices // tp, microbatches, uniform=True, max_dp=max_dp
     )
-    return ParallelPlan(
+    plan = ParallelPlan(
         dp=choice.dp, tp=tp, pp=choice.pp, microbatches=microbatches,
         schedule=schedule, boundaries=choice.partition.boundaries,
-        remat=remat,
-    ).validate(cfg)
+        remat=remat, stash=stash,
+    )
+    if act_budget is None:
+        return plan.validate(cfg)
+    from repro.core.stash import normalize_stash
+
+    ladder = [normalize_stash(stash)]
+    if ladder == ["raw"]:
+        ladder.append("fp8")
+    last_err: Optional[ValueError] = None
+    for rung in ladder:
+        cand = dataclasses.replace(plan, stash=rung)
+        try:
+            return cand.validate(
+                cfg, global_batch=global_batch, seq_len=seq_len,
+                act_budget=act_budget, itemsize=itemsize,
+            )
+        except ValueError as e:
+            last_err = e
+    assert last_err is not None
+    raise ValueError(
+        f"no stash backend fits act_budget={act_budget}: {last_err}"
+    )

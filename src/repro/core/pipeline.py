@@ -594,6 +594,7 @@ def pipeline_grads(
     seed=None,
     axis: str = "pipe",
     data_axis: Optional[str] = None,
+    stash=None,
 ):
     """Run one pipelined forward+backward; returns (loss, metrics, grads).
 
@@ -632,12 +633,34 @@ def pipeline_grads(
     (caller normalizes by M*dp); grads are psum'd over ``data_axis`` (and
     ``axis`` for shared) but NOT over model — model-sharded leaves carry
     distinct shards, replicated leaves identical values.
+
+    ``stash`` is the activation-slot storage backend (core.stash): every
+    slot write/read goes through ``stash.put``/``stash.get`` on an explicit
+    state carried by the scan. The default RawStash reproduces the
+    pre-stash runner bitwise; QuantStash stores int8/fp8 codes + per-block
+    scales. Every stage's forward consumes the DEQUANTIZED slot value —
+    stage 0 writes its embedding output and reads it back, and the
+    backward's stage-0 recompute applies the same perturbation via the
+    straight-through ``stash.roundtrip`` — so the vjp grads are exact
+    grads of the (slightly perturbed) forward that actually ran, and
+    1F1B == GPipe bitwise still holds per backend. Cotangent slots stay at
+    the native dtype (they are consumed the tick after they arrive —
+    compressing them buys no capacity).
     """
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as Pspec
 
     from repro.compat import shard_map
+    from repro.core.stash import RawStash
+
+    backend = stash if stash is not None else RawStash()
+    if not backend.scan_capable:
+        raise ValueError(
+            f"stash backend {backend.name!r} is host-driven; use "
+            "pipeline_grads_host (the in-scan runner cannot issue host "
+            "transfers per slot)"
+        )
 
     P_count = table.n_stages
     assert mesh.shape[axis] == P_count, (mesh.shape, P_count)
@@ -665,9 +688,14 @@ def pipeline_grads(
 
         def full_fn(sp_, sh_, xs_, m):
             mb = mb_slice(m)
+            # stage 0 recomputes its input from first_fn; the roundtrip STE
+            # re-applies the stash perturbation so recompute matches the
+            # put-then-get forward bitwise (identity for RawStash)
             x = jax.lax.cond(
                 is_first,
-                lambda: first_fn(sh_, mb).astype(x_struct.dtype),
+                lambda: backend.roundtrip(
+                    first_fn(sh_, mb).astype(x_struct.dtype)
+                ),
                 lambda: xs_,
             )
             y, aux = stage_fn(sp_, x)
@@ -681,8 +709,11 @@ def pipeline_grads(
         def tick(carry, row):
             act, cot, gacc, sacc, lacc, macc, fwd_in, bwd_in = carry
             g = {k: row[k][stage] for k in rows}
-            # arrivals land before this tick's op reads the buffers
-            act = act.at[jnp.where(g["arr_f"] >= 0, g["arr_f"], Wa)].set(fwd_in)
+            # arrivals land before this tick's op reads the buffers (slot
+            # writes route through the stash backend; -1 -> trash slot Wa)
+            act = backend.put(
+                act, jnp.where(g["arr_f"] >= 0, g["arr_f"], Wa), fwd_in
+            )
             cot = cot.at[jnp.where(g["arr_b"] >= 0, g["arr_b"], Wc)].set(bwd_in)
             opk = jnp.where(g["f_mb"] >= 0, 1, jnp.where(g["b_mb"] >= 0, 2, 0))
 
@@ -692,18 +723,28 @@ def pipeline_grads(
             def f_op(act, cot, gacc, sacc, lacc, macc):
                 m = g["f_mb"]
                 slot = jnp.where(g["f_slot"] >= 0, g["f_slot"], Wa)
-                x_in = jax.lax.cond(
+                # stage 0 stashes its own first_fn output (other stages'
+                # slots were filled by the ppermute arrival above); ALL
+                # stages then compute on the slot's stored value, so the
+                # forward consumes exactly what the backward will read
+                act = jax.lax.cond(
                     is_first,
-                    lambda: first_fn(shared, mb_slice(m)).astype(x_struct.dtype),
-                    lambda: act[slot],
+                    lambda a: backend.put(
+                        a, slot,
+                        first_fn(shared, mb_slice(m)).astype(x_struct.dtype),
+                    ),
+                    lambda a: a,
+                    act,
                 )
+                x_in = backend.get(act, slot, x_struct)
                 y, _ = stage_fn(sp, x_in)
-                act = act.at[slot].set(x_in)
                 return act, cot, gacc, sacc, lacc, macc, y, x_zero
 
             def b_op(act, cot, gacc, sacc, lacc, macc):
                 m = g["b_mb"]
-                x_saved = act[jnp.where(g["b_slot"] >= 0, g["b_slot"], Wa)]
+                x_saved = backend.get(
+                    act, jnp.where(g["b_slot"] >= 0, g["b_slot"], Wa), x_struct
+                )
                 cot_in = cot[jnp.where(g["b_cot"] >= 0, g["b_cot"], Wc)]
                 (y, loss), vjp_fn, metrics = jax.vjp(
                     lambda sp_, sh_, xs_: full_fn(sp_, sh_, xs_, m),
@@ -727,7 +768,7 @@ def pipeline_grads(
             lambda a: jnp.zeros(a.shape, a.dtype), t
         )
         carry0 = (
-            jnp.zeros((Wa + 1,) + x_struct.shape, x_struct.dtype),
+            backend.init(Wa + 1, x_struct),
             jnp.zeros((Wc + 1,) + x_struct.shape, x_struct.dtype),
             zeros_like_tree(sp),
             zeros_like_tree(shared),
@@ -759,3 +800,139 @@ def pipeline_grads(
         check_vma=False,
     )
     return fn(sid, stage_params, shared_params, microbatches, seed)
+
+
+def pipeline_grads_host(
+    first_fn: Callable,
+    stage_fn: Callable,
+    last_fn: Callable,
+    stage_params: Any,
+    shared_params: Any,
+    microbatches: Any,
+    *,
+    table: TickTable,
+    x_struct,
+    metrics_struct: Any,
+    seed=None,
+    stash=None,
+):
+    """Host-driven twin of :func:`pipeline_grads`: the same tick tables,
+    executed as a Python loop on ONE device (dp = tp = 1), with all P
+    stages' ops issued sequentially per tick and ppermute traffic emulated
+    by per-stage wire buffers (a value sent at tick t arrives at t+1,
+    exactly the table's ``avail`` contract).
+
+    This is the execution mode where a stateful stash backend becomes
+    legal: ``HostStash`` evicts activation slots to host RAM between a
+    microbatch's forward and backward (vDNN applied to the 1F1B stash), so
+    a pipeline whose min(P, M) raw slots exceed device memory still trains
+    — slot indices are concrete ints here, and put/get may block on
+    transfers. Math is identical to the in-scan runner per backend (same
+    per-stage op order and grad accumulation), minus cross-device psum
+    reduction order, so losses agree to float tolerance.
+
+    ``stage_params`` is the FULL stacked-layer tree (leading layer axis
+    unsharded); returns (loss_sum, metrics_sums, stage_grads, shared_grads)
+    with stage_grads matching ``stage_params``'s full shapes.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.stash import RawStash
+
+    backend = stash if stash is not None else RawStash()
+    P_count, M = table.n_stages, table.n_microbatches
+    L = jax.tree.leaves(stage_params)[0].shape[0]
+    assert L % P_count == 0, (L, P_count)
+    k = L // P_count
+    Wa, Wc = table.n_act_slots, table.n_cot_slots
+    zero_metrics = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), metrics_struct
+    )
+    if seed is None:
+        seed = jnp.ones((), jnp.float32)
+
+    def sp_slice(s):
+        return jax.tree.map(lambda a: a[s * k:(s + 1) * k], stage_params)
+
+    def mb_slice(m):
+        return jax.tree.map(lambda a: a[m], microbatches)
+
+    def full_fn(s, m):
+        is_first, is_last = s == 0, s == P_count - 1
+
+        def fn(sp_, sh_, xs_):
+            mb = mb_slice(m)
+            if is_first:
+                x = backend.roundtrip(first_fn(sh_, mb).astype(x_struct.dtype))
+            else:
+                x = xs_
+            y, aux = stage_fn(sp_, x)
+            if is_last:
+                tail, metrics = last_fn(sh_, y, mb)
+            else:
+                tail, metrics = jnp.zeros((), jnp.float32), zero_metrics
+            return (y, aux.astype(jnp.float32) + tail), metrics
+
+        return fn
+
+    acts = [backend.init(Wa, x_struct) for _ in range(P_count)]
+    cots: List[List[Any]] = [[None] * max(Wc, 1) for _ in range(P_count)]
+    gacc = jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype), stage_params)
+    sacc = jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype), shared_params)
+    lacc = jnp.zeros((), jnp.float32)
+    macc = zero_metrics
+    fwd_wire: List[Any] = [None] * P_count
+    bwd_wire: List[Any] = [None] * P_count
+
+    for t in range(table.n_ticks):
+        # arrivals land before this tick's ops read the buffers
+        for s in range(P_count):
+            af = int(table.arr_f[t, s])
+            if af >= 0:
+                acts[s] = backend.put(acts[s], af, fwd_wire[s])
+                fwd_wire[s] = None
+            ab = int(table.arr_b[t, s])
+            if ab >= 0:
+                cots[s][ab] = bwd_wire[s]
+                bwd_wire[s] = None
+        next_fwd: List[Any] = [None] * P_count
+        next_bwd: List[Any] = [None] * P_count
+        for s in range(P_count):
+            fm, bm = int(table.f_mb[t, s]), int(table.b_mb[t, s])
+            if fm >= 0:
+                slot = int(table.f_slot[t, s])
+                if s == 0:
+                    acts[0] = backend.put(
+                        acts[0], slot,
+                        first_fn(shared_params, mb_slice(fm)).astype(
+                            x_struct.dtype
+                        ),
+                    )
+                x_in = backend.get(acts[s], slot, x_struct)
+                y, _ = stage_fn(sp_slice(s), x_in)
+                if s + 1 < P_count:
+                    next_fwd[s + 1] = y
+            elif bm >= 0:
+                slot = int(table.b_slot[t, s])
+                x_saved = backend.get(acts[s], slot, x_struct)
+                (y, loss), vjp_fn, metrics = jax.vjp(
+                    full_fn(s, bm), sp_slice(s), shared_params, x_saved,
+                    has_aux=True,
+                )
+                if s == P_count - 1:
+                    y_cot = jnp.zeros_like(y)
+                else:
+                    y_cot = cots[s][int(table.b_cot[t, s])]
+                d_sp, d_sh, dx = vjp_fn((y_cot, seed))
+                lo, hi = s * k, (s + 1) * k
+                gacc = jax.tree.map(
+                    lambda g, d: g.at[lo:hi].add(d), gacc, d_sp
+                )
+                sacc = jax.tree.map(jnp.add, sacc, d_sh)
+                macc = jax.tree.map(jnp.add, macc, metrics)
+                lacc = lacc + loss
+                if s > 0:
+                    next_bwd[s - 1] = dx
+        fwd_wire, bwd_wire = next_fwd, next_bwd
+    return lacc, macc, gacc, sacc

@@ -1,0 +1,356 @@
+"""Activation-stash subsystem: pluggable storage for pipeline slot buffers.
+
+The 1F1B/GPipe runner (core.pipeline.pipeline_grads) keeps exactly
+``tick_table.n_act_slots`` live stage inputs per device — write-once /
+read-once tensors whose lifetime spans the warmup gap between a
+microbatch's forward and its backward. A ``StashBackend`` owns how those
+slots are stored, which is the per-device activation-capacity lever
+(Jin'20 error-bounded lossy compression; Rhu'16 vDNN host offload):
+
+* ``RawStash``   — identity storage at the native dtype; bitwise-preserves
+                   the pre-stash runner (the default).
+* ``QuantStash`` — blockwise int8/fp8 codes + per-block f32 scales
+                   (kernels.blockwise_quant.stash_quantize, which reuses
+                   the paged-KV symmetric quantizer). Purely functional —
+                   ``put``/``get`` are jnp ops on an explicit state pytree,
+                   so the stash lives inside the runner's single
+                   ``lax.scan`` carry under ``shard_map``. Every forward
+                   consumes the DEQUANTIZED slot value (stage 0 via the
+                   straight-through ``roundtrip``), so the vjp gradients
+                   are the exact gradients of a well-defined perturbed
+                   forward and same-seed runs are deterministic.
+* ``HostStash``  — stateful double-buffered device->host eviction for the
+                   host-driven runner (``pipeline_grads_host``) and the
+                   offload-chain executor (core.offload): the newest
+                   ``window`` slots stay on device, older ones materialize
+                   to host RAM (``copy_to_host_async`` started at put
+                   time) and are fetched back bit-exactly on get.
+
+All backends share one protocol: ``init(n_slots, struct) -> state``,
+``put(state, slot, tree) -> state``, ``get(state, slot, struct) -> tree``,
+``roundtrip(tree)`` (the storage perturbation as a function; identity for
+lossless backends), plus exact byte accounting (``slot_bytes`` /
+``state_bytes``). Scan-capable backends take traced slot indices; the
+host backend requires concrete ints (its schedule is host-driven by
+construction).
+"""
+from __future__ import annotations
+
+import collections
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+STASH_BACKENDS = ("raw", "int8", "fp8", "host")
+
+
+def normalize_stash(stash: str) -> str:
+    """Canonical backend name ('' and 'bf16'/'native' mean raw)."""
+    if stash in ("", "raw", "native", "bf16"):
+        return "raw"
+    if stash not in STASH_BACKENDS:
+        raise ValueError(f"stash {stash!r} not in {STASH_BACKENDS}")
+    return stash
+
+
+def _leaf_bytes(struct: Any) -> int:
+    import jax
+    import jax.numpy as jnp
+
+    total = 0
+    for leaf in jax.tree.leaves(struct):
+        n = 1
+        for d in leaf.shape:
+            n *= int(d)
+        total += n * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+class RawStash:
+    """Identity storage: slots are ``(n_slots,) + leaf.shape`` native-dtype
+    buffers, put/get are dynamic slice update/read. Bitwise-preserves the
+    pre-stash pipeline runner."""
+
+    name = "raw"
+    scan_capable = True
+
+    def init(self, n_slots: int, struct: Any) -> Any:
+        import jax
+        import jax.numpy as jnp
+
+        return jax.tree.map(
+            lambda s: jnp.zeros((n_slots,) + tuple(s.shape), s.dtype), struct
+        )
+
+    def put(self, state: Any, slot: Any, value: Any) -> Any:
+        import jax
+
+        return jax.tree.map(lambda b, v: b.at[slot].set(v), state, value)
+
+    def get(self, state: Any, slot: Any, struct: Any) -> Any:
+        import jax
+
+        return jax.tree.map(lambda b: b[slot], state)
+
+    def roundtrip(self, value: Any) -> Any:
+        return value
+
+    def slot_bytes(self, struct: Any) -> int:
+        """Exact stored bytes for ONE slot (== sum of leaf nbytes)."""
+        return _leaf_bytes(struct)
+
+    def state_bytes(self, n_slots: int, struct: Any) -> int:
+        return n_slots * self.slot_bytes(struct)
+
+
+@functools.lru_cache(maxsize=None)
+def _ste_roundtrip(storage: str, block: int):
+    """Straight-through quantize->dequantize: forward is the exact stash
+    perturbation (bitwise-identical to put-then-get on the same value),
+    backward is identity — so stage-0 recompute inside the runner's vjp
+    sees the same activations the forward consumed while embedding grads
+    still flow. Cached per (storage, block) so jit tracing sees one
+    custom_vjp primitive per codec."""
+    import jax
+
+    from repro.kernels.blockwise_quant.ops import (
+        stash_dequantize, stash_quantize,
+    )
+
+    def fwd_value(x):
+        codes, scales = stash_quantize(x, storage, block)
+        return stash_dequantize(codes, scales, x.shape, x.dtype, block)
+
+    @jax.custom_vjp
+    def ste(x):
+        return fwd_value(x)
+
+    ste.defvjp(lambda x: (fwd_value(x), None), lambda _, g: (g,))
+    return ste
+
+
+class QuantStash:
+    """Blockwise int8/fp8 stash: codes at 1 byte/elem (zero-padded to the
+    block multiple) + one f32 scale per block. State is an explicit
+    ``{"codes": tree, "scales": tree}`` pytree mirroring the slot struct —
+    pure jnp in and out, so it rides in the pipeline scan carry."""
+
+    scan_capable = True
+
+    def __init__(self, storage: str = "fp8", block: Optional[int] = None):
+        from repro.kernels.blockwise_quant.ops import STASH_BLOCK
+
+        if storage not in ("int8", "fp8"):
+            raise ValueError(f"QuantStash storage {storage!r}")
+        self.storage = storage
+        self.block = int(block or STASH_BLOCK)
+
+    @property
+    def name(self) -> str:
+        return self.storage
+
+    def _storage_dtype(self):
+        from repro.kernels.paged_attention.quant import _QUANT
+
+        return _QUANT[self.storage][0]
+
+    def init(self, n_slots: int, struct: Any) -> Any:
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.blockwise_quant.ops import stash_padded_size
+
+        sdt = self._storage_dtype()
+
+        def one_codes(s):
+            n = 1
+            for d in s.shape:
+                n *= int(d)
+            nb = stash_padded_size(n, self.block) // self.block
+            return jnp.zeros((n_slots, nb, self.block), sdt)
+
+        def one_scales(s):
+            n = 1
+            for d in s.shape:
+                n *= int(d)
+            nb = stash_padded_size(n, self.block) // self.block
+            return jnp.zeros((n_slots, nb), jnp.float32)
+
+        return {
+            "codes": jax.tree.map(one_codes, struct),
+            "scales": jax.tree.map(one_scales, struct),
+        }
+
+    def put(self, state: Any, slot: Any, value: Any) -> Any:
+        import jax
+
+        from repro.kernels.blockwise_quant.ops import stash_quantize
+
+        flat, treedef = jax.tree.flatten(value)
+        quantized = [stash_quantize(v, self.storage, self.block) for v in flat]
+        codes = jax.tree.unflatten(treedef, [c for c, _ in quantized])
+        scales = jax.tree.unflatten(treedef, [s for _, s in quantized])
+        return {
+            "codes": jax.tree.map(
+                lambda b, c: b.at[slot].set(c), state["codes"], codes
+            ),
+            "scales": jax.tree.map(
+                lambda b, s: b.at[slot].set(s), state["scales"], scales
+            ),
+        }
+
+    def get(self, state: Any, slot: Any, struct: Any) -> Any:
+        import jax
+
+        from repro.kernels.blockwise_quant.ops import stash_dequantize
+
+        return jax.tree.map(
+            lambda s, c, sc: stash_dequantize(
+                c[slot], sc[slot], tuple(s.shape), s.dtype, self.block
+            ),
+            struct, state["codes"], state["scales"],
+        )
+
+    def roundtrip(self, value: Any) -> Any:
+        import jax
+
+        ste = _ste_roundtrip(self.storage, self.block)
+        return jax.tree.map(ste, value)
+
+    def slot_bytes(self, struct: Any) -> int:
+        """Exact stored bytes per slot: padded codes + per-block f32 scales."""
+        import jax
+
+        from repro.kernels.blockwise_quant.ops import stash_padded_size
+        from repro.kernels.paged_attention.quant import SCALE_BYTES
+
+        total = 0
+        for leaf in jax.tree.leaves(struct):
+            n = 1
+            for d in leaf.shape:
+                n *= int(d)
+            padded = stash_padded_size(n, self.block)
+            total += padded + (padded // self.block) * SCALE_BYTES
+        return total
+
+    def state_bytes(self, n_slots: int, struct: Any) -> int:
+        return n_slots * self.slot_bytes(struct)
+
+
+class _HostSlotStore:
+    """Mutable handle behind HostStash: a FIFO device window of the newest
+    ``window`` slots plus a host-side dict of evicted ones (numpy). Eviction
+    overlap: the device->host copy is STARTED at put time
+    (``copy_to_host_async``), only MATERIALIZED when the slot falls out of
+    the window — the double-buffering that hides transfer under the
+    schedule's warmup gap."""
+
+    def __init__(self, window: int):
+        self.window = int(window)
+        self.device: "collections.OrderedDict[int, Any]" = collections.OrderedDict()
+        self.host: Dict[int, Any] = {}
+        self.stats = {
+            "puts": 0, "gets": 0, "evictions": 0, "host_hits": 0,
+            "window_hits": 0, "host_bytes_high_water": 0,
+        }
+
+    def _host_bytes(self) -> int:
+        total = 0
+        for tree in self.host.values():
+            import jax
+
+            for leaf in jax.tree.leaves(tree):
+                total += leaf.nbytes
+        return total
+
+    def put(self, slot: int, value: Any) -> None:
+        import jax
+
+        for leaf in jax.tree.leaves(value):
+            start = getattr(leaf, "copy_to_host_async", None)
+            if start is not None:
+                start()
+        self.host.pop(slot, None)          # slot reuse drops the stale copy
+        self.device.pop(slot, None)
+        self.device[slot] = value
+        self.stats["puts"] += 1
+        while len(self.device) > self.window:
+            old_slot, old_val = self.device.popitem(last=False)
+            import numpy as np
+
+            self.host[old_slot] = jax.tree.map(np.asarray, old_val)
+            self.stats["evictions"] += 1
+        self.stats["host_bytes_high_water"] = max(
+            self.stats["host_bytes_high_water"], self._host_bytes()
+        )
+
+    def get(self, slot: int) -> Any:
+        self.stats["gets"] += 1
+        if slot in self.device:
+            self.stats["window_hits"] += 1
+            return self.device[slot]
+        import jax
+
+        self.stats["host_hits"] += 1
+        return jax.tree.map(jax.device_put, self.host[slot])
+
+
+class HostStash:
+    """Double-buffered device->host slot eviction (vDNN for pipeline
+    stashes). Values round-trip bit-exactly; only the newest ``window``
+    slots occupy device memory. Not scan-capable: put/get need concrete
+    slot ints and perform host transfers, so this backend pairs with the
+    host-driven runner (``core.pipeline.pipeline_grads_host``) and the
+    offload-chain executor (``core.offload.offload_chain_grads``)."""
+
+    name = "host"
+    scan_capable = False
+
+    def __init__(self, window: int = 2):
+        self.window = int(window)
+        self.stores: list = []   # every store handed out (one per stage/step)
+
+    def init(self, n_slots: int, struct: Any) -> _HostSlotStore:
+        store = _HostSlotStore(self.window)
+        self.stores.append(store)  # exit-stats hook (launch.train)
+        return store
+
+    def put(self, state: _HostSlotStore, slot: Any, value: Any) -> _HostSlotStore:
+        state.put(int(slot), value)
+        return state
+
+    def get(self, state: _HostSlotStore, slot: Any, struct: Any) -> Any:
+        return state.get(int(slot))
+
+    def roundtrip(self, value: Any) -> Any:
+        return value
+
+    def slot_bytes(self, struct: Any) -> int:
+        """Bytes one slot occupies WHILE resident in the device window (the
+        host copy is the same size; capacity accounting multiplies by the
+        window, not the slot count)."""
+        return _leaf_bytes(struct)
+
+    def state_bytes(self, n_slots: int, struct: Any) -> int:
+        """Device-resident bytes: only the window stays on device."""
+        return min(self.window, n_slots) * self.slot_bytes(struct)
+
+    def stats(self) -> Dict[str, int]:
+        """Counters summed over every store this backend handed out — the
+        host runner inits one store per stage, so per-stage counters (and
+        multi-step runs) aggregate here."""
+        out: Dict[str, int] = {}
+        for store in self.stores:
+            for k, v in store.stats.items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+
+def get_backend(stash: str, *, block: Optional[int] = None,
+                host_window: int = 2):
+    """Factory: ``raw | int8 | fp8 | host`` -> a StashBackend instance."""
+    s = normalize_stash(stash)
+    if s == "raw":
+        return RawStash()
+    if s in ("int8", "fp8"):
+        return QuantStash(s, block=block)
+    return HostStash(window=host_window)

@@ -61,3 +61,64 @@ def dequantize(
     else:
         flat = _ref.dequantize_ref(codes, scales, block=block)
     return flat[:n].reshape(shape)
+
+
+# ------------------------------------------------------ activation stash
+# Blockwise SYMMETRIC-LINEAR quantization for pipeline activation stashes
+# (core.stash.QuantStash). Deliberately NOT the Dettmers dynamic-map codec
+# above: the stash needs the per-block |err| <= scale/2 bound of the paged
+# KV pool (int8, scale = absmax/127) so the grad-accuracy argument carries
+# over — so it reuses kernels.paged_attention.quant row quantization with
+# the "row" axis reinterpreted as a flat block of ``block`` elements.
+STASH_BLOCK = BLOCK
+
+
+def stash_padded_size(n: int, block: int = STASH_BLOCK) -> int:
+    """Flat element count after zero-padding to a block multiple."""
+    return (n + block - 1) // block * block
+
+
+def _stash_storage_dtype(storage: str):
+    from repro.kernels.paged_attention.quant import _QUANT
+
+    if storage not in _QUANT:
+        raise ValueError(f"stash storage {storage!r} not in {tuple(_QUANT)}")
+    return _QUANT[storage][0]
+
+
+def stash_quantize(
+    x: jax.Array, storage: str = "int8", block: int = STASH_BLOCK
+) -> Tuple[jax.Array, jax.Array]:
+    """One stash leaf -> (codes (nblocks, block) int8/fp8, scales (nblocks,) f32).
+
+    Flattens, zero-pads to a block multiple (pad blocks quantize to exact
+    zeros — absmax 0 gives scale 0), and applies the paged-KV symmetric
+    row quantizer per block: int8 scale = absmax/127 (|err| <= scale/2),
+    fp8-e4m3 scale = absmax/448.
+    """
+    from repro.kernels.paged_attention.quant import kv_quantize
+
+    n = x.size
+    flat = x.reshape(-1)
+    padded = stash_padded_size(n, block)
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    return kv_quantize(flat.reshape(-1, block), _stash_storage_dtype(storage))
+
+
+def stash_dequantize(
+    codes: jax.Array,
+    scales: jax.Array,
+    shape,
+    dtype,
+    block: int = STASH_BLOCK,
+) -> jax.Array:
+    """Inverse of :func:`stash_quantize`: (nblocks, block) codes + per-block
+    scales -> the original ``shape``/``dtype`` leaf (pad tail dropped)."""
+    from repro.kernels.paged_attention.quant import kv_dequantize
+
+    n = 1
+    for d in shape:
+        n *= int(d)
+    flat = kv_dequantize(codes, scales, dtype).reshape(-1)
+    return flat[:n].reshape(shape)

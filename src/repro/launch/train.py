@@ -167,10 +167,17 @@ def make_pipeline_step(cfg: ArchConfig, mesh, plan, tc: TrainConfig, opt):
     """
     from repro.core.pipeline import tick_table
     from repro.core.precision import PrecisionPolicy
+    from repro.core.stash import get_backend
     from repro.models.lm import pipeline_fns
     from repro.train.loop import finish_step
 
     plan.validate(cfg)
+    stash_backend = get_backend(plan.stash)
+    if not stash_backend.scan_capable:
+        raise ValueError(
+            f"stash={plan.stash!r} is host-driven; use "
+            "build_train_pipeline_host (single-device eager runner)"
+        )
     if tc.compression is not None:
         raise ValueError("pipeline mode composes with ZeRO, not compressed DP")
     if tc.fused_backward:
@@ -213,6 +220,7 @@ def make_pipeline_step(cfg: ArchConfig, mesh, plan, tc: TrainConfig, opt):
             mesh=mesh, table=table, x_struct=x_struct,
             metrics_struct=metrics_struct, stage_specs=stage_specs,
             mb_specs=mb_specs, seed=seed, data_axis="data",
+            stash=stash_backend,
         )
         grads = dict(shared_g, stack=stack_g)
         loss = loss_sum / norm
@@ -261,6 +269,71 @@ def build_train_pipeline(
         _struct_with(s_shard, state_struct),
         _struct_with(b_shard, batch_struct),
     )
+
+
+def build_train_pipeline_host(
+    arch: str, plan, tc: Optional[TrainConfig] = None,
+    shape: Optional[ShapeSpec] = None, host_window: int = 2,
+) -> Tuple[Callable, Tuple[Any, Any], Any]:
+    """Host-driven twin of ``build_train_pipeline`` for ``stash='host'``:
+    the eager per-tick runner (core.pipeline.pipeline_grads_host) on ONE
+    device (dp = tp = 1), with the HostStash evicting activation slots to
+    host RAM between a microbatch's forward and backward. Returns
+    (unjitted step, (state_struct, batch_struct), stash_backend) — the
+    backend handle exposes ``stats()`` for exit reporting."""
+    from repro.core.pipeline import pipeline_grads_host, tick_table
+    from repro.core.precision import PrecisionPolicy
+    from repro.core.stash import get_backend
+    from repro.models.lm import pipeline_fns
+    from repro.train.loop import finish_step
+
+    cfg = get_config(arch)
+    tc = tc or TrainConfig(precision="bf16")
+    shape = shape or get_shape("train_4k")
+    plan.validate(cfg)   # host stash requires dp == tp == 1
+    opt = get_opt(tc.optimizer, tc.lr)
+    policy = getattr(PrecisionPolicy, tc.precision)()
+    rt = RuntimeT(dtype=policy.compute_dtype, remat=plan.remat)
+    table = tick_table(plan.schedule, plan.pp, plan.microbatches)
+    first_fn, stage_fn, last_fn = pipeline_fns(cfg, rt, 1)
+    M = plan.microbatches
+    backend = get_backend(plan.stash, host_window=host_window)
+
+    def step(state, batch):
+        params = state["params"]
+        stack = params["stack"]
+        shared = {k: v for k, v in params.items() if k != "stack"}
+        B, seq = batch["tokens"].shape
+        assert B % M == 0, f"batch {B} not divisible into {M} microbatches"
+        mbs = jax.tree.map(
+            lambda a: a.reshape((M, B // M) + a.shape[1:]), batch
+        )
+        x_struct = jax.ShapeDtypeStruct((B // M, seq, cfg.d_model), rt.dtype)
+        metrics_struct = {
+            "xent": jax.ShapeDtypeStruct((), jnp.float32),
+            "z_loss": jax.ShapeDtypeStruct((), jnp.float32),
+        }
+        norm = M
+        seed = state["scale"]["scale"] / norm
+        loss_sum, msum, stack_g, shared_g = pipeline_grads_host(
+            first_fn, stage_fn, last_fn, stack, shared, mbs,
+            table=table, x_struct=x_struct,
+            metrics_struct=metrics_struct, seed=seed, stash=backend,
+        )
+        grads = dict(shared_g, stack=stack_g)
+        loss = loss_sum / norm
+        xent = msum["xent"] / norm
+        zl = msum["z_loss"] / norm
+        aux = (
+            (loss - xent - zl) / cfg.router_aux_coef
+            if cfg.router_aux_coef else jnp.zeros((), jnp.float32)
+        )
+        metrics = {"loss": loss, "xent": xent, "z_loss": zl, "aux": aux}
+        return finish_step(state, grads, metrics, tc, policy, opt)
+
+    state_struct = jax.eval_shape(lambda: make_state(cfg, opt, tc))
+    batch_struct = _batch_struct(cfg, shape)
+    return step, (state_struct, batch_struct), backend
 
 
 def _params_struct_and_shard(cfg: ArchConfig, mesh, zero3: bool = False):
@@ -349,6 +422,15 @@ def main() -> None:
     ap.add_argument("--plan", default="", choices=("", "auto"),
                     help="'auto': dp_pp_search picks (dp, pp) for the "
                          "device count")
+    ap.add_argument("--stash", default="raw",
+                    choices=("raw", "int8", "fp8", "host"),
+                    help="pipeline activation-slot storage (core.stash): "
+                         "int8/fp8 compress slots in-scan, host evicts "
+                         "them to host RAM (single-device eager runner)")
+    ap.add_argument("--act-budget-mb", type=float, default=0.0,
+                    help="per-device activation-state budget in MiB; with "
+                         "--plan auto the search escalates raw -> fp8 if "
+                         "the raw stash does not fit")
     args = ap.parse_args()
 
     n = len(jax.devices())
@@ -367,7 +449,16 @@ def main() -> None:
                 return cand
         return 1
 
+    from repro.core.precision import PrecisionPolicy
+
+    itemsize = jnp.dtype(
+        getattr(PrecisionPolicy, args.precision)().compute_dtype
+    ).itemsize
+    act_budget = int(args.act_budget_mb * 2**20) or None
+
     plan = None
+    if args.stash == "host" and args.pipe <= 1 and args.plan != "auto":
+        raise SystemExit("--stash host needs the pipeline trainer (--pipe P)")
     if args.plan == "auto":
         if args.pipe > 1:
             raise SystemExit(
@@ -385,8 +476,15 @@ def main() -> None:
                     cfg, n, microbatches=mb, tp=tp,
                     schedule=args.schedule, remat=args.remat,
                     max_dp=max(args.batch // mb, 1),
+                    stash=args.stash, act_budget=act_budget,
+                    global_batch=args.batch, seq_len=args.seq,
+                    itemsize=itemsize,
                 )
             except AssertionError:
+                plan = None
+            except ValueError:
+                if act_budget is None:   # budget misses retry at smaller M
+                    raise
                 plan = None
             if plan is not None and args.batch % (mb * plan.dp):
                 plan = None
@@ -398,36 +496,47 @@ def main() -> None:
                     )
                 mb //= 2
     elif args.pipe > 1:
-        tp = args.tp or tp_auto(n // args.pipe)
-        if n % (tp * args.pipe):
+        host = args.stash == "host"
+        tp = 1 if host else (args.tp or tp_auto(n // args.pipe))
+        if not host and n % (tp * args.pipe):
             raise SystemExit(
                 f"{n} devices don't factor into tp={tp} x pipe={args.pipe}"
             )
         plan = ParallelPlan(
-            dp=n // (tp * args.pipe), tp=tp, pp=args.pipe,
+            dp=1 if host else n // (tp * args.pipe), tp=tp, pp=args.pipe,
             microbatches=args.microbatches or 2 * args.pipe,
-            schedule=args.schedule, remat=args.remat,
-        ).validate(cfg)
+            schedule=args.schedule, remat=args.remat, stash=args.stash,
+        ).validate(cfg, global_batch=args.batch, seq_len=args.seq,
+                   act_budget=act_budget, itemsize=itemsize)
 
     tc = TrainConfig(precision=args.precision, remat=args.remat,
                      zero_stage=args.zero,
                      fused_backward=args.fused_backward,
                      pipe=plan.pp if plan else 1,
                      schedule=args.schedule,
-                     microbatches=plan.microbatches if plan else 1)
+                     microbatches=plan.microbatches if plan else 1,
+                     stash=plan.stash if plan else "raw")
 
+    stash_backend = None
     if plan is not None:
         if args.batch % (plan.microbatches * plan.dp):
             raise SystemExit(
                 f"--batch {args.batch} must divide into "
                 f"microbatches*dp = {plan.microbatches}x{plan.dp}"
             )
-        mesh = make_train_mesh(plan.dp, plan.tp, plan.pp)
-        print(f"devices={n} mesh=({plan.dp} data x {plan.tp} model x "
-              f"{plan.pp} pipe) plan: {plan.describe()}")
-        jitted, (s_struct, b_struct) = build_train_pipeline(
-            cfg.name, mesh, plan, tc, shape
-        )
+        if plan.stash == "host":
+            print(f"devices={n} host-driven runner (1 device) "
+                  f"plan: {plan.describe()}")
+            jitted, (s_struct, b_struct), stash_backend = (
+                build_train_pipeline_host(cfg.name, plan, tc, shape)
+            )
+        else:
+            mesh = make_train_mesh(plan.dp, plan.tp, plan.pp)
+            print(f"devices={n} mesh=({plan.dp} data x {plan.tp} model x "
+                  f"{plan.pp} pipe) plan: {plan.describe()}")
+            jitted, (s_struct, b_struct) = build_train_pipeline(
+                cfg.name, mesh, plan, tc, shape
+            )
     else:
         model_ax = args.tp or 1
         if not args.tp:
@@ -460,6 +569,17 @@ def main() -> None:
                       f"({(time.time()-t0)/(i+1):.2f}s/it)")
     finally:
         data.close()
+    if plan is not None:
+        rep = plan.stash_report(
+            cfg, global_batch=args.batch, seq_len=args.seq, itemsize=itemsize
+        )
+        print(f"stash={rep['backend']} bytes/slot={rep['bytes_per_slot']} "
+              f"(raw {rep['raw_bytes_per_slot']}) "
+              f"act high-water={rep['n_act_slots']} slots "
+              f"act bytes={rep['act_bytes']} "
+              f"capacity={rep['capacity_factor']:.2f}x raw")
+        if stash_backend is not None:
+            print(f"host stash stats: {stash_backend.stats()}")
     print("train main OK")
 
 

@@ -335,6 +335,55 @@ def predicted_decode_kv_speedup(
     )
 
 
+def stash_bytes_per_slot(
+    n_elems: int, stash: str = "raw", native_itemsize: int = 2,
+    block: int = 256,
+) -> int:
+    """Exact bytes one pipeline activation slot occupies under a stash
+    backend (core.stash). ``raw``/``host`` store the native dtype (host's
+    device *window* is raw-width; the accounting caller multiplies by the
+    window, not the slot count). ``int8``/``fp8`` store 1-byte codes
+    zero-padded to the block multiple plus one f32 scale per block — the
+    same arithmetic core.stash.QuantStash.slot_bytes performs on a real
+    leaf struct, kept here in closed form for planning."""
+    from repro.core.stash import normalize_stash
+
+    s = normalize_stash(stash)
+    if s in ("raw", "host"):
+        return n_elems * native_itemsize
+    padded = (n_elems + block - 1) // block * block
+    return padded + (padded // block) * 4   # SCALE_BYTES
+
+
+def predicted_stash_capacity_factor(
+    n_elems: int, stash: str, native_itemsize: int = 2, block: int = 256,
+) -> float:
+    """Per-slot byte ratio raw : ``stash`` — how many stashed microbatch
+    activations fit where one raw one did (>= 1.8x for fp8/int8 vs bf16 at
+    block 256: 2 / (1 + 4/block))."""
+    return (
+        stash_bytes_per_slot(n_elems, "raw", native_itemsize, block)
+        / stash_bytes_per_slot(n_elems, stash, native_itemsize, block)
+    )
+
+
+def predicted_pipeline_stash_bytes(
+    n_elems: int, n_act_slots: int, n_cot_slots: int, stash: str,
+    native_itemsize: int = 2, block: int = 256, host_window: int = 2,
+) -> int:
+    """Predicted device-resident pipeline-state bytes per device: activation
+    slots at stash width plus cotangent slots at native width (cotangents
+    are consumed the tick after they arrive, so the runner never compresses
+    them). ``host`` keeps only ``window`` activation slots on device."""
+    from repro.core.stash import normalize_stash
+
+    s = normalize_stash(stash)
+    act_slots = min(host_window, n_act_slots) if s == "host" else n_act_slots
+    act = act_slots * stash_bytes_per_slot(n_elems, s, native_itemsize, block)
+    cot = n_cot_slots * n_elems * native_itemsize
+    return act + cot
+
+
 def derive_terms(rec: Dict) -> Dict[str, float]:
     """Report-side roofline terms from a dry-run JSON record.
 

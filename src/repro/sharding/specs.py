@@ -268,6 +268,28 @@ def paged_state_specs(cfg: ArchConfig, state_shape: Any, mesh) -> Any:
     return jax.tree_util.tree_map_with_path(one, state_shape)
 
 
+def stash_state_specs(state_shape: Any, mesh) -> Any:
+    """Spec tree for a materialized activation-stash state (core.stash).
+
+    Inside the pipeline runner the stash rides the shard_map scan carry and
+    needs no specs; this helper covers the stash OUTSIDE shard_map — e.g. a
+    stacked per-stage view with a leading ``pipe``-degree axis (checkpoint
+    dumps, the bench's buffer measurement). The rule mirrors the quantized
+    KV pool (PR 6): a leading axis equal to the pipe degree shards over
+    ``pipe`` — and codes + scales shard together since both carry it —
+    everything else (slot axis, blocks) is replicated.
+    """
+    pp = mesh.shape["pipe"] if "pipe" in mesh.shape else 1
+
+    def one(leaf):
+        dims: list = [None] * len(leaf.shape)
+        if pp > 1 and len(leaf.shape) > 0 and leaf.shape[0] == pp:
+            dims[0] = "pipe"
+        return P(*dims)
+
+    return jax.tree.map(one, state_shape)
+
+
 def with_sharding(mesh, spec_tree: Any) -> Any:
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), spec_tree,

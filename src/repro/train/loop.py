@@ -56,6 +56,7 @@ class TrainConfig:
     pipe: int = 1                     # pipeline stages (pp degree)
     microbatches: int = 1             # microbatches per step (pipeline mode)
     schedule: str = "1f1b"            # executable schedule: 1f1b | gpipe
+    stash: str = "raw"                # activation-slot storage: raw|int8|fp8|host
     log_every: int = 10
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 0

@@ -1,0 +1,451 @@
+"""Activation-stash subsystem (core.stash): codecs, accounting, executors.
+
+Property tests (hypothesis, via the optional shim): random pytrees
+round-trip through every backend — raw/host bit-exactly, int8 within the
+blockwise |err| <= scale/2 bound — and byte accounting is exact against
+the buffers ``init`` actually allocates. Executor tests run the offload
+action-vector executor and the host-driven pipeline runner against plain
+``jax.grad`` oracles. Planner tests cover the stash-aware ParallelPlan:
+host-mode degree constraint, activation-budget validation, and the
+auto_plan raw -> fp8 escalation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp_compat import hypothesis, st
+
+from repro.core.stash import (
+    HostStash,
+    QuantStash,
+    RawStash,
+    get_backend,
+    normalize_stash,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _tree_bytes(tree) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        n = 1
+        for d in leaf.shape:
+            n *= int(d)
+        total += n * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def _random_tree(rng, dtype=jnp.float32):
+    shapes = [(3, 7), (257,), (2, 2, 130)]
+    return {
+        f"leaf{i}": jnp.asarray(
+            rng.randn(*s).astype(np.float32) * 10 ** rng.randint(-2, 3),
+            dtype,
+        )
+        for i, s in enumerate(shapes)
+    }
+
+
+def _struct(tree):
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree
+    )
+
+
+# ------------------------------------------------------------- round trips
+def test_normalize_stash():
+    assert normalize_stash("") == "raw"
+    assert normalize_stash("bf16") == "raw"
+    assert normalize_stash("fp8") == "fp8"
+    with pytest.raises(ValueError):
+        normalize_stash("zstd")
+
+
+@hypothesis.given(st.integers(0, 50), st.integers(0, 5))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_property_raw_roundtrip_bitexact(seed, slot):
+    rng = np.random.RandomState(seed)
+    tree = _random_tree(rng)
+    b = RawStash()
+    state = b.init(7, _struct(tree))
+    got = b.get(b.put(state, slot, tree), slot, _struct(tree))
+    for a, g in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(g))
+
+
+@hypothesis.given(st.integers(0, 50))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_property_int8_error_bound(seed):
+    """Blockwise symmetric int8: elementwise |err| <= scale/2 of the
+    element's 256-block (scale = blockwise absmax / 127)."""
+    rng = np.random.RandomState(seed)
+    tree = _random_tree(rng)
+    b = QuantStash("int8")
+    state = b.init(2, _struct(tree))
+    got = b.get(b.put(state, 1, tree), 1, _struct(tree))
+    for a, g in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        flat = np.asarray(a, np.float32).reshape(-1)
+        out = np.asarray(g, np.float32).reshape(-1)
+        pad = (-len(flat)) % b.block
+        fp = np.pad(flat, (0, pad)).reshape(-1, b.block)
+        scale = np.abs(fp).max(axis=1, keepdims=True) / 127.0
+        bound = np.repeat(scale / 2 + 1e-7, b.block, axis=1).reshape(-1)
+        assert np.all(np.abs(out - flat) <= bound[: len(flat)])
+
+
+@hypothesis.given(st.integers(0, 50), st.sampled_from(["int8", "fp8"]))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_property_byte_accounting(seed, storage):
+    """slot_bytes/state_bytes are EXACT: raw == sum of leaf nbytes; quant
+    == the measured size of the code+scale buffers init allocates."""
+    rng = np.random.RandomState(seed)
+    tree = _random_tree(rng)
+    struct = _struct(tree)
+    raw = RawStash()
+    assert raw.slot_bytes(struct) == _tree_bytes(tree)
+    assert raw.state_bytes(5, struct) == _tree_bytes(raw.init(5, struct))
+    q = QuantStash(storage)
+    measured = _tree_bytes(jax.eval_shape(lambda: q.init(5, struct)))
+    assert q.state_bytes(5, struct) == measured
+    assert q.slot_bytes(struct) < raw.slot_bytes(struct)
+
+
+def test_fp8_roundtrip_close():
+    rng = np.random.RandomState(0)
+    tree = _random_tree(rng)
+    b = QuantStash("fp8")
+    got = b.get(b.put(b.init(1, _struct(tree)), 0, tree), 0, _struct(tree))
+    for a, g in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        a, g = np.asarray(a, np.float64), np.asarray(g, np.float64)
+        denom = np.abs(a).max() + 1e-12
+        assert np.abs(a - g).max() / denom < 0.07   # e4m3 blockwise
+
+
+def test_ste_roundtrip_matches_put_get_and_passes_grads():
+    """backend.roundtrip forward is bitwise the stash perturbation (what a
+    put-then-get returns); its gradient is identity (straight-through)."""
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.randn(2, 300).astype(np.float32))
+    b = QuantStash("int8")
+    struct = jax.ShapeDtypeStruct(x.shape, x.dtype)
+    via_state = b.get(b.put(b.init(1, struct), 0, x), 0, struct)
+    via_rt = b.roundtrip(x)
+    np.testing.assert_array_equal(np.asarray(via_state), np.asarray(via_rt))
+    g = jax.grad(lambda v: jnp.sum(jnp.sin(b.roundtrip(v))))(x)
+    expect = jnp.cos(b.roundtrip(x))     # d/dx sin(rt(x)) with STE
+    np.testing.assert_allclose(np.asarray(g), np.asarray(expect), rtol=1e-6)
+
+
+def test_quant_stash_traced_slots_under_scan():
+    """put/get with TRACED slot indices inside lax.scan — the in-pipeline
+    usage (slots come from int32 tick tables)."""
+    rng = np.random.RandomState(1)
+    xs = jnp.asarray(rng.randn(4, 2, 300).astype(np.float32))
+    b = QuantStash("fp8")
+    struct = jax.ShapeDtypeStruct(xs.shape[1:], xs.dtype)
+    slots = jnp.asarray([2, 0, 1, 2], jnp.int32)
+
+    @jax.jit
+    def run(xs):
+        state0 = b.init(3, struct)
+
+        def step(state, inp):
+            slot, x = inp
+            state = b.put(state, slot, x)
+            return state, b.get(state, slot, struct)
+
+        return jax.lax.scan(step, state0, (slots, xs))[1]
+
+    out = run(xs)
+    ref = jnp.stack([b.roundtrip(x) for x in xs])
+    # jit fusion may round differently than the eager reference — equality
+    # is at float precision, not bitwise, across compilation regimes
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------------------- host stash
+def test_host_stash_evicts_and_restores_bitexact():
+    rng = np.random.RandomState(2)
+    trees = [_random_tree(rng) for _ in range(4)]
+    b = HostStash(window=2)
+    state = b.init(4, None)
+    for i, t in enumerate(trees):
+        state = b.put(state, i, t)
+    stats = b.stats()
+    assert stats["puts"] == 4 and stats["evictions"] == 2
+    assert stats["host_bytes_high_water"] == 2 * _tree_bytes(trees[0])
+    for i, t in enumerate(trees):        # 0,1 from host; 2,3 from window
+        got = b.get(state, i, None)
+        for a, g in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(g))
+    stats = b.stats()
+    assert stats["host_hits"] == 2 and stats["window_hits"] == 2
+    # device-resident accounting: only the window counts
+    struct = _struct(trees[0])
+    assert b.state_bytes(4, struct) == 2 * b.slot_bytes(struct)
+
+
+def test_host_stash_slot_reuse_drops_stale_copy():
+    b = HostStash(window=1)
+    state = b.init(2, None)
+    state = b.put(state, 0, jnp.ones(4))
+    state = b.put(state, 1, jnp.zeros(4))        # evicts slot 0 to host
+    state = b.put(state, 0, jnp.full(4, 7.0))    # reuse must drop stale 0
+    np.testing.assert_array_equal(np.asarray(b.get(state, 0, None)),
+                                  np.full(4, 7.0))
+
+
+# --------------------------------------------------- offload-chain executor
+def test_offload_chain_grads_matches_oracle():
+    """Executing a keep/offload/recompute action vector reproduces plain
+    jax.grad over the same segment chain (host round-trips are bit-exact,
+    recompute replays are the same f32 ops)."""
+    from repro.core.offload import offload_chain_grads
+
+    rng = np.random.RandomState(0)
+    n, d = 5, 8
+    params = [jnp.asarray(rng.randn(d, d).astype(np.float32) * 0.3)
+              for _ in range(n)]
+    x0 = jnp.asarray(rng.randn(2, d).astype(np.float32))
+
+    def seg(p, x):
+        return jnp.tanh(x @ p)
+
+    def loss_fn(y):
+        return jnp.sum(y * y)
+
+    def full(ps, x):
+        for p in ps:
+            x = seg(p, x)
+        return loss_fn(x)
+
+    ref_loss, ref_grads = jax.value_and_grad(full)(params, x0)
+    actions = ["keep", "offload", "recompute", "offload", "recompute"]
+    loss, grads, dx0, stats = offload_chain_grads(
+        [seg] * n, params, x0, actions, loss_fn, host_window=1
+    )
+    np.testing.assert_allclose(float(loss), float(ref_loss), rtol=1e-6)
+    for g, r in zip(grads, ref_grads):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r), rtol=1e-5,
+                                   atol=1e-6)
+    assert stats["replayed_segments"] > 0
+    assert stats["evictions"] > 0        # window=1 forces host traffic
+
+
+# ------------------------------------------------------- host-driven runner
+def _toy_pipeline(P, M, L, d, seed=0):
+    rng = np.random.RandomState(seed)
+    stage_params = {"w": jnp.asarray(rng.randn(L, d, d).astype(np.float32) * 0.3)}
+    shared = {"emb": jnp.asarray(rng.randn(d, d).astype(np.float32) * 0.3)}
+    mbs = jnp.asarray(rng.randn(M, 2, d).astype(np.float32))
+
+    def first_fn(sh, mb):
+        return mb @ sh["emb"]
+
+    def stage_fn(sp, x):
+        def body(h, w):
+            return jnp.tanh(h @ w), jnp.zeros((), jnp.float32)
+        y, aux = jax.lax.scan(body, x, sp["w"])
+        return y, jnp.sum(aux)
+
+    def last_fn(sh, y, mb):
+        loss = jnp.sum((y - mb) ** 2)
+        return loss, {"xent": loss}
+
+    return stage_params, shared, mbs, first_fn, stage_fn, last_fn
+
+
+@pytest.mark.parametrize("stash", ["raw", "host"])
+@pytest.mark.parametrize("schedule", ["1f1b", "gpipe"])
+def test_pipeline_grads_host_matches_oracle(stash, schedule):
+    """The eager host-driven runner reproduces jax.grad of the sequential
+    model — with HostStash (window=1, forcing evictions) bit-identically
+    to RawStash."""
+    from repro.core.pipeline import pipeline_grads_host, tick_table
+
+    P, M, L, d = 2, 4, 4, 6
+    stage_params, shared, mbs, first_fn, stage_fn, last_fn = _toy_pipeline(
+        P, M, L, d
+    )
+    table = tick_table(schedule, P, M)
+    x_struct = jax.ShapeDtypeStruct((2, d), jnp.float32)
+    backend = get_backend(stash, host_window=1)
+    loss, metrics, gstack, gshared = pipeline_grads_host(
+        first_fn, stage_fn, last_fn, stage_params, shared, mbs,
+        table=table, x_struct=x_struct,
+        metrics_struct={"xent": jax.ShapeDtypeStruct((), jnp.float32)},
+        stash=backend,
+    )
+
+    def full(sp, sh):
+        total = jnp.zeros((), jnp.float32)
+        for m in range(M):
+            x = first_fn(sh, mbs[m])
+            y, _ = stage_fn(sp, x)
+            l, _ = last_fn(sh, y, mbs[m])
+            total = total + l
+        return total
+
+    ref_loss, (ref_sp, ref_sh) = jax.value_and_grad(full, argnums=(0, 1))(
+        stage_params, shared
+    )
+    np.testing.assert_allclose(float(loss), float(ref_loss), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gstack["w"]),
+                               np.asarray(ref_sp["w"]), rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(gshared["emb"]),
+                               np.asarray(ref_sh["emb"]), rtol=1e-4, atol=1e-6)
+    if stash == "host":
+        stats = backend.stats()
+        assert stats["evictions"] > 0 and stats["host_hits"] > 0
+
+
+def test_pipeline_grads_host_raw_vs_host_bitexact():
+    from repro.core.pipeline import pipeline_grads_host, tick_table
+
+    P, M, L, d = 2, 4, 4, 6
+    args = _toy_pipeline(P, M, L, d)
+    stage_params, shared, mbs, first_fn, stage_fn, last_fn = args
+    table = tick_table("1f1b", P, M)
+    x_struct = jax.ShapeDtypeStruct((2, d), jnp.float32)
+    kw = dict(table=table, x_struct=x_struct,
+              metrics_struct={"xent": jax.ShapeDtypeStruct((), jnp.float32)})
+    outs = {}
+    for stash in ("raw", "host"):
+        outs[stash] = pipeline_grads_host(
+            first_fn, stage_fn, last_fn, stage_params, shared, mbs,
+            stash=get_backend(stash, host_window=1), **kw,
+        )
+    for a, b in zip(jax.tree.leaves(outs["raw"]), jax.tree.leaves(outs["host"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pipeline_grads_rejects_host_backend():
+    from repro.core.pipeline import pipeline_grads
+
+    with pytest.raises(ValueError, match="host-driven"):
+        pipeline_grads(None, None, None, None, None, None,
+                       mesh=None, table=None, x_struct=None,
+                       metrics_struct=None, stage_specs=None, mb_specs=None,
+                       stash=get_backend("host"))
+
+
+# ------------------------------------------------------------ plan plumbing
+def _tiny_cfg():
+    from repro.configs import SURVEY_DEMO, reduced
+
+    return reduced(SURVEY_DEMO, n_layers=4, d_model=128, n_heads=4,
+                   n_kv_heads=2, d_ff=256, vocab_size=512)
+
+
+def test_plan_stash_validation():
+    from repro.core.partitioner import ParallelPlan
+
+    cfg = _tiny_cfg()
+    ParallelPlan(pp=2, microbatches=4, stash="fp8").validate(cfg)
+    with pytest.raises(ValueError, match="not in"):
+        ParallelPlan(pp=2, microbatches=4, stash="zstd").validate(cfg)
+    with pytest.raises(ValueError, match="host-driven"):
+        ParallelPlan(dp=2, pp=2, microbatches=4, stash="host").validate(cfg)
+    ParallelPlan(pp=2, microbatches=4, stash="host").validate(cfg)
+
+
+def test_plan_stash_report_and_budget():
+    from repro.core.partitioner import ParallelPlan
+
+    cfg = _tiny_cfg()
+    base = ParallelPlan(pp=2, microbatches=4)
+    kw = dict(global_batch=8, seq_len=64, itemsize=4)
+    raw = base.stash_report(cfg, **kw)
+    assert raw["backend"] == "raw"
+    assert raw["n_act_slots"] == 2               # min(P, M) for 1f1b
+    assert raw["capacity_factor"] == 1.0
+    import dataclasses
+
+    fp8 = dataclasses.replace(base, stash="fp8").stash_report(cfg, **kw)
+    assert fp8["act_bytes"] < raw["act_bytes"]
+    assert fp8["raw_act_bytes"] == raw["act_bytes"]
+    # per-SLOT compression beats 1.8x; whole-state factor is diluted by the
+    # uncompressed cotangent slot
+    assert raw["bytes_per_slot"] / fp8["bytes_per_slot"] >= 1.8
+    budget = (raw["act_bytes"] + fp8["act_bytes"]) // 2
+    with pytest.raises(ValueError, match="exceeds budget"):
+        base.validate(cfg, act_budget=budget, **kw)
+    dataclasses.replace(base, stash="fp8").validate(
+        cfg, act_budget=budget, **kw
+    )
+
+
+def test_auto_plan_stash_escalation():
+    from repro.core.partitioner import ParallelPlan, auto_plan
+
+    cfg = _tiny_cfg()
+    kw = dict(global_batch=8, seq_len=64, itemsize=4)
+    raw = ParallelPlan(pp=2, microbatches=4).stash_report(cfg, **kw)
+    fp8 = ParallelPlan(pp=2, microbatches=4, stash="fp8").stash_report(cfg, **kw)
+    budget = (raw["act_bytes"] + fp8["act_bytes"]) // 2
+    plan = auto_plan(cfg, 2, microbatches=4, tp=1, max_dp=1,
+                     stash="raw", act_budget=budget, **kw)
+    assert plan.stash == "fp8"                   # escalated raw -> fp8
+    assert "stash=fp8" in plan.describe()
+    with pytest.raises(ValueError, match="no stash backend fits"):
+        auto_plan(cfg, 2, microbatches=4, tp=1, max_dp=1,
+                  stash="raw", act_budget=1000, **kw)
+    # an ample budget keeps the requested backend
+    plan = auto_plan(cfg, 2, microbatches=4, tp=1, max_dp=1,
+                     stash="raw", act_budget=raw["act_bytes"], **kw)
+    assert plan.stash == "raw"
+
+
+def test_stash_state_specs():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.specs import stash_state_specs
+
+    class _Mesh:
+        shape = {"data": 1, "model": 1, "pipe": 4}
+
+    state = {
+        "codes": jax.ShapeDtypeStruct((4, 3, 2, 256), jnp.int8),
+        "scales": jax.ShapeDtypeStruct((4, 3, 2), jnp.float32),
+        "slot_axis_only": jax.ShapeDtypeStruct((3, 8), jnp.float32),
+    }
+    specs = stash_state_specs(state, _Mesh())
+    assert specs["codes"] == P("pipe", None, None, None)
+    assert specs["scales"] == P("pipe", None, None)   # shards WITH codes
+    assert specs["slot_axis_only"] == P(None, None)
+
+    class _Mesh2D:
+        shape = {"data": 2, "model": 2}
+
+    specs = stash_state_specs(state, _Mesh2D())
+    assert specs["codes"] == P(None, None, None, None)
+
+
+# ------------------------------------------------------------ roofline math
+def test_roofline_stash_bytes():
+    from repro.roofline.analysis import (
+        predicted_pipeline_stash_bytes,
+        predicted_stash_capacity_factor,
+        stash_bytes_per_slot,
+    )
+
+    assert stash_bytes_per_slot(8192, "raw", 2) == 16384
+    assert stash_bytes_per_slot(8192, "host", 2) == 16384
+    assert stash_bytes_per_slot(8192, "fp8", 2) == 8192 + 32 * 4
+    assert stash_bytes_per_slot(100, "int8", 4) == 256 + 4   # pads to 1 block
+    assert predicted_stash_capacity_factor(8192, "fp8", 2) >= 1.8
+    assert predicted_stash_capacity_factor(8192, "int8", 4) >= 3.6
+    # closed form == the real backend's accounting on a same-size struct
+    struct = jax.ShapeDtypeStruct((8192,), jnp.bfloat16)
+    for name in ("raw", "int8", "fp8"):
+        assert get_backend(name).slot_bytes(struct) == stash_bytes_per_slot(
+            8192, name, 2
+        )
+    # pipeline state: act slots at stash width + cot slots native; host
+    # keeps only the device window
+    assert predicted_pipeline_stash_bytes(100, 4, 1, "raw", 4) == 5 * 400
+    assert predicted_pipeline_stash_bytes(100, 4, 1, "host", 4,
+                                          host_window=2) == 3 * 400
