@@ -1,4 +1,4 @@
-"""Activation-stash bench: capacity accounting + pipeline step timings.
+"""Activation-stash bench: capacity accounting + codec + pipeline timings.
 
 Accounting rows (us = 0.0, exact — gated by check_regression):
   * fp8-vs-bf16 bytes per activation slot: blockwise codes + per-block f32
@@ -8,28 +8,44 @@ Accounting rows (us = 0.0, exact — gated by check_regression):
   * predicted-vs-measured: the roofline closed form for stash state bytes
     must equal the byte size of the buffers ``StashBackend.init``
     actually allocates (eval_shape), per backend.
-  * plan unlock: a ParallelPlan whose activation budget fails
-    ``.validate()`` at stash=raw validates (and, per the timed rows,
-    trains) at stash=fp8 — the capacity factor as a feasibility flip.
+  * host byte split: HostStash device-window vs host-spill bytes match the
+    roofline closed forms (device window raw-width, spill beyond it).
+  * host overlap: on a deterministic toy pipeline, the prefetching runner
+    (lookahead=2) converts the eager runner's stalled gets into prefetch
+    hits — counters are exact functions of (schedule, window, lookahead).
+  * plan unlock / remat trade: a ParallelPlan whose total activation state
+    (slots + within-stage transient) fails ``.validate()`` at stash=raw
+    fits at stash=fp8, and ``auto_plan`` walks the (stash, remat) ladder —
+    compression first, per-stage full remat only when compression alone
+    does not fit.
 
-Timed rows (subprocess on 4 forced host devices): 1F1B step time at
-stash raw / int8 / fp8 on the same reduced model, plus the host-driven
-eager runner (stash=host) with its eviction stats.
+Timed rows:
+  * codec roundtrip (in-process): the jnp reference vs the Pallas kernels
+    in interpret mode (the CPU validation path; on TPU ``fused_stash``
+    routes to the compiled kernels, on CPU it resolves to the jnp codec —
+    see kernels.blockwise_quant.ops.fused_codec_backend).
+  * 1F1B step time (subprocess, 4 forced host devices) at stash raw /
+    int8 / fp8 and with ``fused_stash=True`` (must stay ~1x raw), plus the
+    host-driven runner eager (lookahead=0) vs prefetching (lookahead=2)
+    with measured stall fractions.
 """
 from __future__ import annotations
 
 import subprocess
 import sys
 import textwrap
+from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import emit, header, subprocess_env
+from benchmarks.common import emit, header, subprocess_env, time_fn
 from repro.core.pipeline import tick_table
 from repro.core.stash import get_backend
 from repro.roofline.analysis import (
     predicted_stash_capacity_factor,
+    predicted_stash_host_bytes,
     stash_bytes_per_slot,
 )
 
@@ -84,10 +100,87 @@ def _accounting() -> None:
             f"({n_slots} slots incl. trash)",
         )
 
+    # host stash byte split: gpipe holds M slots, the window keeps 2 on
+    # device, everything beyond it spills to host RAM at raw width
+    tg = tick_table("gpipe", P, M)
+    host = get_backend("host", host_window=2)
+    dev = host.device_bytes(tg.n_act_slots, x_struct)
+    spill = host.host_bytes(tg.n_act_slots, x_struct)
+    predicted_spill = predicted_stash_host_bytes(
+        N_ELEMS, tg.n_act_slots, "host", native_itemsize=2, host_window=2
+    )
+    assert spill == predicted_spill, (spill, predicted_spill)
+    assert dev == 2 * stash_bytes_per_slot(N_ELEMS, "raw", 2)
+    emit(
+        f"train_stash/host_bytes_split@gpipe_P{P}M{M}", 0.0,
+        f"slots={tg.n_act_slots} device={dev} (window=2) host={spill} "
+        f"roofline_match=True",
+    )
+
+
+def _toy_pipeline(P_, M_, L, d, seed=0):
+    rng = np.random.RandomState(seed)
+    stage_params = {"w": jnp.asarray(rng.randn(L, d, d).astype(np.float32) * 0.3)}
+    shared = {"emb": jnp.asarray(rng.randn(d, d).astype(np.float32) * 0.3)}
+    mbs = jnp.asarray(rng.randn(M_, 2, d).astype(np.float32))
+
+    def first_fn(sh, mb):
+        return mb @ sh["emb"]
+
+    def stage_fn(sp, x):
+        def body(h, w):
+            return jnp.tanh(h @ w), jnp.zeros((), jnp.float32)
+        y, aux = jax.lax.scan(body, x, sp["w"])
+        return y, jnp.sum(aux)
+
+    def last_fn(sh, y, mb):
+        loss = jnp.sum((y - mb) ** 2)
+        return loss, {"xent": loss}
+
+    return stage_params, shared, mbs, first_fn, stage_fn, last_fn
+
+
+def _host_overlap() -> None:
+    """Deterministic overlap counters: eager vs prefetching host runner on
+    a toy pipeline with window=1 (every backward read is off-window)."""
+    from repro.core.pipeline import pipeline_grads_host
+
+    P_, M_, L, d = 2, 4, 4, 8
+    stage_params, shared, mbs, first_fn, stage_fn, last_fn = _toy_pipeline(
+        P_, M_, L, d
+    )
+    table = tick_table("1f1b", P_, M_)
+    kw = dict(
+        table=table,
+        x_struct=jax.ShapeDtypeStruct((2, d), jnp.float32),
+        metrics_struct={"xent": jax.ShapeDtypeStruct((), jnp.float32)},
+    )
+    outs, stats = {}, {}
+    for la in (0, 2):
+        backend = get_backend("host", host_window=1)
+        outs[la] = pipeline_grads_host(
+            first_fn, stage_fn, last_fn, stage_params, shared, mbs,
+            stash=backend, lookahead=la, **kw,
+        )
+        stats[la] = backend.stats()
+    for a, b in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[2])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    e, o = stats[0], stats[2]
+    assert o["gets"] == e["gets"] and o["host_hits"] == e["host_hits"]
+    assert e["prefetch_hits"] == 0 and e["stalled_gets"] == e["host_hits"]
+    assert o["stalled_gets"] < e["stalled_gets"], (e, o)
+    hit_rate = o["prefetch_hits"] / max(o["host_hits"], 1)
+    emit(
+        f"train_stash/host_overlap@1f1b_P{P_}M{M_}", 0.0,
+        f"window=1 off_window_gets={e['host_hits']} "
+        f"stalls eager={e['stalled_gets']} prefetch={o['stalled_gets']} "
+        f"hit_rate={hit_rate:.2f} bitwise_equal=True",
+    )
+
 
 def _plan_unlock() -> None:
     from repro.configs import SURVEY_DEMO, reduced
-    from repro.core.partitioner import ParallelPlan
+    from repro.core.partitioner import ParallelPlan, auto_plan
 
     tiny = reduced(SURVEY_DEMO, n_layers=4, d_model=D, n_heads=4,
                    n_kv_heads=2, d_ff=256, vocab_size=512)
@@ -98,7 +191,7 @@ def _plan_unlock() -> None:
 
     fp8 = dataclasses.replace(base, stash="fp8")
     fp8_rep = fp8.stash_report(tiny, **kw)
-    budget = (fp8_rep["act_bytes"] + raw_rep["act_bytes"]) // 2
+    budget = (fp8_rep["total_bytes"] + raw_rep["total_bytes"]) // 2
     try:
         base.validate(tiny, act_budget=budget, **kw)
         raise AssertionError("raw plan should exceed the budget")
@@ -107,10 +200,59 @@ def _plan_unlock() -> None:
     fp8.validate(tiny, act_budget=budget, **kw)
     emit(
         f"train_stash/plan_unlock@fp8_P{P}M{M}", 0.0,
-        f"budget={budget} raw={raw_rep['act_bytes']} (fails) "
-        f"fp8={fp8_rep['act_bytes']} (fits) "
+        f"budget={budget} raw_total={raw_rep['total_bytes']} (fails) "
+        f"fp8_total={fp8_rep['total_bytes']} (fits) "
         f"capacity={fp8_rep['capacity_factor']:.3f}x",
     )
+
+    # remat-vs-compression ladder at pp=2 (2 layers/stage, so full remat
+    # actually shrinks the within-stage transient): a mid budget escalates
+    # to fp8+cot compression WITHOUT paying remat; only a tighter one adds
+    # per-stage full remat on top
+    base2 = ParallelPlan(dp=1, tp=1, pp=2, microbatches=4, schedule="1f1b")
+    fp8c = dataclasses.replace(base2, stash="fp8", stash_cot=True)
+    fp8c_full = dataclasses.replace(fp8c, remat="full")
+    t_raw = base2.stash_report(tiny, **kw)["total_bytes"]
+    t_fp8c = fp8c.stash_report(tiny, **kw)["total_bytes"]
+    t_full = fp8c_full.stash_report(tiny, **kw)["total_bytes"]
+    assert t_full < t_fp8c < t_raw, (t_full, t_fp8c, t_raw)
+    ap_kw = dict(microbatches=4, tp=1, max_dp=1, stash="raw",
+                 global_batch=B, seq_len=SEQ, itemsize=4)
+    mid = auto_plan(tiny, 2, act_budget=(t_raw + t_fp8c) // 2, **ap_kw)
+    assert (mid.stash, mid.stash_cot, mid.remat) == ("fp8", True, "none")
+    tight = auto_plan(tiny, 2, act_budget=(t_fp8c + t_full) // 2, **ap_kw)
+    assert (tight.stash, tight.stash_cot, tight.remat) == ("fp8", True, "full")
+    emit(
+        "train_stash/remat_trade@1f1b_P2M4", 0.0,
+        f"totals raw={t_raw} fp8+cot={t_fp8c} fp8+cot+remat={t_full}; "
+        f"mid budget -> stash=fp8 remat=none, tight -> stash=fp8 remat=full",
+    )
+
+
+def _codec_timing() -> None:
+    """Codec roundtrip: jnp reference vs the Pallas kernels (interpret mode
+    on CPU — the validation path; compiled on TPU). Both jitted."""
+    from repro.kernels.blockwise_quant.ops import (
+        stash_dequantize, stash_quantize,
+    )
+
+    x = jnp.asarray(
+        np.random.RandomState(0).randn(64, SEQ, D).astype(np.float32) / 3,
+        jnp.bfloat16,
+    )
+
+    def roundtrip(v, storage, backend):
+        c, s = stash_quantize(v, storage, backend=backend)
+        return stash_dequantize(c, s, v.shape, v.dtype, backend=backend)
+
+    for storage in ("int8", "fp8"):
+        for backend, label in (("ref", "jnp"), ("pallas", "pallas_interp")):
+            fn = jax.jit(partial(roundtrip, storage=storage, backend=backend))
+            us = time_fn(fn, x, iters=5)
+            emit(
+                f"train_stash/codec@{storage}_{label}", us,
+                f"quant+dequant roundtrip {tuple(x.shape)} bf16 block=256",
+            )
 
 
 SCRIPT = textwrap.dedent(
@@ -142,16 +284,24 @@ SCRIPT = textwrap.dedent(
     def time_step(fn, state, batch, iters=5):
         state, m = fn(state, batch)          # compile + warm
         jax.block_until_ready(m)
-        t0 = time.perf_counter()
+        ts = []
         for _ in range(iters):
+            t0 = time.perf_counter()
             state, m = fn(state, batch)
             jax.block_until_ready(m)
-        return (time.perf_counter() - t0) / iters * 1e6, float(m["loss"])
+            ts.append(time.perf_counter() - t0)
+        ts.sort()
+        return ts[len(ts) // 2] * 1e6, float(m["loss"])
 
-    for stash in ("raw", "int8", "fp8"):
+    times = {}
+    for name, stash, fused in (
+        ("raw", "raw", False), ("int8", "int8", False), ("fp8", "fp8", False),
+        ("int8_fused", "int8", True), ("fp8_fused", "fp8", True),
+    ):
         plan = ParallelPlan(dp=1, tp=1, pp=P, microbatches=M,
                             schedule="1f1b", stash=stash).validate(TINY)
-        tc = TrainConfig(precision="f32", log_every=1, stash=stash)
+        tc = TrainConfig(precision="f32", log_every=1, stash=stash,
+                         fused_stash=fused)
         mesh = make_train_mesh(1, 1, P)
         jitted, (s_struct, b_struct) = build_train_pipeline(
             TINY.name, mesh, plan, tc, shape)
@@ -161,34 +311,50 @@ SCRIPT = textwrap.dedent(
         batch = jax.tree.map(
             lambda v, st: jax.device_put(jnp.asarray(v), st.sharding),
             batch_np, b_struct)
-        us, loss = time_step(jitted, state, batch)
-        print(f"ROW {stash} {us:.1f} loss={loss:.4f}")
+        us, loss = time_step(jitted, state, batch, iters=8)
+        times[name] = us
+        ratio = us / times["raw"]
+        print(f"ROW {name} {us:.1f} loss={loss:.4f} ratio_vs_raw={ratio:.2f}x")
+    for name in ("int8_fused", "fp8_fused"):
+        assert times[name] <= times["raw"] * 1.25, (name, times)
 
-    plan = ParallelPlan(dp=1, tp=1, pp=P, microbatches=M,
-                        schedule="1f1b", stash="host").validate(TINY)
-    tc = TrainConfig(precision="f32", log_every=1, stash="host")
-    step, _, backend = build_train_pipeline_host(TINY.name, plan, tc, shape)
-    state = make_state(TINY, opt, tc)
-    batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-    us, loss = time_step(step, state, batch, iters=2)
-    st = backend.stats()
-    print(f"ROW host {us:.1f} loss={loss:.4f} "
-          f"evictions={st['evictions']} host_hits={st['host_hits']}")
+    for name, lookahead in (("host_eager", 0), ("host", 2)):
+        plan = ParallelPlan(dp=1, tp=1, pp=P, microbatches=M,
+                            schedule="1f1b", stash="host").validate(TINY)
+        tc = TrainConfig(precision="f32", log_every=1, stash="host")
+        step, _, backend = build_train_pipeline_host(
+            TINY.name, plan, tc, shape, lookahead=lookahead)
+        state = make_state(TINY, opt, tc)
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        us, loss = time_step(step, state, batch, iters=1)
+        st = backend.stats()
+        frac = st["stalled_gets"] / max(st["host_hits"], 1)
+        hits = st["prefetch_hits"] / max(st["host_hits"], 1)
+        print(f"ROW {name} {us:.1f} loss={loss:.4f} "
+              f"evictions={st['evictions']} host_hits={st['host_hits']} "
+              f"stall_frac={frac:.2f} prefetch_hit_rate={hits:.2f}")
+        if lookahead == 0:
+            assert frac == 1.0, st       # eager: every off-window get stalls
+        else:
+            assert frac < 1.0, st        # overlap measurably removes stalls
     """
 )
+
+ROW_NAMES = ("raw", "int8", "fp8", "int8_fused", "fp8_fused",
+             "host_eager", "host")
 
 
 def _executable() -> None:
     r = subprocess.run(
         [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
-        timeout=900, env=subprocess_env(),
+        timeout=1800, env=subprocess_env(),
     )
     rows = {}
     for ln in r.stdout.splitlines():
         if ln.startswith("ROW "):
             _, name, us, extra = ln.split(maxsplit=3)
             rows[name] = (float(us), extra)
-    for name in ("raw", "int8", "fp8", "host"):
+    for name in ROW_NAMES:
         us, extra = rows.get(name, (0.0, f"FAILED rc={r.returncode}"))
         emit(
             f"train_stash/step@{name}_P{P}M{M}", us,
@@ -198,9 +364,11 @@ def _executable() -> None:
 
 
 def main() -> None:
-    header("Activation stash: capacity accounting + 1F1B step timings")
+    header("Activation stash: accounting + codec + 1F1B step timings")
     _accounting()
+    _host_overlap()
     _plan_unlock()
+    _codec_timing()
     _executable()
 
 

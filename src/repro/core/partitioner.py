@@ -194,7 +194,10 @@ class ParallelPlan:
     recomputes each stage forward from its stored input, so this controls
     the *within-stage* transient only); ``stash`` picks the activation-slot
     storage backend (core.stash: raw | int8 | fp8 | host) — the capacity
-    knob that can make an otherwise-OOM plan feasible.
+    knob that can make an otherwise-OOM plan feasible; ``stash_cot``
+    additionally stores the pipeline's cotangent slots through the same
+    codec (quantized backends only — the second capacity knob
+    ``auto_plan`` prices against per-stage remat).
     """
     dp: int = 1
     tp: int = 1
@@ -204,6 +207,7 @@ class ParallelPlan:
     boundaries: Tuple[int, ...] = ()
     remat: str = "none"
     stash: str = "raw"
+    stash_cot: bool = False
 
     @property
     def n_devices(self) -> int:
@@ -249,6 +253,10 @@ class ParallelPlan:
                 "stash='host' uses the host-driven runner (single device "
                 f"per stage); got dp={self.dp} tp={self.tp}"
             )
+        if self.stash_cot and normalize_stash(self.stash) not in ("int8", "fp8"):
+            raise ValueError(
+                f"stash_cot=True needs a quantized stash, got {self.stash!r}"
+            )
         if cfg.n_layers % self.pp:
             raise ValueError(
                 f"{cfg.n_layers} layers not divisible into pp={self.pp} stages"
@@ -267,12 +275,15 @@ class ParallelPlan:
                 cfg, global_batch=global_batch, seq_len=seq_len,
                 itemsize=itemsize,
             )
-            if rep["act_bytes"] > act_budget:
+            if rep["total_bytes"] > act_budget:
                 raise ValueError(
-                    f"activation state {rep['act_bytes']} B exceeds budget "
+                    f"activation state {rep['total_bytes']} B (slots "
+                    f"{rep['act_bytes']} B + within-stage transient "
+                    f"{rep['transient_bytes']} B) exceeds budget "
                     f"{act_budget} B at stash={rep['backend']} "
-                    f"(raw would need {rep['raw_act_bytes']} B; capacity "
-                    f"factor {rep['capacity_factor']:.2f}x)"
+                    f"remat={self.remat} "
+                    f"(raw slots would need {rep['raw_act_bytes']} B; "
+                    f"capacity factor {rep['capacity_factor']:.2f}x)"
                 )
         return self
 
@@ -286,32 +297,54 @@ class ParallelPlan:
     ) -> dict:
         """Predicted per-device pipeline activation-state bytes under this
         plan's stash backend (roofline.analysis closed forms; the bench
-        reconciles these against measured buffer sizes)."""
+        reconciles these against measured buffer sizes).
+
+        ``act_bytes`` (alias ``device_bytes``) is the device-resident slot
+        state; ``host_bytes`` the host-RAM high water a host stash spills;
+        ``transient_bytes`` the within-stage backward transient the
+        ``remat`` policy controls; ``total_bytes`` = device slots +
+        transient is what ``validate(act_budget=...)`` gates on."""
         from repro.core.pipeline import tick_table
         from repro.core.stash import normalize_stash
         from repro.roofline.analysis import (
             predicted_pipeline_stash_bytes,
+            predicted_stage_transient_bytes,
+            predicted_stash_host_bytes,
             stash_bytes_per_slot,
         )
 
         s = normalize_stash(self.stash)
+        cot_s = s if (self.stash_cot and s in ("int8", "fp8")) else "raw"
         table = tick_table(self.schedule, self.pp, self.microbatches)
         mb = global_batch // (self.dp * self.microbatches)
         n_elems = mb * seq_len * cfg.d_model // self.tp
         raw_slot = stash_bytes_per_slot(n_elems, "raw", itemsize)
         act = predicted_pipeline_stash_bytes(
-            n_elems, table.n_act_slots, table.n_cot_slots, s, itemsize
+            n_elems, table.n_act_slots, table.n_cot_slots, s, itemsize,
+            cot_stash=cot_s,
         )
         raw = predicted_pipeline_stash_bytes(
             n_elems, table.n_act_slots, table.n_cot_slots, "raw", itemsize
         )
+        host = predicted_stash_host_bytes(
+            n_elems, table.n_act_slots, s, itemsize
+        )
+        transient = predicted_stage_transient_bytes(
+            n_elems, cfg.n_layers // self.pp, self.remat, itemsize
+        )
         return {
             "backend": s,
+            "remat": self.remat,
+            "stash_cot": cot_s != "raw",
             "n_act_slots": table.n_act_slots,
             "n_cot_slots": table.n_cot_slots,
             "bytes_per_slot": stash_bytes_per_slot(n_elems, s, itemsize),
             "raw_bytes_per_slot": raw_slot,
             "act_bytes": act,
+            "device_bytes": act,
+            "host_bytes": host,
+            "transient_bytes": transient,
+            "total_bytes": act + transient,
             "raw_act_bytes": raw,
             "capacity_factor": raw / max(act, 1),
         }
@@ -346,11 +379,17 @@ def auto_plan(
     with the uniform-stage constraint. ``max_dp`` typically comes from the
     global batch: dp <= batch / microbatches.
 
-    With ``act_budget`` the plan is stash-aware: if the throughput-optimal
-    split does not fit the activation budget at the requested ``stash``,
-    the search escalates raw -> fp8 (int8 stores the same bytes, so fp8 is
-    the whole compressed rung) and reports which capacity factor unlocked
-    the plan via the ``stash`` field of the result.
+    With ``act_budget`` the plan is stash-aware AND remat-aware: if the
+    throughput-optimal split does not fit the activation budget at the
+    requested ``stash``/``remat``, the search walks a (stash, remat)
+    ladder — slot compression first (raw -> fp8; int8 stores the same
+    bytes, so fp8 is the whole compressed rung, and the compressed rungs
+    also compress cotangent slots via ``stash_cot``), then per-stage
+    remat ("full" collapses the within-stage transient to one layer), then
+    both. Compression is tried before remat because it costs ~1x step time
+    (BENCH_train_stash) while full remat recomputes every stage layer.
+    The returned plan's ``stash``/``stash_cot``/``remat`` fields report
+    which rung unlocked it.
     """
     if n_devices % tp:
         raise ValueError(f"{n_devices} devices not divisible by tp={tp}")
@@ -367,12 +406,17 @@ def auto_plan(
         return plan.validate(cfg)
     from repro.core.stash import normalize_stash
 
-    ladder = [normalize_stash(stash)]
-    if ladder == ["raw"]:
-        ladder.append("fp8")
+    s0 = normalize_stash(stash)
+    sq = s0 if s0 in ("int8", "fp8") else "fp8"   # the compressed rung
+    ladder = [(s0, False, remat), (sq, True, remat)]
+    if remat != "full":
+        ladder += [(s0, False, "full"), (sq, True, "full")]
+    ladder = list(dict.fromkeys(ladder))
     last_err: Optional[ValueError] = None
-    for rung in ladder:
-        cand = dataclasses.replace(plan, stash=rung)
+    for rung_stash, rung_cot, rung_remat in ladder:
+        cand = dataclasses.replace(
+            plan, stash=rung_stash, stash_cot=rung_cot, remat=rung_remat
+        )
         try:
             return cand.validate(
                 cfg, global_batch=global_batch, seq_len=seq_len,
@@ -382,5 +426,5 @@ def auto_plan(
             last_err = e
     assert last_err is not None
     raise ValueError(
-        f"no stash backend fits act_budget={act_budget}: {last_err}"
+        f"no stash/remat rung fits act_budget={act_budget}: {last_err}"
     )

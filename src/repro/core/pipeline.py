@@ -644,8 +644,12 @@ def pipeline_grads(
     straight-through ``stash.roundtrip`` — so the vjp grads are exact
     grads of the (slightly perturbed) forward that actually ran, and
     1F1B == GPipe bitwise still holds per backend. Cotangent slots stay at
-    the native dtype (they are consumed the tick after they arrive —
-    compressing them buys no capacity).
+    the native dtype by default (they are consumed the tick after they
+    arrive — compressing them buys little capacity); a backend constructed
+    with ``cotangents=True`` (``QuantStash``) routes them through the same
+    codec as activation slots, which matters when interleaved schedules
+    hold several cotangents live (the remat-vs-compression trade
+    ``auto_plan`` prices).
     """
     import jax
     import jax.numpy as jnp
@@ -661,6 +665,9 @@ def pipeline_grads(
             "pipeline_grads_host (the in-scan runner cannot issue host "
             "transfers per slot)"
         )
+    # static Python bool: picks the cotangent-buffer representation at
+    # trace time (raw native-dtype buffers vs the backend's codec state)
+    quant_cot = bool(getattr(backend, "cotangents", False))
 
     P_count = table.n_stages
     assert mesh.shape[axis] == P_count, (mesh.shape, P_count)
@@ -714,7 +721,11 @@ def pipeline_grads(
             act = backend.put(
                 act, jnp.where(g["arr_f"] >= 0, g["arr_f"], Wa), fwd_in
             )
-            cot = cot.at[jnp.where(g["arr_b"] >= 0, g["arr_b"], Wc)].set(bwd_in)
+            cot_w = jnp.where(g["arr_b"] >= 0, g["arr_b"], Wc)
+            if quant_cot:
+                cot = backend.put(cot, cot_w, bwd_in)
+            else:
+                cot = cot.at[cot_w].set(bwd_in)
             opk = jnp.where(g["f_mb"] >= 0, 1, jnp.where(g["b_mb"] >= 0, 2, 0))
 
             def idle_op(act, cot, gacc, sacc, lacc, macc):
@@ -745,7 +756,11 @@ def pipeline_grads(
                 x_saved = backend.get(
                     act, jnp.where(g["b_slot"] >= 0, g["b_slot"], Wa), x_struct
                 )
-                cot_in = cot[jnp.where(g["b_cot"] >= 0, g["b_cot"], Wc)]
+                cot_r = jnp.where(g["b_cot"] >= 0, g["b_cot"], Wc)
+                if quant_cot:
+                    cot_in = backend.get(cot, cot_r, x_struct)
+                else:
+                    cot_in = cot[cot_r]
                 (y, loss), vjp_fn, metrics = jax.vjp(
                     lambda sp_, sh_, xs_: full_fn(sp_, sh_, xs_, m),
                     sp, shared, x_saved, has_aux=True,
@@ -769,7 +784,8 @@ def pipeline_grads(
         )
         carry0 = (
             backend.init(Wa + 1, x_struct),
-            jnp.zeros((Wc + 1,) + x_struct.shape, x_struct.dtype),
+            backend.init(Wc + 1, x_struct) if quant_cot
+            else jnp.zeros((Wc + 1,) + x_struct.shape, x_struct.dtype),
             zeros_like_tree(sp),
             zeros_like_tree(shared),
             jnp.zeros((), jnp.float32),
@@ -815,6 +831,7 @@ def pipeline_grads_host(
     metrics_struct: Any,
     seed=None,
     stash=None,
+    lookahead: int = 2,
 ):
     """Host-driven twin of :func:`pipeline_grads`: the same tick tables,
     executed as a Python loop on ONE device (dp = tp = 1), with all P
@@ -831,6 +848,15 @@ def pipeline_grads_host(
     per-stage op order and grad accumulation), minus cross-device psum
     reduction order, so losses agree to float tolerance.
 
+    Overlap: each tick first ``poll``s every stage's store (retiring
+    completed async evictions), then reads the next ``lookahead`` ticks'
+    B-entries from the table and ``prefetch``es their slots so host->device
+    loads run under this tick's compute. A get neither windowed nor
+    prefetched is a counted stall (``HostStash.stats``). ``lookahead=0``
+    is the eager baseline. Prefetching is a pure residency hint — puts
+    invalidate staged copies, so the result is bitwise-equal to the eager
+    runner for every backend and lookahead.
+
     ``stage_params`` is the FULL stacked-layer tree (leading layer axis
     unsharded); returns (loss_sum, metrics_sums, stage_grads, shared_grads)
     with stage_grads matching ``stage_params``'s full shapes.
@@ -841,6 +867,7 @@ def pipeline_grads_host(
     from repro.core.stash import RawStash
 
     backend = stash if stash is not None else RawStash()
+    quant_cot = bool(getattr(backend, "cotangents", False))
     P_count, M = table.n_stages, table.n_microbatches
     L = jax.tree.leaves(stage_params)[0].shape[0]
     assert L % P_count == 0, (L, P_count)
@@ -894,8 +921,23 @@ def pipeline_grads_host(
                 fwd_wire[s] = None
             ab = int(table.arr_b[t, s])
             if ab >= 0:
-                cots[s][ab] = bwd_wire[s]
+                # quantized cotangent storage: the codec roundtrip value is
+                # bitwise what the in-scan runner's put-then-get produces
+                cots[s][ab] = (
+                    backend.roundtrip(bwd_wire[s]) if quant_cot
+                    else bwd_wire[s]
+                )
                 bwd_wire[s] = None
+        # overlap pass: retire completed evictions, then start host->device
+        # loads for the next ticks' backward reads (no-ops for RawStash &c)
+        for s in range(P_count):
+            backend.poll(acts[s])
+        for dt in range(1, lookahead + 1):
+            if t + dt >= table.n_ticks:
+                break
+            for s in range(P_count):
+                if int(table.b_mb[t + dt, s]) >= 0:
+                    backend.prefetch(acts[s], int(table.b_slot[t + dt, s]))
         next_fwd: List[Any] = [None] * P_count
         next_bwd: List[Any] = [None] * P_count
         for s in range(P_count):

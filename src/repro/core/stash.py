@@ -22,17 +22,28 @@ slots are stored, which is the per-device activation-capacity lever
 * ``HostStash``  — stateful double-buffered device->host eviction for the
                    host-driven runner (``pipeline_grads_host``) and the
                    offload-chain executor (core.offload): the newest
-                   ``window`` slots stay on device, older ones materialize
-                   to host RAM (``copy_to_host_async`` started at put
-                   time) and are fetched back bit-exactly on get.
+                   ``window`` slots stay on device; eviction STARTS the
+                   device->host copy (``copy_to_host_async`` at put time)
+                   but never blocks — evicted values sit in a pending
+                   staging buffer until ``poll`` (called once per tick by
+                   the host runner) observes the copy complete
+                   (``Array.is_ready``) and materializes it, the overlap
+                   path. ``prefetch`` starts the host->device load for an
+                   upcoming backward's slot ahead of its get (the runner
+                   reads future B-entries from the TickTable); a get that
+                   finds neither the window nor a prefetched staging
+                   buffer is a measured *stall*. Values round-trip
+                   bit-exactly on every path.
 
 All backends share one protocol: ``init(n_slots, struct) -> state``,
 ``put(state, slot, tree) -> state``, ``get(state, slot, struct) -> tree``,
 ``roundtrip(tree)`` (the storage perturbation as a function; identity for
-lossless backends), plus exact byte accounting (``slot_bytes`` /
-``state_bytes``). Scan-capable backends take traced slot indices; the
-host backend requires concrete ints (its schedule is host-driven by
-construction).
+lossless backends), ``prefetch``/``poll`` (overlap hooks; no-ops for
+device-resident backends), plus exact byte accounting: ``slot_bytes``,
+``device_bytes``/``host_bytes`` (split residency), and ``state_bytes``
+(device-resident, kept as an alias of ``device_bytes``). Scan-capable
+backends take traced slot indices; the host backend requires concrete
+ints (its schedule is host-driven by construction).
 """
 from __future__ import annotations
 
@@ -94,22 +105,34 @@ class RawStash:
     def roundtrip(self, value: Any) -> Any:
         return value
 
+    def prefetch(self, state: Any, slot: Any) -> None:
+        """Overlap hook (no-op: slots are already device-resident)."""
+
+    def poll(self, state: Any) -> None:
+        """Overlap hook (no-op: nothing is ever in flight)."""
+
     def slot_bytes(self, struct: Any) -> int:
         """Exact stored bytes for ONE slot (== sum of leaf nbytes)."""
         return _leaf_bytes(struct)
 
-    def state_bytes(self, n_slots: int, struct: Any) -> int:
+    def device_bytes(self, n_slots: int, struct: Any) -> int:
         return n_slots * self.slot_bytes(struct)
+
+    def host_bytes(self, n_slots: int, struct: Any) -> int:
+        return 0
+
+    def state_bytes(self, n_slots: int, struct: Any) -> int:
+        return self.device_bytes(n_slots, struct)
 
 
 @functools.lru_cache(maxsize=None)
-def _ste_roundtrip(storage: str, block: int):
+def _ste_roundtrip(storage: str, block: int, codec_backend: str = "ref"):
     """Straight-through quantize->dequantize: forward is the exact stash
     perturbation (bitwise-identical to put-then-get on the same value),
     backward is identity — so stage-0 recompute inside the runner's vjp
     sees the same activations the forward consumed while embedding grads
-    still flow. Cached per (storage, block) so jit tracing sees one
-    custom_vjp primitive per codec."""
+    still flow. Cached per (storage, block, codec_backend) so jit tracing
+    sees one custom_vjp primitive per codec."""
     import jax
 
     from repro.kernels.blockwise_quant.ops import (
@@ -117,8 +140,10 @@ def _ste_roundtrip(storage: str, block: int):
     )
 
     def fwd_value(x):
-        codes, scales = stash_quantize(x, storage, block)
-        return stash_dequantize(codes, scales, x.shape, x.dtype, block)
+        codes, scales = stash_quantize(x, storage, block, codec_backend)
+        return stash_dequantize(
+            codes, scales, x.shape, x.dtype, block, codec_backend
+        )
 
     @jax.custom_vjp
     def ste(x):
@@ -132,17 +157,31 @@ class QuantStash:
     """Blockwise int8/fp8 stash: codes at 1 byte/elem (zero-padded to the
     block multiple) + one f32 scale per block. State is an explicit
     ``{"codes": tree, "scales": tree}`` pytree mirroring the slot struct —
-    pure jnp in and out, so it rides in the pipeline scan carry."""
+    pure jnp in and out, so it rides in the pipeline scan carry.
+
+    ``codec_backend`` routes quantize-on-put / dequantize-on-get through
+    the fused Pallas kernels (``"pallas"``) or the jnp reference
+    (``"ref"``, the default); codes and scales are bitwise identical
+    either way (tests/test_kernels_quant.py), so the routing never changes
+    training numerics. ``cotangents=True`` additionally stores the
+    pipeline's cotangent slots through the same codec (the runners read
+    this flag)."""
 
     scan_capable = True
 
-    def __init__(self, storage: str = "fp8", block: Optional[int] = None):
+    def __init__(self, storage: str = "fp8", block: Optional[int] = None,
+                 codec_backend: Optional[str] = None,
+                 cotangents: bool = False):
         from repro.kernels.blockwise_quant.ops import STASH_BLOCK
 
         if storage not in ("int8", "fp8"):
             raise ValueError(f"QuantStash storage {storage!r}")
+        if codec_backend not in (None, "ref", "pallas"):
+            raise ValueError(f"codec_backend {codec_backend!r}")
         self.storage = storage
         self.block = int(block or STASH_BLOCK)
+        self.codec_backend = codec_backend or "ref"
+        self.cotangents = bool(cotangents)
 
     @property
     def name(self) -> str:
@@ -186,7 +225,10 @@ class QuantStash:
         from repro.kernels.blockwise_quant.ops import stash_quantize
 
         flat, treedef = jax.tree.flatten(value)
-        quantized = [stash_quantize(v, self.storage, self.block) for v in flat]
+        quantized = [
+            stash_quantize(v, self.storage, self.block, self.codec_backend)
+            for v in flat
+        ]
         codes = jax.tree.unflatten(treedef, [c for c, _ in quantized])
         scales = jax.tree.unflatten(treedef, [s for _, s in quantized])
         return {
@@ -205,7 +247,8 @@ class QuantStash:
 
         return jax.tree.map(
             lambda s, c, sc: stash_dequantize(
-                c[slot], sc[slot], tuple(s.shape), s.dtype, self.block
+                c[slot], sc[slot], tuple(s.shape), s.dtype, self.block,
+                self.codec_backend,
             ),
             struct, state["codes"], state["scales"],
         )
@@ -213,8 +256,14 @@ class QuantStash:
     def roundtrip(self, value: Any) -> Any:
         import jax
 
-        ste = _ste_roundtrip(self.storage, self.block)
+        ste = _ste_roundtrip(self.storage, self.block, self.codec_backend)
         return jax.tree.map(ste, value)
+
+    def prefetch(self, state: Any, slot: Any) -> None:
+        """Overlap hook (no-op: codes/scales are device-resident)."""
+
+    def poll(self, state: Any) -> None:
+        """Overlap hook (no-op: nothing is ever in flight)."""
 
     def slot_bytes(self, struct: Any) -> int:
         """Exact stored bytes per slot: padded codes + per-block f32 scales."""
@@ -232,34 +281,57 @@ class QuantStash:
             total += padded + (padded // self.block) * SCALE_BYTES
         return total
 
-    def state_bytes(self, n_slots: int, struct: Any) -> int:
+    def device_bytes(self, n_slots: int, struct: Any) -> int:
         return n_slots * self.slot_bytes(struct)
+
+    def host_bytes(self, n_slots: int, struct: Any) -> int:
+        return 0
+
+    def state_bytes(self, n_slots: int, struct: Any) -> int:
+        return self.device_bytes(n_slots, struct)
 
 
 class _HostSlotStore:
-    """Mutable handle behind HostStash: a FIFO device window of the newest
-    ``window`` slots plus a host-side dict of evicted ones (numpy). Eviction
-    overlap: the device->host copy is STARTED at put time
-    (``copy_to_host_async``), only MATERIALIZED when the slot falls out of
-    the window — the double-buffering that hides transfer under the
-    schedule's warmup gap."""
+    """Mutable handle behind HostStash: four residency sets per slot —
+
+    * ``device``  — FIFO window of the newest ``window`` slots.
+    * ``pending`` — evicted slots whose device->host copy (started at put
+                    time via ``copy_to_host_async``) is still in flight;
+                    the device buffer stays alive here so the copy never
+                    blocks the put.
+    * ``host``    — landed numpy copies (``poll`` moves pending slots here
+                    once ``Array.is_ready`` observes the copy complete —
+                    the overlapped-eviction path).
+    * ``staged``  — device arrays prefetched ahead of a backward's get
+                    (``prefetch``, driven by the runner's TickTable
+                    lookahead). A get served from ``staged`` is a prefetch
+                    hit; a get that has to transfer inline is a *stall*.
+
+    Values round-trip bit-exactly on every path; only the counters differ
+    between the eager (lookahead=0, never poll) and overlapped runners."""
 
     def __init__(self, window: int):
         self.window = int(window)
         self.device: "collections.OrderedDict[int, Any]" = collections.OrderedDict()
+        self.pending: Dict[int, Any] = {}
         self.host: Dict[int, Any] = {}
+        self.staged: Dict[int, Any] = {}
         self.stats = {
             "puts": 0, "gets": 0, "evictions": 0, "host_hits": 0,
             "window_hits": 0, "host_bytes_high_water": 0,
+            "overlapped_evictions": 0, "prefetch_issued": 0,
+            "prefetch_hits": 0, "stalled_gets": 0,
         }
 
     def _host_bytes(self) -> int:
-        total = 0
-        for tree in self.host.values():
-            import jax
+        """Host-destined bytes: landed copies plus in-flight evictions."""
+        import jax
 
-            for leaf in jax.tree.leaves(tree):
-                total += leaf.nbytes
+        total = 0
+        for store in (self.host, self.pending):
+            for tree in store.values():
+                for leaf in jax.tree.leaves(tree):
+                    total += leaf.nbytes
         return total
 
     def put(self, slot: int, value: Any) -> None:
@@ -269,28 +341,76 @@ class _HostSlotStore:
             start = getattr(leaf, "copy_to_host_async", None)
             if start is not None:
                 start()
-        self.host.pop(slot, None)          # slot reuse drops the stale copy
+        # Slot reuse drops every stale copy (host, in-flight, prefetched).
+        self.host.pop(slot, None)
+        self.pending.pop(slot, None)
+        self.staged.pop(slot, None)
         self.device.pop(slot, None)
         self.device[slot] = value
         self.stats["puts"] += 1
         while len(self.device) > self.window:
+            # Eviction never blocks: the copy was started at put time; the
+            # slot parks in ``pending`` until poll/get observes completion.
             old_slot, old_val = self.device.popitem(last=False)
-            import numpy as np
-
-            self.host[old_slot] = jax.tree.map(np.asarray, old_val)
+            self.pending[old_slot] = old_val
             self.stats["evictions"] += 1
         self.stats["host_bytes_high_water"] = max(
             self.stats["host_bytes_high_water"], self._host_bytes()
         )
 
+    def poll(self) -> None:
+        """Land every pending eviction whose async copy has completed
+        (``is_ready`` on all leaves) — called once per tick by the host
+        runner, so completed transfers retire without ever blocking."""
+        import jax
+        import numpy as np
+
+        for slot in list(self.pending):
+            val = self.pending[slot]
+            if all(
+                getattr(leaf, "is_ready", lambda: True)()
+                for leaf in jax.tree.leaves(val)
+            ):
+                self.host[slot] = jax.tree.map(np.asarray, val)
+                del self.pending[slot]
+                self.stats["overlapped_evictions"] += 1
+
+    def prefetch(self, slot: int) -> None:
+        """Start the host->device load for an upcoming backward's slot.
+        Window/staged residents are no-ops; a pending slot's device buffer
+        is still alive, so staging it is free (the round trip is elided)."""
+        import jax
+
+        if slot in self.device or slot in self.staged:
+            return
+        if slot in self.pending:
+            self.staged[slot] = self.pending[slot]
+            self.stats["prefetch_issued"] += 1
+            return
+        if slot in self.host:
+            self.staged[slot] = jax.tree.map(jax.device_put, self.host[slot])
+            self.stats["prefetch_issued"] += 1
+
     def get(self, slot: int) -> Any:
+        import jax
+        import numpy as np
+
         self.stats["gets"] += 1
         if slot in self.device:
             self.stats["window_hits"] += 1
             return self.device[slot]
-        import jax
-
         self.stats["host_hits"] += 1
+        staged = self.staged.pop(slot, None)
+        if staged is not None:
+            self.stats["prefetch_hits"] += 1
+            return staged
+        # Neither windowed nor prefetched: the get transfers inline — the
+        # measured stall the lookahead exists to remove.
+        self.stats["stalled_gets"] += 1
+        if slot in self.pending:
+            val = self.pending.pop(slot)
+            self.host[slot] = jax.tree.map(np.asarray, val)
+            return val
         return jax.tree.map(jax.device_put, self.host[slot])
 
 
@@ -324,15 +444,32 @@ class HostStash:
     def roundtrip(self, value: Any) -> Any:
         return value
 
+    def prefetch(self, state: _HostSlotStore, slot: Any) -> None:
+        """Start the host->device load for ``slot`` ahead of its get."""
+        state.prefetch(int(slot))
+
+    def poll(self, state: _HostSlotStore) -> None:
+        """Retire completed async evictions (called once per tick)."""
+        state.poll()
+
     def slot_bytes(self, struct: Any) -> int:
         """Bytes one slot occupies WHILE resident in the device window (the
         host copy is the same size; capacity accounting multiplies by the
         window, not the slot count)."""
         return _leaf_bytes(struct)
 
-    def state_bytes(self, n_slots: int, struct: Any) -> int:
-        """Device-resident bytes: only the window stays on device."""
+    def device_bytes(self, n_slots: int, struct: Any) -> int:
+        """Only the window stays on device."""
         return min(self.window, n_slots) * self.slot_bytes(struct)
+
+    def host_bytes(self, n_slots: int, struct: Any) -> int:
+        """Everything beyond the window lands on host (steady-state high
+        water; pending in-flight copies count — they are host-destined)."""
+        return max(0, n_slots - self.window) * self.slot_bytes(struct)
+
+    def state_bytes(self, n_slots: int, struct: Any) -> int:
+        """Device-resident bytes (alias of ``device_bytes``)."""
+        return self.device_bytes(n_slots, struct)
 
     def stats(self) -> Dict[str, int]:
         """Counters summed over every store this backend handed out — the
@@ -346,11 +483,29 @@ class HostStash:
 
 
 def get_backend(stash: str, *, block: Optional[int] = None,
-                host_window: int = 2):
-    """Factory: ``raw | int8 | fp8 | host`` -> a StashBackend instance."""
+                host_window: int = 2, fused: bool = False,
+                cotangents: bool = False):
+    """Factory: ``raw | int8 | fp8 | host`` -> a StashBackend instance.
+
+    ``fused=True`` routes the int8/fp8 codec through the Pallas kernels
+    where they compile (``ops.fused_codec_backend`` — bitwise-identical
+    output either way). ``cotangents=True`` asks the runner to store
+    cotangent slots through the same codec; it is only meaningful for the
+    quantized backends."""
     s = normalize_stash(stash)
+    if cotangents and s not in ("int8", "fp8"):
+        raise ValueError(
+            f"cotangents=True needs a quantized stash, got {s!r}"
+        )
     if s == "raw":
         return RawStash()
     if s in ("int8", "fp8"):
-        return QuantStash(s, block=block)
+        codec = None
+        if fused:
+            from repro.kernels.blockwise_quant.ops import fused_codec_backend
+
+            codec = fused_codec_backend()
+        return QuantStash(
+            s, block=block, codec_backend=codec, cotangents=cotangents
+        )
     return HostStash(window=host_window)

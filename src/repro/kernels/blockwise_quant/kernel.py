@@ -104,3 +104,104 @@ def dequantize_pallas(
         interpret=interpret,
     )(idx.reshape(rows, block), scale[:, None], codes)
     return out.reshape(-1)
+
+
+# ------------------------------------------------- symmetric stash codec
+# Fused kernels for the activation-stash codec (ops.stash_quantize /
+# stash_dequantize): per 256-elem block, scale = absmax / code_max, codes
+# round-to-int8 or cast-to-fp8-e4m3. Arithmetic order matches
+# kernels.paged_attention.quant.kv_quantize op-for-op in f32, so codes and
+# scales are BITWISE identical to the jnp reference — PR 9's grad-accuracy
+# suite transfers unchanged to the fused path. Rows (= flat blocks) are
+# padded to the tile multiple inside the wrapper; pad rows quantize to
+# scale-0 / code-0 and are sliced off.
+STASH_TILE_ROWS = 32   # int8/fp8 min sublane tile on TPU
+
+
+def _stash_quant_kernel(x_ref, codes_ref, scale_ref, *, cmax, int_codes):
+    xf = x_ref[...].astype(jnp.float32)                 # (TILE, block)
+    absmax = jnp.max(jnp.abs(xf), axis=1, keepdims=True)
+    scale = absmax / cmax
+    safe = jnp.where(scale > 0, scale, 1.0)
+    scaled = jnp.clip(xf / safe, -cmax, cmax)
+    if int_codes:
+        codes_ref[...] = jnp.round(scaled).astype(jnp.int8)
+    else:
+        codes_ref[...] = scaled.astype(codes_ref.dtype)
+    scale_ref[...] = scale
+
+
+def _stash_dequant_kernel(codes_ref, scale_ref, out_ref):
+    x = codes_ref[...].astype(jnp.float32) * scale_ref[...].astype(jnp.float32)
+    out_ref[...] = x.astype(out_ref.dtype)
+
+
+def _pad_rows(a: jax.Array, rows: int) -> jax.Array:
+    pad = (-rows) % STASH_TILE_ROWS
+    if pad:
+        a = jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("storage", "block", "interpret"))
+def stash_quantize_pallas(
+    xb: jax.Array, storage: str = "int8", block: int = BLOCK, interpret=None
+):
+    """(rows, block) flat blocks -> (codes (rows, block) int8/fp8,
+    scales (rows,) f32), bitwise-equal to kv_quantize on the same blocks."""
+    from repro.kernels.paged_attention.quant import _QUANT
+
+    interpret = resolve_interpret(interpret)
+    sdt, cmax = _QUANT[storage]
+    rows, b = xb.shape
+    assert b == block, (xb.shape, block)
+    xp = _pad_rows(xb, rows)
+    prows = xp.shape[0]
+    codes, scale = pl.pallas_call(
+        functools.partial(
+            _stash_quant_kernel, cmax=cmax,
+            int_codes=jnp.dtype(sdt) == jnp.dtype(jnp.int8),
+        ),
+        grid=(prows // STASH_TILE_ROWS,),
+        in_specs=[pl.BlockSpec((STASH_TILE_ROWS, block), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((STASH_TILE_ROWS, block), lambda i: (i, 0)),
+            pl.BlockSpec((STASH_TILE_ROWS, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((prows, block), sdt),
+            jax.ShapeDtypeStruct((prows, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp)
+    return codes[:rows], scale[:rows, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "block", "interpret"))
+def stash_dequantize_pallas(
+    codes: jax.Array,
+    scales: jax.Array,
+    dtype=jnp.float32,
+    block: int = BLOCK,
+    interpret=None,
+):
+    """(rows, block) codes + (rows,) scales -> (rows, block) ``dtype``,
+    bitwise-equal to kv_dequantize (f32 multiply, then one cast)."""
+    interpret = resolve_interpret(interpret)
+    rows, b = codes.shape
+    assert b == block, (codes.shape, block)
+    cp = _pad_rows(codes, rows)
+    sp = _pad_rows(scales[:, None], rows)
+    prows = cp.shape[0]
+    out = pl.pallas_call(
+        _stash_dequant_kernel,
+        grid=(prows // STASH_TILE_ROWS,),
+        in_specs=[
+            pl.BlockSpec((STASH_TILE_ROWS, block), lambda i: (i, 0)),
+            pl.BlockSpec((STASH_TILE_ROWS, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((STASH_TILE_ROWS, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((prows, block), jnp.dtype(dtype)),
+        interpret=interpret,
+    )(cp, sp)
+    return out[:rows]

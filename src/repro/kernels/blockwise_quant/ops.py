@@ -18,6 +18,8 @@ from repro.kernels.blockwise_quant.kernel import (
     TILE_ROWS,
     dequantize_pallas,
     quantize_pallas,
+    stash_dequantize_pallas,
+    stash_quantize_pallas,
 )
 
 BLOCK = _ref.BLOCK
@@ -86,15 +88,34 @@ def _stash_storage_dtype(storage: str):
     return _QUANT[storage][0]
 
 
+def fused_codec_backend() -> str:
+    """Codec backend the ``fused_stash`` knob resolves to: the Pallas
+    kernels where they run compiled (TPU), the jnp path where they would
+    only interpret (the CPU containers) — interpret-mode Pallas is a
+    validation tool, not an execution path, and XLA already fuses the jnp
+    codec into the slot update on CPU (same convention as
+    ``Runtime.use_paged_kernel``). Codes/scales are bitwise identical
+    either way, so the choice never changes training numerics."""
+    from repro.kernels.runtime import default_interpret
+
+    return "ref" if default_interpret() else "pallas"
+
+
 def stash_quantize(
-    x: jax.Array, storage: str = "int8", block: int = STASH_BLOCK
+    x: jax.Array,
+    storage: str = "int8",
+    block: int = STASH_BLOCK,
+    backend: str = "ref",
+    interpret=None,
 ) -> Tuple[jax.Array, jax.Array]:
     """One stash leaf -> (codes (nblocks, block) int8/fp8, scales (nblocks,) f32).
 
     Flattens, zero-pads to a block multiple (pad blocks quantize to exact
     zeros — absmax 0 gives scale 0), and applies the paged-KV symmetric
     row quantizer per block: int8 scale = absmax/127 (|err| <= scale/2),
-    fp8-e4m3 scale = absmax/448.
+    fp8-e4m3 scale = absmax/448. ``backend="pallas"`` runs the fused
+    kernel (bitwise-identical codes/scales to the jnp path, asserted in
+    tests/test_kernels_quant.py).
     """
     from repro.kernels.paged_attention.quant import kv_quantize
 
@@ -103,7 +124,12 @@ def stash_quantize(
     padded = stash_padded_size(n, block)
     if padded != n:
         flat = jnp.pad(flat, (0, padded - n))
-    return kv_quantize(flat.reshape(-1, block), _stash_storage_dtype(storage))
+    xb = flat.reshape(-1, block)
+    if backend == "pallas":
+        return stash_quantize_pallas(
+            xb, storage=storage, block=block, interpret=interpret
+        )
+    return kv_quantize(xb, _stash_storage_dtype(storage))
 
 
 def stash_dequantize(
@@ -112,6 +138,8 @@ def stash_dequantize(
     shape,
     dtype,
     block: int = STASH_BLOCK,
+    backend: str = "ref",
+    interpret=None,
 ) -> jax.Array:
     """Inverse of :func:`stash_quantize`: (nblocks, block) codes + per-block
     scales -> the original ``shape``/``dtype`` leaf (pad tail dropped)."""
@@ -120,5 +148,11 @@ def stash_dequantize(
     n = 1
     for d in shape:
         n *= int(d)
-    flat = kv_dequantize(codes, scales, dtype).reshape(-1)
+    if backend == "pallas":
+        flat = stash_dequantize_pallas(
+            codes, scales, dtype=jnp.dtype(dtype), block=block,
+            interpret=interpret,
+        ).reshape(-1)
+    else:
+        flat = kv_dequantize(codes, scales, dtype).reshape(-1)
     return flat[:n].reshape(shape)

@@ -172,7 +172,10 @@ def make_pipeline_step(cfg: ArchConfig, mesh, plan, tc: TrainConfig, opt):
     from repro.train.loop import finish_step
 
     plan.validate(cfg)
-    stash_backend = get_backend(plan.stash)
+    stash_backend = get_backend(
+        plan.stash, fused=tc.fused_stash,
+        cotangents=plan.stash_cot or tc.stash_cot,
+    )
     if not stash_backend.scan_capable:
         raise ValueError(
             f"stash={plan.stash!r} is host-driven; use "
@@ -187,7 +190,8 @@ def make_pipeline_step(cfg: ArchConfig, mesh, plan, tc: TrainConfig, opt):
             "fused_backward"
         )
     policy = getattr(PrecisionPolicy, tc.precision)()
-    rt = RuntimeT(dtype=policy.compute_dtype, remat=plan.remat)
+    rt = RuntimeT(dtype=policy.compute_dtype, remat=plan.remat,
+                  fused_stash=tc.fused_stash)
     table = tick_table(plan.schedule, plan.pp, plan.microbatches)
     first_fn, stage_fn, last_fn = pipeline_fns(cfg, rt, plan.tp)
     M = plan.microbatches
@@ -274,13 +278,17 @@ def build_train_pipeline(
 def build_train_pipeline_host(
     arch: str, plan, tc: Optional[TrainConfig] = None,
     shape: Optional[ShapeSpec] = None, host_window: int = 2,
+    lookahead: int = 2,
 ) -> Tuple[Callable, Tuple[Any, Any], Any]:
     """Host-driven twin of ``build_train_pipeline`` for ``stash='host'``:
-    the eager per-tick runner (core.pipeline.pipeline_grads_host) on ONE
-    device (dp = tp = 1), with the HostStash evicting activation slots to
-    host RAM between a microbatch's forward and backward. Returns
-    (unjitted step, (state_struct, batch_struct), stash_backend) — the
-    backend handle exposes ``stats()`` for exit reporting."""
+    the per-tick runner (core.pipeline.pipeline_grads_host) on ONE device
+    (dp = tp = 1), with the HostStash evicting activation slots to host RAM
+    between a microbatch's forward and backward. ``lookahead`` ticks of the
+    table's B-entries are prefetched ahead of use so host->device loads
+    overlap compute (0 = eager baseline; results are bitwise-equal either
+    way). Returns (unjitted step, (state_struct, batch_struct),
+    stash_backend) — the backend handle exposes ``stats()`` (overlap /
+    stall counters) for exit reporting."""
     from repro.core.pipeline import pipeline_grads_host, tick_table
     from repro.core.precision import PrecisionPolicy
     from repro.core.stash import get_backend
@@ -319,6 +327,7 @@ def build_train_pipeline_host(
             first_fn, stage_fn, last_fn, stack, shared, mbs,
             table=table, x_struct=x_struct,
             metrics_struct=metrics_struct, seed=seed, stash=backend,
+            lookahead=lookahead,
         )
         grads = dict(shared_g, stack=stack_g)
         loss = loss_sum / norm
@@ -429,8 +438,19 @@ def main() -> None:
                          "them to host RAM (single-device eager runner)")
     ap.add_argument("--act-budget-mb", type=float, default=0.0,
                     help="per-device activation-state budget in MiB; with "
-                         "--plan auto the search escalates raw -> fp8 if "
-                         "the raw stash does not fit")
+                         "--plan auto the search walks the (stash, remat) "
+                         "ladder: raw -> fp8 slot+cotangent compression, "
+                         "then per-stage full remat")
+    ap.add_argument("--fused-stash", action="store_true",
+                    help="route the int8/fp8 stash codec through the fused "
+                         "Pallas kernels where they compile (bitwise-"
+                         "identical to the jnp path)")
+    ap.add_argument("--stash-cot", action="store_true",
+                    help="store pipeline cotangent slots through the stash "
+                         "codec too (int8/fp8 only)")
+    ap.add_argument("--stash-lookahead", type=int, default=2,
+                    help="host-runner prefetch window in ticks (0 = eager; "
+                         "stash=host only)")
     args = ap.parse_args()
 
     n = len(jax.devices())
@@ -506,16 +526,20 @@ def main() -> None:
             dp=1 if host else n // (tp * args.pipe), tp=tp, pp=args.pipe,
             microbatches=args.microbatches or 2 * args.pipe,
             schedule=args.schedule, remat=args.remat, stash=args.stash,
+            stash_cot=args.stash_cot,
         ).validate(cfg, global_batch=args.batch, seq_len=args.seq,
                    act_budget=act_budget, itemsize=itemsize)
 
-    tc = TrainConfig(precision=args.precision, remat=args.remat,
+    tc = TrainConfig(precision=args.precision,
+                     remat=plan.remat if plan else args.remat,
                      zero_stage=args.zero,
                      fused_backward=args.fused_backward,
                      pipe=plan.pp if plan else 1,
                      schedule=args.schedule,
                      microbatches=plan.microbatches if plan else 1,
-                     stash=plan.stash if plan else "raw")
+                     stash=plan.stash if plan else "raw",
+                     fused_stash=args.fused_stash,
+                     stash_cot=plan.stash_cot if plan else False)
 
     stash_backend = None
     if plan is not None:
@@ -528,7 +552,10 @@ def main() -> None:
             print(f"devices={n} host-driven runner (1 device) "
                   f"plan: {plan.describe()}")
             jitted, (s_struct, b_struct), stash_backend = (
-                build_train_pipeline_host(cfg.name, plan, tc, shape)
+                build_train_pipeline_host(
+                    cfg.name, plan, tc, shape,
+                    lookahead=args.stash_lookahead,
+                )
             )
         else:
             mesh = make_train_mesh(plan.dp, plan.tp, plan.pp)
@@ -576,10 +603,19 @@ def main() -> None:
         print(f"stash={rep['backend']} bytes/slot={rep['bytes_per_slot']} "
               f"(raw {rep['raw_bytes_per_slot']}) "
               f"act high-water={rep['n_act_slots']} slots "
-              f"act bytes={rep['act_bytes']} "
+              f"device bytes={rep['device_bytes']} "
+              f"host bytes={rep['host_bytes']} "
+              f"transient bytes={rep['transient_bytes']} (remat={rep['remat']}) "
               f"capacity={rep['capacity_factor']:.2f}x raw")
         if stash_backend is not None:
-            print(f"host stash stats: {stash_backend.stats()}")
+            stats = stash_backend.stats()
+            host_hits = max(stats.get("host_hits", 0), 1)
+            print(f"host stash stats: {stats}")
+            print(f"host overlap: stall fraction="
+                  f"{stats.get('stalled_gets', 0) / host_hits:.2f} "
+                  f"prefetch hit rate="
+                  f"{stats.get('prefetch_hits', 0) / host_hits:.2f} "
+                  f"(of {stats.get('host_hits', 0)} off-window gets)")
     print("train main OK")
 
 

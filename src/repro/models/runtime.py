@@ -52,6 +52,11 @@ class Runtime:
     # attention through the Pallas paged kernel (block-table page gathers)
     # instead of the pure-jnp oracle. The oracle is the faster CPU path.
     use_paged_kernel: bool = False
+    # Activation-stash codec routing (core.stash.QuantStash): route the
+    # int8/fp8 slot quantize/dequantize through the fused Pallas kernels
+    # where they compile (kernels.blockwise_quant.ops.fused_codec_backend;
+    # the jnp path elsewhere — bitwise-identical either way)
+    fused_stash: bool = False
     # Paged KV pool storage dtype: "" = native (pools stored at ``dtype``),
     # "int8" / "fp8" = quantized pages + per-(page-slot, head) f32 scales,
     # dequantized inside the paged kernels' page gather

@@ -370,18 +370,52 @@ def predicted_stash_capacity_factor(
 def predicted_pipeline_stash_bytes(
     n_elems: int, n_act_slots: int, n_cot_slots: int, stash: str,
     native_itemsize: int = 2, block: int = 256, host_window: int = 2,
+    cot_stash: str = "raw",
 ) -> int:
     """Predicted device-resident pipeline-state bytes per device: activation
-    slots at stash width plus cotangent slots at native width (cotangents
-    are consumed the tick after they arrive, so the runner never compresses
-    them). ``host`` keeps only ``window`` activation slots on device."""
+    slots at stash width plus cotangent slots at ``cot_stash`` width (native
+    by default — cotangents are consumed the tick after they arrive, so the
+    runner only compresses them when asked via ``QuantStash(cotangents=
+    True)``). ``host`` keeps only ``window`` activation slots on device."""
     from repro.core.stash import normalize_stash
 
     s = normalize_stash(stash)
     act_slots = min(host_window, n_act_slots) if s == "host" else n_act_slots
     act = act_slots * stash_bytes_per_slot(n_elems, s, native_itemsize, block)
-    cot = n_cot_slots * n_elems * native_itemsize
+    cot = n_cot_slots * stash_bytes_per_slot(
+        n_elems, cot_stash, native_itemsize, block
+    )
     return act + cot
+
+
+def predicted_stash_host_bytes(
+    n_elems: int, n_act_slots: int, stash: str, native_itemsize: int = 2,
+    block: int = 256, host_window: int = 2,
+) -> int:
+    """Host-RAM high water the stash backend needs: every activation slot
+    beyond the device window lands on host at native width for ``host``
+    (in-flight async evictions count — they are host-destined); zero for
+    the device-resident backends."""
+    from repro.core.stash import normalize_stash
+
+    if normalize_stash(stash) != "host":
+        return 0
+    spill = max(0, n_act_slots - host_window)
+    return spill * stash_bytes_per_slot(n_elems, "raw", native_itemsize, block)
+
+
+def predicted_stage_transient_bytes(
+    n_elems: int, layers_per_stage: int, remat: str = "none",
+    native_itemsize: int = 2,
+) -> int:
+    """Within-stage backward transient per device: the runner recomputes a
+    stage's forward from its stored input, so AD must hold one inter-layer
+    activation per layer of the stage — unless per-stage remat (``"full"``)
+    collapses that to a single layer's worth. This is the term the
+    remat-vs-compression trade prices against slot bytes: compressing
+    slots shrinks ``n_act_slots`` terms, remat shrinks this one."""
+    live_layers = 1 if remat == "full" else layers_per_stage
+    return live_layers * n_elems * native_itemsize
 
 
 def derive_terms(rec: Dict) -> Dict[str, float]:

@@ -57,6 +57,8 @@ class TrainConfig:
     microbatches: int = 1             # microbatches per step (pipeline mode)
     schedule: str = "1f1b"            # executable schedule: 1f1b | gpipe
     stash: str = "raw"                # activation-slot storage: raw|int8|fp8|host
+    fused_stash: bool = False         # stash codec via the fused Pallas kernels
+    stash_cot: bool = False           # quantize cotangent slots too (int8/fp8)
     log_every: int = 10
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 0
@@ -81,7 +83,8 @@ def _runtime(cfg: ArchConfig, tc: TrainConfig) -> Runtime:
     return Runtime(dtype=policy.compute_dtype, remat=tc.remat,
                    remat_period=tc.remat_period,
                    fused_backward=tc.fused_backward,
-                   use_flash_kernel=tc.fused_backward)
+                   use_flash_kernel=tc.fused_backward,
+                   fused_stash=tc.fused_stash)
 
 
 def finish_step(

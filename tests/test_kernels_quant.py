@@ -1,0 +1,169 @@
+"""Fused stash codec: Pallas-vs-jnp bitwise parity + overlapped host runner.
+
+The fused kernels (kernels.blockwise_quant.stash_quantize_pallas /
+stash_dequantize_pallas) must produce BITWISE-identical codes and scales to
+the jnp reference (kernels.paged_attention.kv_quantize on flat blocks) —
+that identity is what lets PR 9's grad-accuracy suite stand for the fused
+path unchanged. Comparisons run against the JITTED reference: XLA CPU's
+eager-mode division can differ from its jitted division by 1 ulp, and the
+pipeline codec always executes under jit.
+
+Also here: the hypothesis property that the prefetching host runner
+(pipeline_grads_host lookahead > 0, HostStash poll/prefetch) is
+bitwise-equal to the eager runner over random 1F1B/GPipe tick tables.
+"""
+from functools import partial
+
+from _hyp_compat import hypothesis, st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.kernel
+
+from repro.kernels.blockwise_quant.ops import (
+    STASH_BLOCK,
+    stash_dequantize,
+    stash_quantize,
+)
+
+SHAPES = [(3, 7), (257,), (2, 2, 130), (64, 256), (33, 77)]
+
+
+def _bits(a) -> np.ndarray:
+    """Raw storage bytes — bitwise comparison that works for fp8/bf16."""
+    return np.asarray(a).view(np.uint8)
+
+
+def _quant_pair(x, storage):
+    """(jitted jnp reference, pallas-interpret) quantizations of ``x``."""
+    ref = jax.jit(partial(stash_quantize, storage=storage))(x)
+    fused = jax.jit(
+        partial(stash_quantize, storage=storage, backend="pallas")
+    )(x)
+    return ref, fused
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("storage", ["int8", "fp8"])
+def test_stash_quantize_fused_bitwise_parity(shape, dtype, storage):
+    rng = np.random.RandomState(hash((shape, storage)) % 2**31)
+    x = jnp.asarray(rng.randn(*shape) * 3, dtype)
+    (cr, sr), (cp, sp) = _quant_pair(x, storage)
+    assert cp.dtype == cr.dtype and sp.dtype == sr.dtype
+    np.testing.assert_array_equal(_bits(cp), _bits(cr))
+    np.testing.assert_array_equal(_bits(sp), _bits(sr))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("storage", ["int8", "fp8"])
+def test_stash_dequantize_fused_bitwise_parity(shape, dtype, storage):
+    rng = np.random.RandomState(hash((shape, storage)) % 2**31 + 1)
+    x = jnp.asarray(rng.randn(*shape), dtype)
+    codes, scales = jax.jit(partial(stash_quantize, storage=storage))(x)
+    ref = jax.jit(
+        partial(stash_dequantize, shape=shape, dtype=dtype)
+    )(codes, scales)
+    fused = jax.jit(
+        partial(stash_dequantize, shape=shape, dtype=dtype, backend="pallas")
+    )(codes, scales)
+    assert fused.shape == tuple(shape) and fused.dtype == jnp.dtype(dtype)
+    np.testing.assert_array_equal(_bits(fused), _bits(ref))
+
+
+def test_stash_fused_zeros_and_pad_blocks():
+    # all-zero blocks quantize to scale 0 / code 0 on both paths, and the
+    # pad tail (100 -> 256) plus pad rows (1 -> tile multiple) drop cleanly
+    x = jnp.zeros(100, jnp.float32)
+    (cr, sr), (cp, sp) = _quant_pair(x, "int8")
+    np.testing.assert_array_equal(np.asarray(cp), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(sp), np.zeros_like(sp))
+    back = stash_dequantize(cp, sp, (100,), jnp.float32, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(back), np.zeros(100))
+
+
+@hypothesis.given(
+    seed=st.integers(0, 50),
+    n=st.integers(1, 4 * STASH_BLOCK + 3),
+    storage=st.sampled_from(["int8", "fp8"]),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_property_stash_fused_parity(seed, n, storage):
+    x = jnp.asarray(np.random.RandomState(seed).randn(n), jnp.float32)
+    (cr, sr), (cp, sp) = _quant_pair(x, storage)
+    np.testing.assert_array_equal(_bits(cp), _bits(cr))
+    np.testing.assert_array_equal(_bits(sp), _bits(sr))
+
+
+@pytest.mark.parametrize("storage", ["int8", "fp8"])
+def test_quant_stash_backend_fused_put_get_identical(storage):
+    """QuantStash(codec_backend='pallas') stores and returns the same bits
+    as the jnp-ref backend on a real slot tree."""
+    from repro.core.stash import QuantStash
+
+    rng = np.random.RandomState(7)
+    struct = jax.ShapeDtypeStruct((2, 5, 33), jnp.bfloat16)
+    value = jnp.asarray(rng.randn(2, 5, 33), jnp.bfloat16)
+    out = {}
+    for backend_name in ("ref", "pallas"):
+        b = QuantStash(storage, codec_backend=backend_name)
+        state = jax.jit(
+            lambda v: b.put(b.init(3, struct), 1, v)
+        )(value)
+        out[backend_name] = (
+            state,
+            jax.jit(lambda s: b.get(s, 1, struct))(state),
+            jax.jit(b.roundtrip)(value),
+        )
+    for a, r in zip(jax.tree.leaves(out["pallas"]), jax.tree.leaves(out["ref"])):
+        np.testing.assert_array_equal(_bits(a), _bits(r))
+
+
+# --------------------------------------------- overlapped host runner parity
+@hypothesis.given(
+    seed=st.integers(0, 20),
+    schedule=st.sampled_from(["1f1b", "gpipe"]),
+    m_extra=st.integers(0, 2),
+    lookahead=st.integers(1, 4),
+)
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_property_host_prefetch_bitwise_equals_eager(
+    seed, schedule, m_extra, lookahead
+):
+    """Prefetching host runner == eager runner, bit for bit, over random
+    tick tables — prefetch is a pure residency hint."""
+    from test_stash import _toy_pipeline
+
+    from repro.core.pipeline import pipeline_grads_host, tick_table
+    from repro.core.stash import get_backend
+
+    P, M, L, d = 2, 2 + m_extra, 4, 6
+    stage_params, shared, mbs, first_fn, stage_fn, last_fn = _toy_pipeline(
+        P, M, L, d, seed=seed
+    )
+    table = tick_table(schedule, P, M)
+    kw = dict(
+        table=table,
+        x_struct=jax.ShapeDtypeStruct((2, d), jnp.float32),
+        metrics_struct={"xent": jax.ShapeDtypeStruct((), jnp.float32)},
+    )
+    outs, backends = {}, {}
+    for la in (0, lookahead):
+        backends[la] = get_backend("host", host_window=1)
+        outs[la] = pipeline_grads_host(
+            first_fn, stage_fn, last_fn, stage_params, shared, mbs,
+            stash=backends[la], lookahead=la, **kw,
+        )
+    for a, b in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[lookahead])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    eager, over = backends[0].stats(), backends[lookahead].stats()
+    # identical access patterns; the lookahead only converts stalls to hits
+    assert over["gets"] == eager["gets"]
+    assert over["host_hits"] == eager["host_hits"]
+    assert eager["prefetch_hits"] == 0
+    if eager["host_hits"]:
+        assert over["prefetch_hits"] > 0
+        assert over["stalled_gets"] < eager["stalled_gets"]

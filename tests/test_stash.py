@@ -370,7 +370,26 @@ def test_plan_stash_report_and_budget():
     # per-SLOT compression beats 1.8x; whole-state factor is diluted by the
     # uncompressed cotangent slot
     assert raw["bytes_per_slot"] / fp8["bytes_per_slot"] >= 1.8
-    budget = (raw["act_bytes"] + fp8["act_bytes"]) // 2
+    # byte-split and total accounting
+    assert raw["device_bytes"] == raw["act_bytes"]
+    assert raw["host_bytes"] == 0
+    assert raw["transient_bytes"] > 0            # k = 2 layers/stage live
+    assert raw["total_bytes"] == raw["act_bytes"] + raw["transient_bytes"]
+    # gpipe holds M act slots; the host stash windows 2 and spills the rest
+    host = dataclasses.replace(base, stash="host", schedule="gpipe").stash_report(
+        cfg, **kw
+    )
+    raw_gp = dataclasses.replace(base, schedule="gpipe").stash_report(cfg, **kw)
+    assert host["host_bytes"] > 0                # spilled slots land on host
+    assert host["device_bytes"] < raw_gp["device_bytes"]
+    full = dataclasses.replace(base, remat="full").stash_report(cfg, **kw)
+    assert full["transient_bytes"] < raw["transient_bytes"]
+    cot = dataclasses.replace(base, stash="fp8", stash_cot=True).stash_report(
+        cfg, **kw
+    )
+    assert cot["act_bytes"] < fp8["act_bytes"]   # cot slots compressed too
+    # the budget gate runs on total_bytes (slots + within-stage transient)
+    budget = (raw["total_bytes"] + fp8["total_bytes"]) // 2
     with pytest.raises(ValueError, match="exceeds budget"):
         base.validate(cfg, act_budget=budget, **kw)
     dataclasses.replace(base, stash="fp8").validate(
@@ -379,24 +398,39 @@ def test_plan_stash_report_and_budget():
 
 
 def test_auto_plan_stash_escalation():
+    import dataclasses
+
     from repro.core.partitioner import ParallelPlan, auto_plan
 
     cfg = _tiny_cfg()
     kw = dict(global_batch=8, seq_len=64, itemsize=4)
-    raw = ParallelPlan(pp=2, microbatches=4).stash_report(cfg, **kw)
-    fp8 = ParallelPlan(pp=2, microbatches=4, stash="fp8").stash_report(cfg, **kw)
-    budget = (raw["act_bytes"] + fp8["act_bytes"]) // 2
+    base = ParallelPlan(pp=2, microbatches=4)
+    raw = base.stash_report(cfg, **kw)
+    fp8c = dataclasses.replace(base, stash="fp8", stash_cot=True).stash_report(
+        cfg, **kw
+    )
+    fp8c_full = dataclasses.replace(
+        base, stash="fp8", stash_cot=True, remat="full"
+    ).stash_report(cfg, **kw)
+    # rung 2 (compress slots + cotangents, no remat) fits here
+    budget = (raw["total_bytes"] + fp8c["total_bytes"]) // 2
     plan = auto_plan(cfg, 2, microbatches=4, tp=1, max_dp=1,
                      stash="raw", act_budget=budget, **kw)
-    assert plan.stash == "fp8"                   # escalated raw -> fp8
+    assert plan.stash == "fp8" and plan.stash_cot    # escalated raw -> fp8
+    assert plan.remat == "none"                      # ...without paying remat
     assert "stash=fp8" in plan.describe()
-    with pytest.raises(ValueError, match="no stash backend fits"):
+    # only the last rung (compression + full remat) fits this one
+    budget = (fp8c["total_bytes"] + fp8c_full["total_bytes"]) // 2
+    plan = auto_plan(cfg, 2, microbatches=4, tp=1, max_dp=1,
+                     stash="raw", act_budget=budget, **kw)
+    assert plan.stash == "fp8" and plan.remat == "full"
+    with pytest.raises(ValueError, match="no stash/remat rung fits"):
         auto_plan(cfg, 2, microbatches=4, tp=1, max_dp=1,
                   stash="raw", act_budget=1000, **kw)
     # an ample budget keeps the requested backend
     plan = auto_plan(cfg, 2, microbatches=4, tp=1, max_dp=1,
-                     stash="raw", act_budget=raw["act_bytes"], **kw)
-    assert plan.stash == "raw"
+                     stash="raw", act_budget=raw["total_bytes"], **kw)
+    assert plan.stash == "raw" and plan.remat == "none"
 
 
 def test_stash_state_specs():
@@ -449,3 +483,19 @@ def test_roofline_stash_bytes():
     assert predicted_pipeline_stash_bytes(100, 4, 1, "raw", 4) == 5 * 400
     assert predicted_pipeline_stash_bytes(100, 4, 1, "host", 4,
                                           host_window=2) == 3 * 400
+    # cot_stash prices cotangent slots at the codec width
+    assert predicted_pipeline_stash_bytes(
+        100, 4, 1, "fp8", 4, cot_stash="fp8"
+    ) == 5 * (256 + 4)
+    from repro.roofline.analysis import (
+        predicted_stage_transient_bytes,
+        predicted_stash_host_bytes,
+    )
+
+    # host spill: slots beyond the window, native width; 0 off-host
+    assert predicted_stash_host_bytes(100, 4, "host", 4, host_window=2) == 2 * 400
+    assert predicted_stash_host_bytes(100, 4, "host", 4, host_window=8) == 0
+    assert predicted_stash_host_bytes(100, 4, "fp8", 4) == 0
+    # within-stage transient: k live layers, collapsed to 1 by full remat
+    assert predicted_stage_transient_bytes(100, 3, "none", 4) == 3 * 400
+    assert predicted_stage_transient_bytes(100, 3, "full", 4) == 400

@@ -48,12 +48,14 @@ PRELUDE = textwrap.dedent(
             lambda v, st: jax.device_put(jnp.asarray(v), st.sharding),
             tree, structs)
 
-    def pipe_losses(stash, dims, BATCHES, tc=None, state_np=None):
+    def pipe_losses(stash, dims, BATCHES, tc=None, state_np=None,
+                    stash_cot=False):
         dp, tp, pp = dims
         tc = tc or TrainConfig(precision="f32", log_every=1, stash=stash)
         opt = get_opt(tc.optimizer, tc.lr)
         plan = ParallelPlan(dp=dp, tp=tp, pp=pp, microbatches=M,
-                            schedule="1f1b", stash=stash).validate(TINY)
+                            schedule="1f1b", stash=stash,
+                            stash_cot=stash_cot).validate(TINY)
         mesh = make_train_mesh(dp, tp, pp)
         jitted, (s_struct, b_struct) = build_train_pipeline(
             TINY.name, mesh, plan, tc, shape)
@@ -113,6 +115,46 @@ def test_quant_stash_grad_accuracy():
         print("GRAD_ACC_OK")
         """,
         "GRAD_ACC_OK",
+    )
+
+
+def test_quant_cotangent_grad_accuracy():
+    """Same one-SGD-step param-delta technique, isolating the COTANGENT
+    codec: raw-cotangent quantized-slot runs vs stash_cot=True runs at the
+    same activation stash. Compressing cotangents adds its own bounded
+    gradient perturbation on top of the slot codec's (the bwd stream is
+    quantized once per stage hop), and it must be a real perturbation, not
+    a no-op."""
+    run(
+        """
+        tc = TrainConfig(precision="f32", optimizer="sgd", lr=1e-3,
+                         grad_clip=1e9, log_every=1)
+        opt = get_opt(tc.optimizer, tc.lr)
+        state0 = jax.tree.map(np.asarray, make_state(TINY, opt, tc))
+        p0 = state0["params"]
+        BATCH = batches(1)
+
+        def delta(stash, stash_cot):
+            _, state = pipe_losses(stash, (1, 1, 2), BATCH, tc=tc,
+                                   state_np=state0, stash_cot=stash_cot)
+            return jax.tree.map(lambda a, b: a - b, state["params"], p0)
+
+        flat = lambda t: np.concatenate(
+            [np.asarray(l).ravel() for l in jax.tree.leaves(t)])
+        ref = flat(delta("raw", False))
+        assert np.linalg.norm(ref) > 0
+        bounds = {"int8": 0.08, "fp8": 0.30}
+        for stash in ("int8", "fp8"):
+            act_only = flat(delta(stash, False))
+            both = flat(delta(stash, True))
+            err = np.linalg.norm(both - ref) / np.linalg.norm(ref)
+            print(f"{stash}+cot rel grad err {err:.4f}")
+            assert err < bounds[stash], (stash, err)
+            # cot compression is a real extra perturbation over act-only
+            assert np.linalg.norm(both - act_only) > 0
+        print("COT_GRAD_ACC_OK")
+        """,
+        "COT_GRAD_ACC_OK",
     )
 
 
